@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks (CPU wall-time is indicative only; correctness +
+throughput trends; the TPU numbers come from the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import mha_reference
+from repro.kernels.flash_attention.xla_ref import flash_attention_xla
+from repro.kernels.majority_step.ops import majority_step
+from repro.kernels.rglru.ref import linear_scan_reference
+from repro.kernels.threshold_gate.ops import threshold_gate
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(csv):
+    rng = np.random.default_rng(0)
+    # flash attention: xla-flash vs naive reference (memory win shows as time)
+    for s in (512, 1024):
+        q = jnp.asarray(rng.standard_normal((1, 4, s, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 4, s, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 4, s, 64)), jnp.float32)
+        f1 = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v, True, None))
+        f2 = jax.jit(lambda q, k, v: mha_reference(q, k, v, causal=True))
+        t1 = _time(f1, q, k, v)
+        t2 = _time(f2, q, k, v)
+        csv(f"kernel_flash,s={s},xla_flash_us={t1:.0f},naive_us={t2:.0f}")
+    # rglru scan throughput
+    for t in (1024, 4096):
+        a = jnp.asarray(rng.uniform(0.9, 0.999, (4, t, 256)), jnp.float32)
+        u = jnp.asarray(rng.standard_normal((4, t, 256)), jnp.float32)
+        f = jax.jit(lambda a, u: linear_scan_reference(a, u)[1])
+        us = _time(f, a, u)
+        csv(f"kernel_rglru,t={t},us={us:.0f},"
+            f"elems_per_s={4*t*256/(us*1e-6):.2e}")
+    # threshold gate
+    g = jnp.asarray(rng.standard_normal(1_000_000), jnp.float32)
+    r = jnp.zeros(1_000_000, jnp.float32)
+    f = jax.jit(lambda g, r: threshold_gate(g, r, 1.0, use_kernel=False))
+    us = _time(f, g, r)
+    csv(f"kernel_threshold_gate,n=1e6,us={us:.0f},"
+        f"GB_per_s={3*4*1e6/(us*1e-6)/1e9:.2f}")
+    # majority step
+    n = 200_000
+    io = jnp.asarray(rng.integers(0, 50, (n, 3)), jnp.int32)
+    it = io + 1
+    oo = jnp.asarray(rng.integers(0, 50, (n, 3)), jnp.int32)
+    ot = oo + 1
+    x = jnp.asarray(rng.integers(0, 2, (n,)), jnp.int32)
+    f = jax.jit(lambda *a: majority_step(*a, use_kernel=False))
+    us = _time(f, io, it, oo, ot, x)
+    csv(f"kernel_majority_step,n={n},us={us:.0f},"
+        f"peers_per_s={n/(us*1e-6):.2e}")

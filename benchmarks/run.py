@@ -1,0 +1,73 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+systems layer. Prints ``name,key=value,...`` CSV lines.
+
+  tree_properties    Fig 4.1a (depth/density) + 4.1b (stretch, hop dist)
+  static_convergence Fig 4.2  (messages to convergence, local vs gossip)
+  stationary         Fig 4.3  (accuracy/cost under churn; budget sweep)
+  kernel_bench       Pallas-kernel oracles microbench (CPU-indicative)
+  sync_comparison    trainer-level sync families (paper mode vs baselines)
+  roofline           summary of the dry-run roofline table (if present)
+
+Run everything:   PYTHONPATH=src python -m benchmarks.run
+One section:      PYTHONPATH=src python -m benchmarks.run --only stationary
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def csv(line: str):
+    print(line, flush=True)
+
+
+def section(name):
+    print(f"### {name}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        kernel_bench, static_convergence, stationary, sync_comparison,
+        tree_properties,
+    )
+
+    sections = [
+        ("tree_properties", tree_properties.run),
+        ("static_convergence", static_convergence.run),
+        ("stationary", stationary.run),
+        ("kernel_bench", kernel_bench.run),
+        ("sync_comparison", sync_comparison.run),
+    ]
+    for name, fn in sections:
+        if args.only and args.only != name:
+            continue
+        section(name)
+        t0 = time.time()
+        fn(csv)
+        csv(f"{name}_total,sec={time.time()-t0:.0f}")
+
+    if not args.only or args.only == "roofline":
+        section("roofline")
+        try:
+            from repro.analysis.roofline import load_records, roofline_row
+
+            recs = load_records("results/dryrun")
+            n_ok = 0
+            for r in recs:
+                row = roofline_row(r)
+                if row:
+                    n_ok += 1
+                    csv(f"roofline,{row['arch']},{row['shape']},{row['mesh']},"
+                        f"dominant={row['dominant']},"
+                        f"mfu={row['roofline_mfu']*100:.1f}%")
+            csv(f"roofline_total,cells={n_ok}")
+        except Exception as e:  # dry-run results not generated yet
+            csv(f"roofline_skipped,reason={type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Paper Fig 4.1: tree depth/density and stretch (Chord vs Symmetric Chord)."""
+from __future__ import annotations
+
+import time
+from collections import Counter, defaultdict, deque
+
+import numpy as np
+
+from repro.core import addressing as A
+from repro.core.dht import Ring, finger_tables, lookup_hops
+from repro.core import routing as R
+
+
+def depth_density(n: int, seed: int = 0, d: int = 64):
+    ring = Ring.random(n, d, seed=seed)
+    up_n, _, _ = A.tree_neighbors_reference(ring.addrs, d)
+    depth = np.zeros(ring.n, np.int64)
+    ch = defaultdict(list)
+    for i, u in enumerate(up_n):
+        if u >= 0:
+            ch[int(u)].append(i)
+    q = deque([int(np.argmin(ring.addrs))])
+    while q:
+        x = q.popleft()
+        for c in ch[x]:
+            depth[c] = depth[x] + 1
+            q.append(c)
+    cnt = Counter(depth.tolist())
+    # level l is "full" when it holds 2^(l-1) peers (root has one child)
+    full_levels = 0
+    for l in range(1, 64):
+        if cnt.get(l, 0) == 2 ** (l - 1):
+            full_levels = l
+        else:
+            break
+    return {
+        "n": n,
+        "max_depth": int(depth.max()),
+        "log2n": float(np.log2(n)),
+        "full_levels": full_levels,
+        "depth_hist": {int(k): int(v) for k, v in sorted(cnt.items())},
+    }
+
+
+def tree_stretch(n: int, seed: int = 0, d: int = 48, sample: int = 2000):
+    """Tree-protocol hops (DHT routings per tree message)."""
+    ring = Ring.random(n, d, seed=seed)
+    pos = ring.positions()
+    rng = np.random.default_rng(seed)
+    peers = rng.choice(n, size=min(sample, n), replace=False)
+    hops = []
+    for i in peers:
+        for dr in (A.UP, A.CW, A.CCW):
+            got, trace = R.route(ring, int(i), dr, pos=pos)
+            if got is not None:
+                hops.append(len(trace))
+    hops = np.asarray(hops)
+    return {
+        "n": n,
+        "mean_tree_hops": float(hops.mean()),
+        "p_le_1": float((hops <= 1).mean()),
+        "p_le_2": float((hops <= 2).mean()),
+        "max": int(hops.max()),
+    }
+
+
+def chord_hop_distance(n: int, seed: int = 0, d: int = 32, sample: int = 1500):
+    """Fig 4.1b: IP hop distance to tree neighbors, Chord vs S-Chord."""
+    ring = Ring.random(n, d, seed=seed)
+    pos = ring.positions()
+    up_n, cw_n, ccw_n = A.tree_neighbors_reference(ring.addrs, d)
+    rng = np.random.default_rng(seed)
+    peers = rng.choice(n, size=min(sample, n), replace=False)
+    srcs, tgts = [], []
+    for i in peers:
+        for nb in (up_n[i], cw_n[i], ccw_n[i]):
+            if nb >= 0:
+                srcs.append(int(i))
+                tgts.append(int(pos[nb]))
+    srcs = np.asarray(srcs)
+    tgts = np.asarray(tgts, ring.addrs.dtype)
+    out = {}
+    for sym in (True, False):
+        f = finger_tables(ring, symmetric=sym)
+        h = lookup_hops(ring, f, srcs, tgts, symmetric=sym)
+        out["symmetric" if sym else "chord"] = {
+            "mean": float(h.mean()),
+            "p_le_2": float((h <= 2).mean()),
+            "p_le_7": float((h <= 7).mean()),
+        }
+    return {"n": n, **out}
+
+
+def run(csv):
+    for n in (10_000, 100_000, 1_000_000):
+        t0 = time.time()
+        r = depth_density(n)
+        csv(f"tree_depth,n={n},max_depth={r['max_depth']},"
+            f"log2n={r['log2n']:.1f},full_levels={r['full_levels']},"
+            f"sec={time.time()-t0:.1f}")
+        assert r["max_depth"] <= r["log2n"] + 6.5, "paper depth bound violated"
+    for n in (10_000, 100_000):
+        r = tree_stretch(n)
+        csv(f"tree_stretch,n={n},mean={r['mean_tree_hops']:.2f},"
+            f"p<=2={r['p_le_2']:.3f}")
+    for n in (10_000,):
+        r = chord_hop_distance(n)
+        csv(f"hop_distance,n={n},schord_mean={r['symmetric']['mean']:.2f},"
+            f"schord_p<=2={r['symmetric']['p_le_2']:.3f},"
+            f"chord_mean={r['chord']['mean']:.2f},"
+            f"chord_p<=7={r['chord']['p_le_7']:.3f}")

@@ -1,0 +1,44 @@
+"""Quickstart: train a small LM for a few steps on CPU, then serve it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.model import decode_step, forward, init_params
+from repro.optim.adamw import AdamWConfig, init_state
+
+
+def main():
+    cfg = get_smoke_config("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_state(params)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, seq_len=64, global_batch=8))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), "cosine", 40))
+
+    print("== training ==")
+    for i in range(40):
+        tokens, targets = data.next_batch()
+        params, opt_state, m = step(params, opt_state,
+                                    jnp.asarray(tokens), jnp.asarray(targets))
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {float(m['loss']):.4f}")
+
+    print("== greedy decoding ==")
+    prompt = jnp.asarray(np.arange(8)[None, :], jnp.int32)
+    logits, cache = forward(params, cfg, prompt, mode="prefill", cache_len=32)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [int(tok[0, 0])]
+    for _ in range(10):
+        logits, cache = decode_step(params, cfg, tok, cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("generated tokens:", out)
+
+
+if __name__ == "__main__":
+    main()

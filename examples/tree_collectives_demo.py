@@ -1,0 +1,54 @@
+"""The paper's binary tree as a mesh collective: convergecast/broadcast
+via ppermute on 8 (virtual) devices, checked against psum, with the
+compiled collective schedule printed.
+
+    PYTHONPATH=src python examples/tree_collectives_demo.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import warnings
+
+warnings.simplefilter("ignore")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.tree_collectives import (
+    _parent, shard_map, tree_all_reduce, tree_broadcast, tree_reduce,
+)
+
+
+def main():
+    n = 8
+    mesh = jax.make_mesh((n,), ("pod",))
+    print("== the tree the addressing induces on", n, "pods ==")
+    for i in range(n):
+        print(f"  pod {i}: parent -> {_parent(i, n)}")
+
+    x = jnp.arange(float(n * 4)).reshape(n, 4)
+    ar = shard_map(lambda v: tree_all_reduce(v, "pod", n), mesh=mesh,
+                   in_specs=P("pod"), out_specs=P("pod"), check_vma=False)
+    out = np.asarray(jax.jit(ar)(x))
+    want = np.asarray(x).reshape(n, 1, 4).sum(0)
+    print("\ntree all-reduce == sum:", np.allclose(out, np.tile(want, (n, 1))))
+
+    txt = jax.jit(ar).lower(x).compile().as_text()
+    print("collective-permutes in the schedule:",
+          txt.count("collective-permute("),
+          f"(2 x 2 x log2({n}) edges, sibling pairs split)")
+
+    ps = shard_map(lambda v: jnp.broadcast_to(jax.lax.psum(v, "pod"), v.shape),
+                   mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
+                   check_vma=False)
+    print("matches psum:", np.allclose(out, np.asarray(jax.jit(ps)(x))))
+    print("\nuse: control-plane votes/alerts (threshold sync) ride this tree"
+          "\n     in O(log P) hops; bulk gradients keep XLA's ring all-reduce"
+          "\n     (DESIGN.md section 6).")
+
+
+if __name__ == "__main__":
+    main()

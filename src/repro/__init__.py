@@ -1,0 +1,13 @@
+"""repro — "Local Thresholding on Distributed Hash Tables" as a JAX/TPU
+training + inference framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"
+
+# The paper's core, re-exported as the public API surface.
+from repro.core import addressing  # noqa: F401
+from repro.core.dht import Ring  # noqa: F401
+from repro.core.majority import MajoritySimulator, MajorityState  # noqa: F401
+from repro.core.limosense import LiMoSenseSimulator  # noqa: F401
+from repro.core.tree_collectives import (  # noqa: F401
+    tree_all_reduce, tree_broadcast, tree_reduce,
+)

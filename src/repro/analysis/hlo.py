@@ -1,0 +1,296 @@
+"""HLO text parsing: per-kind collective bytes for the roofline.
+
+`cost_analysis()` does not report collective traffic, so we parse the
+compiled (SPMD-partitioned) HLO and sum output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+occurrence. Shapes in partitioned HLO are already per-device, so the sums
+are bytes-per-device per step execution.
+
+Ops inside `while` bodies (lax.scan over layers / kv blocks) are scaled by
+the loop trip count, read from XLA's `known_trip_count":{"n":N}` backend
+config and propagated through nested loops.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'body=%?([\w\.\-]+).*?known_trip_count\\?":?\{\\?"?n\\?"?[:=]\\?"?(\d+)')
+_WHILE_BODY_RE = re.compile(r"=.*?\bwhile\(.*?body=%?([\w\.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _computations(hlo_text: str):
+    """Yield (name, [op lines]) per computation (header at column 0)."""
+    cur, buf = None, []
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            if cur is not None:
+                yield cur, buf
+            head = line.strip()
+            if head.startswith("ENTRY"):
+                head = head[len("ENTRY"):].strip()
+            cur = head.split()[0].split("(")[0].lstrip("%")
+            buf = []
+        elif cur is not None:
+            buf.append(line)
+    if cur is not None:
+        yield cur, buf
+
+
+_CALLEE_SINGLE_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|true_computation|false_computation)"
+    r"=%?([\w\.\-]+)"
+)
+_CALLEE_LIST_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _callees(line: str):
+    for m in _CALLEE_SINGLE_RE.finditer(line):
+        yield m.group(1)
+    for m in _CALLEE_LIST_RE.finditer(line):
+        for c in m.group(1).split(","):
+            c = c.strip().lstrip("%")
+            if c:
+                yield c
+
+
+def loop_scales(hlo_text: str, with_nesting: bool = False):
+    """computation name -> effective execution count (nested loops folded).
+
+    Scale propagates through while bodies AND plain call/fusion edges so
+    remat regions and fused interiors inherit their caller's trip count.
+    With `with_nesting`, also returns the set of computations reached
+    through >= 2 stacked loop factors — the "inner scan" scopes whose
+    intermediates a Pallas kernel would keep in VMEM (flash kv-blocks,
+    chunked mLSTM, blocked RG-LRU, sLSTM time steps).
+    """
+    trips: Dict[str, int] = {}
+    for m in _TRIP_RE.finditer(hlo_text):
+        trips[m.group(1)] = int(m.group(2))
+    parents: Dict[str, str] = {}
+    for comp, lines in _computations(hlo_text):
+        for line in lines:
+            for callee in _callees(line):
+                if callee not in parents:
+                    parents[callee] = comp
+    scales: Dict[str, int] = {}
+    depth_factors: Dict[str, int] = {}
+
+    def walk(name: str, depth=0):
+        if depth > 24:
+            return 1, 0
+        if name in scales:
+            return scales[name], depth_factors[name]
+        s = trips.get(name, 1)
+        nfac = 1 if name in trips and trips[name] > 1 else 0
+        par = parents.get(name)
+        if par is not None:
+            ps, pf = walk(par, depth + 1)
+            s *= ps
+            nfac += pf
+        scales[name] = s
+        depth_factors[name] = nfac
+        return s, nfac
+
+    for name in set(list(trips) + list(parents)):
+        walk(name)
+    if with_nesting:
+        inner = {n for n, f in depth_factors.items() if f >= 2}
+        return scales, inner
+    return scales
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """{collective kind: per-device bytes per step}, loop-scaled."""
+    scales = loop_scales(hlo_text)
+    out: Dict[str, float] = defaultdict(float)
+    for comp, lines in _computations(hlo_text):
+        scale = scales.get(comp, 1)
+        for line in lines:
+            s = line.strip()
+            for kind in COLLECTIVES:
+                if re.search(rf"\b{kind}(-start)?\(", s):
+                    head = s.split("=", 1)
+                    if len(head) != 2:
+                        continue
+                    shape_part = head[1].split(kind)[0]
+                    out[kind] += _shape_bytes(shape_part) * scale
+                    break
+                if f"{kind}-done" in s:
+                    break
+    return dict(out)
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(?:\()?(\w+)\[([\d,]*)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FUSION_CALL_RE = re.compile(r"\bfusion\(.*?calls=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_SKIP_BYTES_OPS = (
+    "parameter(", "constant(", "get-tuple-element(", "tuple(", "bitcast(",
+    "while(", "conditional(", "call(", "after-all(", "iota(",
+    "copy-start(", "copy-done(",
+)
+# ops that stay HBM-visible even under aggressive TPU fusion: matmuls,
+# fusions (their boundary), data movement, collectives
+_FUSED_MODEL_OPS = (
+    " dot(", " fusion(", " scatter(", " gather(", " dynamic-slice(",
+    " dynamic-update-slice(", " all-reduce(", " all-gather(",
+    " reduce-scatter(", " all-to-all(", " collective-permute(",
+    " convolution(", " custom-call(", " reduce(", " reduce-window(",
+    " sort(", " transpose(", " reshape(", " pad(", " concatenate(",
+)
+
+
+def _symbols(lines):
+    """name -> (dtype, [dims]) for every op defined in a computation."""
+    sym = {}
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            dims = [int(d) for d in m.group(3).split(",") if d]
+            sym[m.group(1)] = (m.group(2), dims)
+    return sym
+
+
+# op_name metadata markers for scopes whose intermediates live in VMEM on
+# the real TPU (Pallas kernels replace these scans); the roofline applies a
+# kernel credit to their HBM-byte estimate.
+KERNEL_SCOPES = ("flash", "mlstm", "linear_scan", "rglru")
+
+
+def flops_and_bytes(hlo_text: str) -> Dict[str, float]:
+    """Loop-scaled per-device FLOPs and HBM-byte model from the HLO.
+
+    XLA's cost_analysis() counts `while` bodies ONCE regardless of trip
+    count (verified empirically), which under-reports any scan-over-layers
+    model by ~num_layers. This walks every computation with the loop scale:
+
+      * flops: 2 * prod(dot output dims) * prod(lhs contracting dims) for
+        every dot (MXU work; elementwise VPU flops are ignored — they are
+        never the binding roofline term for these models); operand shapes
+        come from a per-computation symbol table (the dump does not inline
+        them);
+      * bytes: (output + operands) shape bytes per op, skipping free ops
+        and the *interiors* of fusion computations (a fusion's internal
+        traffic stays on-chip; its op line carries the HBM-visible
+        operands/outputs) — i.e. the TPU memory model.
+    """
+    scales, inner_scopes = loop_scales(hlo_text, with_nesting=True)
+    fusion_bodies = set(_FUSION_CALL_RE.findall(hlo_text))
+    flops = 0.0
+    bytes_ = 0.0
+    bytes_fused = 0.0
+    kernel_flops = 0.0
+    kernel_bytes = 0.0
+    kernel_bytes_fused = 0.0
+    for comp, lines in _computations(hlo_text):
+        scale = scales.get(comp, 1)
+        in_fusion = comp in fusion_bodies
+        # inner-scan scope: >= 2 stacked loop factors (layers x blocks) or
+        # an explicit marker in the op metadata
+        comp_is_inner = comp in inner_scopes
+        sym = _symbols(lines)
+        for line in lines:
+            s = line.strip()
+            if "= " not in s:
+                continue
+            in_kernel_scope = comp_is_inner or any(m in s for m in KERNEL_SCOPES)
+            # ---- flops: dots count everywhere (incl. fusion interiors)
+            if " dot(" in s:
+                m = _DEF_RE.match(s)
+                out_elems = 1
+                if m:
+                    for d in m.group(3).split(","):
+                        if d:
+                            out_elems *= int(d)
+                args = s.split(" dot(", 1)[1].split(")", 1)[0]
+                ops = _OPERAND_RE.findall(args)
+                contract = 1
+                cm = _CONTRACT_RE.search(s)
+                if cm and ops and ops[0] in sym and cm.group(1):
+                    lhs_dims = sym[ops[0]][1]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            contract *= lhs_dims[int(ci)]
+                f = 2.0 * out_elems * contract * scale
+                flops += f
+                if in_kernel_scope:
+                    kernel_flops += f
+            # ---- bytes: HBM-visible traffic only
+            if in_fusion:
+                continue
+            if any(op in s for op in _SKIP_BYTES_OPS):
+                continue
+            m = _DEF_RE.match(s)
+            total = 0
+            if m:
+                n = 1
+                for d in m.group(3).split(","):
+                    if d:
+                        n *= int(d)
+                total += n * _DTYPE_BYTES.get(m.group(2), 0)
+                opname = m.group(1)
+            else:
+                opname = None
+            # operands (first parenthesized arg list)
+            if "(" in s:
+                args = s.split("(", 1)[1].split(")", 1)[0]
+                for ref in _OPERAND_RE.findall(args):
+                    if ref == opname:
+                        continue
+                    if ref in sym:
+                        dt, dims = sym[ref]
+                        n = 1
+                        for d in dims:
+                            n *= d
+                        total += n * _DTYPE_BYTES.get(dt, 0)
+            bytes_ += total * scale
+            hbm_visible = any(op in s for op in _FUSED_MODEL_OPS)
+            if hbm_visible:
+                bytes_fused += total * scale
+            if in_kernel_scope:
+                kernel_bytes += total * scale
+                if hbm_visible:
+                    kernel_bytes_fused += total * scale
+    return {"flops": flops, "bytes": bytes_, "bytes_fused": bytes_fused,
+            "kernel_scope_flops": kernel_flops,
+            "kernel_scope_bytes": kernel_bytes,
+            "kernel_scope_bytes_fused": kernel_bytes_fused}
+
+
+def op_flops_by_loop(hlo_text: str) -> Dict[str, int]:
+    """Diagnostic: dot-op count per computation, loop-scaled (hillclimb aid
+    for spotting remat-duplicated matmuls)."""
+    scales = loop_scales(hlo_text)
+    out: Dict[str, int] = defaultdict(int)
+    for comp, lines in _computations(hlo_text):
+        scale = scales.get(comp, 1)
+        for line in lines:
+            if re.search(r"\bdot\(", line):
+                out[comp] += scale
+    return dict(out)

@@ -1,0 +1,169 @@
+"""Config schema: architectures, input shapes, run settings.
+
+A `ModelConfig` fully determines parameters and computation. Layer stacking
+is expressed as a repeating *pattern* of `BlockDef`s (mixer + FFN kind);
+`segments()` turns (num_layers, pattern, first_dense_layers) into scanned
+segments of homogeneous periods — the unit `lax.scan` runs over, keeping
+HLO size O(pattern), not O(layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int
+    n_shared: int = 0  # shared-expert multiplier (DeepSeek: 1)
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # 'softmax' | 'sigmoid' (DeepSeek aux-free)
+    impl: str = "gather"  # 'gather' (GSPMD-chosen collectives) | 'ep_a2a'
+    # (explicit expert-parallel all-to-all dispatch — §Perf H3)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One layer's recipe.
+
+    mixer: 'attn' (causal GQA), 'swa' (sliding-window GQA), 'bidir'
+           (bidirectional GQA — encoders), 'xattn' (cross-attention to
+           memory), 'dec' (causal self + cross to memory), 'mla'
+           (DeepSeek latent attention), 'rglru', 'mlstm', 'slstm'
+    ffn:   'dense', 'moe', 'dense_moe' (parallel residual MLP + MoE —
+           Arctic), 'none' (mixer includes its own FFN — xLSTM blocks)
+    """
+
+    mixer: str
+    ffn: str = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[BlockDef, ...] = (BlockDef("attn", "dense"),)
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    norm: str = "rmsnorm"
+    activation: str = "silu"
+    gated_mlp: bool = True
+    rope_theta: float = 10_000.0  # 0 -> no rope (sinusoidal abs-pos instead)
+    window: Optional[int] = None  # for 'swa'
+    attn_bias: bool = False
+    qk_norm: bool = False
+    attn_scale: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    emb_scale: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    tie_embeddings: bool = True
+    rec_width: int = 0  # RG-LRU width (0 -> d_model)
+    rglru_c: float = 8.0
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    first_dense_layers: int = 0  # DeepSeek leading dense layers
+    # encoder-decoder (Whisper): `num_layers` is the decoder depth
+    enc_layers: int = 0
+    enc_pattern: Tuple[BlockDef, ...] = (BlockDef("bidir", "dense"),)
+    # modality frontend STUB: input_specs() feeds precomputed embeddings
+    frontend: Optional[str] = None  # 'audio' | 'vision'
+    n_frontend_tokens: int = 0
+    frontend_dim: int = 0
+    seq_shard: bool = False  # sequence parallelism between blocks (Perf H6)
+    mtp: bool = False  # DeepSeek-V3 multi-token-prediction head (depth 1)
+    mtp_weight: float = 0.3
+    # systems knobs
+    use_pallas: bool = False  # kernels need a real TPU; XLA path for dry-run
+    remat: str = "none"  # 'none' | 'block'
+    dtype: str = "bfloat16"
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    def segments(self) -> Tuple[Tuple[Tuple[BlockDef, ...], int], ...]:
+        """((pattern, n_periods), ...) covering all `num_layers` layers."""
+        segs = []
+        layers_left = self.num_layers
+        if self.first_dense_layers:
+            lead = tuple(
+                dataclasses.replace(b, ffn="dense") if b.ffn != "none" else b
+                for b in self.pattern
+            )
+            assert len(lead) == 1, "first_dense_layers expects a 1-block pattern"
+            segs.append((lead, self.first_dense_layers))
+            layers_left -= self.first_dense_layers
+        p = len(self.pattern)
+        full, rem = divmod(layers_left, p)
+        if full:
+            segs.append((self.pattern, full))
+        if rem:
+            segs.append((self.pattern[:rem], 1))
+        return tuple(segs)
+
+    def enc_segments(self):
+        if not self.enc_layers:
+            return ()
+        p = len(self.enc_pattern)
+        full, rem = divmod(self.enc_layers, p)
+        segs = []
+        if full:
+            segs.append((self.enc_pattern, full))
+        if rem:
+            segs.append((self.enc_pattern[:rem], 1))
+        return tuple(segs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell: (kind, seq_len, global_batch)."""
+
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeConfig("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeConfig("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeConfig("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeConfig("long_500k", "decode", 524288, 1)
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def sub_quadratic(cfg: ModelConfig) -> bool:
+    """True if every mixer has bounded decode state (runs long_500k)."""
+    bounded = {"swa", "rglru", "mlstm", "slstm"}
+    return all(b.mixer in bounded for b in cfg.pattern) and not cfg.enc_layers
+
+
+def shapes_for(cfg: ModelConfig):
+    out = []
+    for s in ALL_SHAPES:
+        if s.name == "long_500k" and not sub_quadratic(cfg):
+            continue
+        out.append(s)
+    return tuple(out)

@@ -1,0 +1,72 @@
+"""Architecture registry: --arch <id> -> (full config, reduced smoke config,
+input spec builders). One module per architecture under repro.configs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig, shapes_for
+
+ARCH_IDS = (
+    "recurrentgemma-9b",
+    "smollm-135m",
+    "command-r-35b",
+    "minicpm-2b",
+    "gemma-7b",
+    "deepseek-v3-671b",
+    "arctic-480b",
+    "xlstm-350m",
+    "whisper-large-v3",
+    "llama-3.2-vision-11b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).SMOKE
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {tokens, targets [, frontend_embeds]}
+    prefill: {tokens [, frontend_embeds]}
+    decode:  {token, cache [, frontend-caches are inside the cache]}
+    """
+    from repro.models.model import make_cache
+
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    emb = cfg.jdtype
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    fe = None
+    if cfg.frontend:
+        fe = jax.ShapeDtypeStruct((b, cfg.n_frontend_tokens, cfg.frontend_dim), emb)
+    if shape.kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        out["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+    elif shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+    else:  # decode: one new token against a seq_len-deep cache
+        out["token"] = jax.ShapeDtypeStruct((b, 1), i32)
+        out["cache"] = jax.eval_shape(lambda: make_cache(cfg, b, s))
+    return out
+
+
+def smoke_shape(cfg: ModelConfig, kind: str = "train") -> ShapeConfig:
+    return ShapeConfig(f"smoke_{kind}", kind, 64, 2)

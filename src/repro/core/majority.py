@@ -1,0 +1,224 @@
+"""Alg. 3 — DHT Local Majority Voting (paper §3.1), vectorized simulator.
+
+Per-peer state (directions v in {UP, CW, CCW}):
+  X_in[i, v]  = (ones, total)  latest message *received* from direction v
+  X_out[i, v] = (ones, total)  latest message *sent* to direction v
+  X_self[i]   = (x_i, 1)       the peer's own vote
+  seq[i], last[i, v]           sequence numbers (out-of-order drop)
+
+Knowledge   K_i     = X_self + sum_v X_in[v]
+Agreement   A_{i,v} = X_in[v] + X_out[v]
+Threshold   thr(X)  = X.ones - X.total / 2        (the paper's (1,-1/2)^t X;
+                      we use 2*ones - total to stay in integers)
+
+Violation in direction v (paper §3.1):
+      thr(A) >= 0  and  thr(K - A) <  0
+   or thr(A) <  0  and  thr(K - A) >  0
+On violation: X_out[v] <- K - X_in[v]; send (X_out[v], ++seq) towards v —
+after which A_{i,v} = K_i and the violation is resolved locally.
+
+Output: 1 iff thr(K) >= 0.
+
+The event sources are exactly the paper's: initialization, a change of the
+peer's own vote, an incoming message, or an Alg. 2 ALERT (which zeroes
+X_in[v] and forces a send).
+
+The implementation is a cycle-driven simulation over a vectorized peer
+state; messages travel through the Alg. 1 batch router with 1..10 cycle
+delays per network hop (paper §4). Message counts are reported per network
+delivery, the same unit LiMoSense is charged in.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import addressing as A
+from .addressing import UP, CW, CCW
+from .dht import Ring
+from . import routing as R
+from .simulator import MessageTable, random_delays
+
+NDIR = 3
+
+
+def thr2(ones: np.ndarray, total: np.ndarray) -> np.ndarray:
+    """2 * thr(X): integer-exact sign of ones - total/2."""
+    return 2 * ones - total
+
+
+@dataclass
+class MajorityState:
+    """Vectorized Alg. 3 state for all n peers."""
+
+    n: int
+    x: np.ndarray  # (n,) votes in {0,1}
+    X_in: np.ndarray = field(default=None)  # (n, 3, 2) [ones, total]
+    X_out: np.ndarray = field(default=None)  # (n, 3, 2)
+    seq: np.ndarray = field(default=None)  # (n,)
+    last: np.ndarray = field(default=None)  # (n, 3)
+
+    def __post_init__(self):
+        if self.X_in is None:
+            self.X_in = np.zeros((self.n, NDIR, 2), np.int64)
+        if self.X_out is None:
+            self.X_out = np.zeros((self.n, NDIR, 2), np.int64)
+        if self.seq is None:
+            self.seq = np.zeros(self.n, np.int64)
+        if self.last is None:
+            self.last = np.zeros((self.n, NDIR), np.int64)
+
+    def knowledge(self, idx: Optional[np.ndarray] = None) -> np.ndarray:
+        """(n|len(idx), 2) K_i = X_self + sum_v X_in."""
+        xin = self.X_in if idx is None else self.X_in[idx]
+        x = self.x if idx is None else self.x[idx]
+        k = xin.sum(axis=1)
+        k[:, 0] += x
+        k[:, 1] += 1
+        return k
+
+    def outputs(self) -> np.ndarray:
+        k = self.knowledge()
+        return (thr2(k[:, 0], k[:, 1]) >= 0).astype(np.int64)
+
+    def violations(self, idx: Optional[np.ndarray] = None) -> np.ndarray:
+        """(n|len(idx), 3) bool — the paper's test() per peer and direction."""
+        k = self.knowledge(idx)[:, None, :]  # (.,1,2)
+        xin = self.X_in if idx is None else self.X_in[idx]
+        xout = self.X_out if idx is None else self.X_out[idx]
+        a = xin + xout  # (.,3,2)
+        ka = k - a
+        ta = thr2(a[..., 0], a[..., 1])
+        tka = thr2(ka[..., 0], ka[..., 1])
+        return ((ta >= 0) & (tka < 0)) | ((ta < 0) & (tka > 0))
+
+
+class MajoritySimulator:
+    """Cycle-driven co-simulation of Alg. 1 + Alg. 3 on a static ring."""
+
+    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0):
+        assert votes.shape == (ring.n,)
+        self.ring = ring
+        self.pos = ring.positions()
+        self.state = MajorityState(ring.n, votes.astype(np.int64).copy())
+        self.rng = np.random.default_rng(seed)
+        self.msgs = MessageTable(addr_dtype=ring.addrs.dtype)
+        # peer index -> position lookups for accepted-message direction
+        self.t = 0
+        self.messages_sent = 0  # network deliveries consumed (paper's unit)
+        self._trigger_all_initial()
+
+    # -- sending ------------------------------------------------------------
+    def _send(self, peers: np.ndarray, dirs: np.ndarray):
+        """Alg. 3 Send(v) for (peer, dir) pairs: update X_out, seq, enqueue."""
+        if peers.size == 0:
+            return
+        st = self.state
+        k = st.knowledge(peers)
+        pay = k - st.X_in[peers, dirs]  # X_{i,v} = K_i - X_{v,i}
+        st.X_out[peers, dirs] = pay
+        st.seq[peers] += 1
+        seqs = st.seq[peers]
+        valid, origin, dest, edge, has_edge = R.send_batch(
+            self.ring, peers, dirs, pos=self.pos
+        )
+        v = np.nonzero(valid)[0]
+        # invalid (structurally absent) directions are silently wasted, as in
+        # the paper; X_out is still updated, which is harmless since X_in
+        # stays (0,0) for those directions.
+        self.msgs.enqueue(
+            origin[v], dest[v], edge[v], has_edge[v],
+            pay[v, 0], pay[v, 1], seqs[v],
+            random_delays(self.rng, v.size, self.t),
+        )
+
+    def _trigger_all_initial(self):
+        viol = self.state.violations()
+        peers, dirs = np.nonzero(viol)
+        self._send(peers, dirs)
+
+    # -- external events ----------------------------------------------------
+    def set_votes(self, idx: np.ndarray, new_votes: np.ndarray):
+        """Input change upcall: set X_self and re-run test() on those peers."""
+        st = self.state
+        st.x[idx] = new_votes
+        viol = st.violations(idx)
+        p, dd = np.nonzero(viol)
+        self._send(idx[p], dd)
+
+    def alert(self, peers: np.ndarray, dirs: np.ndarray):
+        """Alg. 2 ALERT upcall: zero X_in[v] and send unconditionally."""
+        self.state.X_in[peers, dirs] = 0
+        self.state.last[peers, dirs] = 0
+        self._send(peers, dirs)
+
+    # -- cycle --------------------------------------------------------------
+    def step(self):
+        """One simulation cycle: deliver due messages, route, accept, react."""
+        t = self.t
+        due = self.msgs.due(t)
+        if due.size:
+            m = self.msgs
+            status, owner, nd, ne, nhe = R.step_batch(
+                self.ring, m.origin[due], m.dest[due], m.edge[due],
+                m.has_edge[due], pos=self.pos,
+            )
+            self.messages_sent += due.size  # each delivery = one network msg
+            fwd = status == R.FORWARD
+            acc = status == R.ACCEPT
+            # forwarded messages re-enter the network with a fresh delay
+            fi = due[fwd]
+            m.dest[fi] = nd[fwd]
+            m.edge[fi] = ne[fwd]
+            m.has_edge[fi] = nhe[fwd]
+            m.deliver_t[fi] = random_delays(self.rng, fi.size, t)
+            # accepted messages update X_in with seq dedup
+            ai = due[acc]
+            if ai.size:
+                recv = owner[acc]
+                vdir = A.direction_of(m.origin[ai], self.pos[recv], self.ring.d)
+                vdir = np.asarray(vdir, np.int64)
+                seqs = m.seq[ai]
+                # resolve multiple same-(peer,dir) deliveries: ascending-seq
+                # write order makes the newest message win
+                order = np.argsort(seqs, kind="stable")
+                st = self.state
+                ok = seqs[order] > st.last[recv[order], vdir[order]]
+                oo = order[ok]
+                st.X_in[recv[oo], vdir[oo], 0] = m.pay_ones[ai][oo]
+                st.X_in[recv[oo], vdir[oo], 1] = m.pay_total[ai][oo]
+                st.last[recv[oo], vdir[oo]] = seqs[oo]
+                self.msgs.release(ai)
+                # react: test() on affected peers
+                touched = np.unique(recv)
+                viol = st.violations(touched)
+                p, dd = np.nonzero(viol)
+                self._send(touched[p], dd)
+        self.t += 1
+
+    # -- experiment helpers ---------------------------------------------------
+    def run_until_converged(
+        self, truth: int, max_cycles: int = 200_000, stable_for: int = 1
+    ) -> Dict[str, float]:
+        """Run until every peer outputs `truth` (paper: first such cycle)."""
+        start_msgs = self.messages_sent
+        stable = 0
+        for _ in range(max_cycles):
+            if (self.state.outputs() == truth).all():
+                stable += 1
+                if stable >= stable_for:
+                    return {
+                        "cycles": self.t,
+                        "messages": self.messages_sent - start_msgs,
+                        "converged": 1.0,
+                    }
+            else:
+                stable = 0
+            self.step()
+        return {
+            "cycles": self.t,
+            "messages": self.messages_sent - start_msgs,
+            "converged": 0.0,
+        }

@@ -1,0 +1,142 @@
+"""Alg. 2 — Neighbor change notification (paper §2.2).
+
+When peer p_{i-1} joins or leaves, the DHT notifies its successor p_i that
+its predecessor edge changed from a_{i-2} to a_{i-1} (or vice-versa). p_i
+then computes the two positions whose occupancy may have changed:
+
+    pos_fix = Pos(a_{i-2}, a_i)          (the merged segment's position)
+    pos_var = Pos(a_{i-1}, a_i)   if Pos(a_{i-2}, a_{i-1}) == pos_fix
+              Pos(a_{i-2}, a_{i-1}) otherwise
+
+and routes <ALERT, pos> in directions UP, CW and CCW *from* each of the two
+positions (<= 6 tree messages). A receiver p_j classifies the alert position
+against its own: fore-parent -> its UP neighbor may have changed; in its CW
+subtree -> CW; else CCW (Lemma 5: at most five peers are affected).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from . import addressing as A
+from .addressing import UP, CW, CCW
+from .dht import Ring
+from . import routing as R
+
+
+@dataclass(frozen=True)
+class Alert:
+    """One tree-routed ALERT message originating at `from_pos`."""
+
+    from_pos: int
+    direction: int
+
+
+def change_positions(a_im2: int, a_im1: int, a_i: int, d: int, dtype=np.uint64) -> Tuple[int, int]:
+    """(pos_fix, pos_var) per Alg. 2."""
+    dt = np.dtype(dtype).type
+    pos = lambda lo, hi: int(A.position_from_segment(dt(lo), dt(hi), d))
+    pos_fix = pos(a_im2, a_i)
+    if pos(a_im2, a_im1) == pos_fix:
+        pos_var = pos(a_im1, a_i)
+    else:
+        pos_var = pos(a_im2, a_im1)
+    return pos_fix, pos_var
+
+
+def alerts_for_change(a_im2: int, a_im1: int, a_i: int, d: int, dtype=np.uint64) -> List[Alert]:
+    """The <= 6 ALERT sends for one predecessor change (join or leave)."""
+    pos_fix, pos_var = change_positions(a_im2, a_im1, a_i, d, dtype)
+    out: List[Alert] = []
+    for p in (pos_fix, pos_var):
+        for direction in (UP, CW, CCW):
+            out.append(Alert(p, direction))
+    return out
+
+
+def route_alert(ring: Ring, alert: Alert, pos: Optional[np.ndarray] = None) -> Optional[int]:
+    """Deliver one ALERT on the *post-change* ring.
+
+    The alert is routed from `alert.from_pos` by the peer occupying the
+    segment that contains it (the notifying successor emulates sends for
+    positions it does not occupy itself — it knows both segments' edges).
+    Returns the accepting peer index, or None (dropped — direction absent).
+    """
+    d = ring.d
+    dt = ring.addrs.dtype
+    if pos is None:
+        pos = ring.positions()
+    p = int(alert.from_pos)
+    owner = int(ring.owner(np.asarray([p], dt))[0])
+    pnp = np.asarray(p, dt)
+    if alert.direction == UP:
+        if p == 0:
+            return None
+        dest, edge = int(A.up(pnp, d)), None
+    elif alert.direction == CW:
+        if bool(A.is_leaf(pnp)):
+            return None
+        dest, edge = int(A.cw(pnp, d)), int(ring.addrs[owner])
+    else:
+        if bool(A.is_leaf(pnp)) or p == 0:
+            return None
+        dest, edge = int(A.ccw(pnp, d)), int(ring.prev[owner])
+
+    cur_dest, cur_edge = dest, edge
+    for _ in range(10_000):
+        peer = int(ring.owner(np.asarray([cur_dest], dt))[0])
+        status, nd, ne = R.process_at_peer(ring, peer, p, cur_dest, cur_edge, pos=pos)
+        if status == R.ACCEPT:
+            return peer
+        if status == R.DROP:
+            return None
+        cur_dest, cur_edge = nd, ne
+    raise RuntimeError("alert routing did not terminate")
+
+
+def alert_direction(alert_pos: int, self_pos: int, d: int, dtype=np.uint64) -> int:
+    """ACCEPT upcall of Alg. 2: which of my neighbors may have changed."""
+    dt = np.dtype(dtype).type
+    return int(A.direction_of(dt(alert_pos), dt(self_pos), d))
+
+
+def notify_join(ring_after: Ring, new_idx: int) -> List[Tuple[int, int]]:
+    """All (peer, direction) notifications triggered by a join.
+
+    `ring_after` contains the new peer at `new_idx`; its successor is
+    new_idx+1 (cyclically). Returns the application-level notifications
+    [(peer_index, direction), ...] delivered by the alert protocol.
+    """
+    n = ring_after.n
+    succ = (new_idx + 1) % n
+    a_i = int(ring_after.addrs[succ])
+    a_im1 = int(ring_after.addrs[new_idx])
+    a_im2 = int(ring_after.addrs[(new_idx - 1) % n])
+    return _deliver(ring_after, a_im2, a_im1, a_i)
+
+
+def notify_leave(ring_after: Ring, ring_before: Ring, left_idx_before: int) -> List[Tuple[int, int]]:
+    """All (peer, direction) notifications triggered by a leave.
+
+    `left_idx_before` indexes the departed peer in `ring_before`; the
+    successor observes its predecessor change from the departed address
+    (a_im1 in Alg. 2's naming, now gone) to the one before it.
+    """
+    nb = ring_before.n
+    a_im1 = int(ring_before.addrs[left_idx_before])  # departed
+    a_im2 = int(ring_before.addrs[(left_idx_before - 1) % nb])
+    a_i = int(ring_before.addrs[(left_idx_before + 1) % nb])
+    return _deliver(ring_after, a_im2, a_im1, a_i)
+
+
+def _deliver(ring: Ring, a_im2: int, a_im1: int, a_i: int) -> List[Tuple[int, int]]:
+    pos = ring.positions()
+    out: List[Tuple[int, int]] = []
+    for alert in alerts_for_change(a_im2, a_im1, a_i, ring.d, ring.addrs.dtype):
+        peer = route_alert(ring, alert, pos=pos)
+        if peer is not None:
+            out.append((peer, alert_direction(alert.from_pos, int(pos[peer]), ring.d,
+                                              ring.addrs.dtype.type)))
+    return out

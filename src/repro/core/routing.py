@@ -1,0 +1,317 @@
+"""Alg. 1 — Local Binary Tree Routing (paper §2).
+
+Two implementations share the same rules:
+  * `route` — single-message reference (plain Python), returns the full hop
+    trace; used by tests, the stretch benchmark and the notify protocol.
+  * `send_batch` / `step_batch` — vectorized (numpy) message-table versions
+    used by the cycle simulator for the majority-voting experiments.
+
+Protocol recap. A message carries ``(origin, dest, edge, M)`` where
+``origin`` is the sender's tree position (never rewritten), ``dest`` the
+current destination *address* and ``edge`` a segment edge used to kill
+doomed ping-pong traffic. On delivery to the owner of ``dest`` (peer p_i,
+segment (a_{i-1}, a_i], position pos_i):
+
+  accept           iff dest == pos_i                  (and origin != pos_i)
+  UP traffic       (dest fore-parent of origin)   -> newdest = UP[dest]
+  CW traffic       (dest in CW subtree of origin) ->
+      drop if edge == a_{i-1}
+      newdest = CW[dest]  if origin == pos_i  (bounced off the sender itself)
+      newdest = CCW[dest] otherwise           (step away from pos_i)
+  CCW traffic      mirror image (drop if edge == a_i; self -> CCW, else CW)
+  drop when a descent reaches a leaf address ("address space exhausted").
+
+Repairs (``repair=True``, the default; ``repair=False`` is verbatim Alg. 1).
+Both are discussed in DESIGN.md §Faithfulness and exist because the verbatim
+pseudocode drops ~3% of CW/CCW deliveries whose Lemma-2 neighbor exists:
+
+  R1 *internal descent.* When the recalculated destination still falls in
+     the receiving peer's own segment, the peer keeps descending locally
+     instead of handing the message back to the DHT (no implementation
+     would route to itself). Consequently the edge-based drop check is
+     applied only to messages actually received from the network. This is
+     exactly the paper's stated intent for the edge check — killing
+     *sender/receiver* ping-pong "because there is no peer between them" —
+     without also killing a peer's own multi-step descent through its own
+     segment. Hop counts below therefore count true DHT routings, matching
+     the paper's stretch definition ("lets the DHT route the message").
+  R2 *root wrap.* The root's segment wraps through the top of the address
+     space. When a descent lands in the wrapped upper region (dest >
+     max peer address), every occupied position is counterclockwise of
+     dest, so the root descends CCW regardless of the self/foreign rule.
+     Verbatim Alg. 1 walks clockwise into the empty region and drops
+     (probability ~2^-(N-1) per edge; certainty for N=2 rings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from . import addressing as A
+from .addressing import UP, CW, CCW
+from .dht import Ring
+
+# router status codes
+ACCEPT, FORWARD, DROP = 0, 1, 2
+
+
+@dataclass
+class Hop:
+    dest: int  # address the DHT routed to
+    peer: int  # owner peer that received it
+
+
+def initial_send(
+    ring: Ring, i: int, direction: int, pos: Optional[np.ndarray] = None
+) -> Optional[Tuple[int, int, Optional[int]]]:
+    """Downcall SEND: returns (origin_pos, dest, edge) or None if the
+    direction does not exist for this peer (root UP/CCW, leaf CW/CCW)."""
+    if pos is None:
+        pos = ring.positions()
+    p = int(pos[i])
+    if direction == UP:
+        if p == 0:
+            return None
+        return p, int(A.up(np.asarray(p, ring.addrs.dtype), ring.d)), None
+    if bool(A.is_leaf(np.asarray(p, ring.addrs.dtype))) or (p == 0 and direction == CCW):
+        return None
+    if direction == CW:
+        return p, int(A.cw(np.asarray(p, ring.addrs.dtype), ring.d)), int(ring.addrs[i])
+    return p, int(A.ccw(np.asarray(p, ring.addrs.dtype), ring.d)), int(ring.prev[i])
+
+
+def process_at_peer(
+    ring: Ring,
+    peer: int,
+    origin: int,
+    dest: int,
+    edge: Optional[int],
+    repair: bool = True,
+    pos: Optional[np.ndarray] = None,
+) -> Tuple[int, int, Optional[int]]:
+    """Alg. 1 upcall DELIVER at `peer`, with R1 internal descent.
+
+    Returns (status, newdest, newedge); status FORWARD means `newdest` is
+    owned by a different peer and must be routed through the DHT.
+    """
+    d = ring.d
+    dt = ring.addrs.dtype
+    if pos is None:
+        pos = ring.positions()
+    pos_i = int(pos[peer])
+    a_prev = int(ring.prev[peer])
+    a_self = int(ring.addrs[peer])
+    max_addr = int(ring.addrs[-1])
+    network_entry = True
+    # "Self" in Alg. 1's bounce rule means the message bounced off the peer
+    # whose segment contains the origin position. For ordinary traffic this
+    # is exactly `origin == pos_i`; testing segment ownership additionally
+    # covers Alg. 2 ALERTs emulated from positions the sender does not
+    # occupy (see notify.py).
+    self_seg = int(ring.owner(np.asarray([origin], dt))[0]) == peer
+
+    while True:
+        if dest == pos_i:
+            if origin == pos_i:
+                return DROP, 0, None  # degenerate self-send (root UP)
+            return ACCEPT, dest, None
+
+        o = np.asarray(origin, dt)
+        de = np.asarray(dest, dt)
+        if bool(A.is_foreparent(de, o, d)):
+            nd, ne = int(A.up(de, d)), None
+        else:
+            in_cw = bool(A.in_cw_subtree(o, de, d))
+            kill_edge = a_prev if in_cw else a_self
+            if network_entry and edge is not None and edge == kill_edge:
+                return DROP, 0, None
+            if bool(A.is_leaf(de)):
+                return DROP, 0, None  # address space exhausted
+            if repair and pos_i == 0 and dest > max_addr:
+                # R2: wrapped upper region — all occupied positions are CCW.
+                nd, ne = int(A.ccw(de, d)), a_prev
+            elif self_seg:
+                nd = int(A.cw(de, d)) if in_cw else int(A.ccw(de, d))
+                ne = a_self if in_cw else a_prev
+            else:
+                nd = int(A.ccw(de, d)) if in_cw else int(A.cw(de, d))
+                ne = a_prev if in_cw else a_self
+        if not repair:
+            return FORWARD, nd, ne
+        # R1: keep descending locally while we still own the new destination.
+        if int(ring.owner(np.asarray([nd], dt))[0]) != peer:
+            return FORWARD, nd, ne
+        dest, edge = nd, ne
+        network_entry = False
+
+
+def route(
+    ring: Ring,
+    i: int,
+    direction: int,
+    repair: bool = True,
+    max_hops: int = 10_000,
+    pos: Optional[np.ndarray] = None,
+) -> Tuple[Optional[int], List[Hop]]:
+    """Route one message from peer i in `direction` until ACCEPT or DROP.
+
+    Returns (accepting peer index or None, hop trace). Each Hop is one DHT
+    routing — the unit of the paper's stretch metric.
+    """
+    s = initial_send(ring, i, direction, pos=pos)
+    if s is None:
+        return None, []
+    origin, dest, edge = s
+    trace: List[Hop] = []
+    for _ in range(max_hops):
+        peer = int(ring.owner(np.asarray([dest], ring.addrs.dtype))[0])
+        trace.append(Hop(dest, peer))
+        status, newdest, newedge = process_at_peer(
+            ring, peer, origin, dest, edge, repair=repair, pos=pos
+        )
+        if status == ACCEPT:
+            return peer, trace
+        if status == DROP:
+            return None, trace
+        dest, edge = newdest, newedge
+    raise RuntimeError("routing did not terminate")
+
+
+# ----------------------------------------------------------------------------
+# Vectorized message-table router (simulator hot path)
+# ----------------------------------------------------------------------------
+
+def send_batch(
+    ring: Ring,
+    peers: np.ndarray,
+    directions: np.ndarray,
+    pos: Optional[np.ndarray] = None,
+):
+    """Vectorized initial SEND for (peer, direction) pairs.
+
+    Returns (valid, origin, dest, edge, has_edge). Invalid sends are the
+    structurally-missing directions (root UP/CCW, leaf CW/CCW); the caller
+    discards them — the paper's "we prefer wasting those messages" stance.
+    """
+    d = ring.d
+    if pos is None:
+        pos = ring.positions()
+    p = pos[peers]
+    leaf = A.is_leaf(p)
+    root = p == 0
+    dest = np.where(
+        directions == UP, A.up(p, d), np.where(directions == CW, A.cw(p, d), A.ccw(p, d))
+    ).astype(ring.addrs.dtype)
+    edge = np.where(
+        directions == CW, ring.addrs[peers], ring.prev[peers]
+    ).astype(ring.addrs.dtype)
+    has_edge = directions != UP
+    valid = np.where(
+        directions == UP,
+        ~root,
+        np.where(directions == CW, ~leaf, ~leaf & ~root),
+    )
+    return valid, p.astype(ring.addrs.dtype), dest, edge, has_edge
+
+
+def step_batch(
+    ring: Ring,
+    origin: np.ndarray,
+    dest: np.ndarray,
+    edge: np.ndarray,
+    has_edge: np.ndarray,
+    repair: bool = True,
+    pos: Optional[np.ndarray] = None,
+):
+    """Vectorized Alg. 1 delivery for a batch of messages (R1/R2 included).
+
+    One call consumes one *network* delivery per message (internal descent
+    loops run to completion inside). Returns
+    (status, owner_peer, newdest, newedge, new_has_edge).
+    """
+    d = ring.d
+    dt = ring.addrs.dtype
+    if pos is None:
+        pos = ring.positions()
+    n = origin.shape[0]
+    owner0 = ring.owner(dest)
+    max_addr = ring.addrs[-1]
+
+    status = np.full(n, FORWARD, dtype=np.int64)
+    out_dest = dest.copy()
+    out_edge = edge.copy()
+    out_has_edge = has_edge.copy()
+    cur_dest = dest.copy()
+    cur_edge = edge.copy()
+    cur_has_edge = has_edge.copy()
+    network_entry = np.ones(n, dtype=bool)
+    live = np.ones(n, dtype=bool)
+
+    for _ in range(d + 2):  # descents halve the span every step
+        if not live.any():
+            break
+        li = np.nonzero(live)[0]
+        de = cur_dest[li]
+        og = origin[li]
+        pe = owner0[li]
+        pos_i = pos[pe]
+        a_prev = ring.prev[pe]
+        a_self = ring.addrs[pe]
+
+        at_pos = de == pos_i
+        self_send = og == pos_i
+        self_seg = ring.owner(og) == pe  # see process_at_peer: covers alerts
+        acc = at_pos & ~self_send
+        drop_self = at_pos & self_send
+
+        going_up = A.is_foreparent(de, og, d)
+        in_cw = A.in_cw_subtree(og, de, d)
+        kill_edge = np.where(in_cw, a_prev, a_self)
+        edge_kill = (
+            network_entry[li]
+            & cur_has_edge[li]
+            & (cur_edge[li] == kill_edge)
+            & ~going_up
+            & ~at_pos
+        )
+        leaf = A.is_leaf(de) & ~going_up & ~at_pos
+        dead = drop_self | edge_kill | leaf
+
+        root_wrap = repair & (pos_i == 0) & (de > max_addr)
+        step_cw = np.where(
+            root_wrap, False, np.where(self_seg, in_cw, ~in_cw)
+        )
+        nd = np.where(
+            going_up,
+            A.up(de, d),
+            np.where(step_cw, A.cw(de, d), A.ccw(de, d)),
+        ).astype(dt)
+        ne = np.where(going_up, 0, np.where(step_cw, a_self, a_prev)).astype(dt)
+        nhe = ~going_up
+
+        # classify
+        now_acc = acc
+        now_drop = dead & ~acc
+        # internal descent: still our own address space?
+        new_owner = ring.owner(nd)
+        stay = repair & (new_owner == pe) & ~now_acc & ~now_drop
+
+        gi = li
+        status[gi[now_acc]] = ACCEPT
+        status[gi[now_drop]] = DROP
+        fwd = ~now_acc & ~now_drop & ~stay
+        out_dest[gi[fwd]] = nd[fwd]
+        out_edge[gi[fwd]] = ne[fwd]
+        out_has_edge[gi[fwd]] = nhe[fwd]
+        status[gi[fwd]] = FORWARD
+
+        live[gi[~stay]] = False
+        cur_dest[gi[stay]] = nd[stay]
+        cur_edge[gi[stay]] = ne[stay]
+        cur_has_edge[gi[stay]] = nhe[stay]
+        network_entry[gi[stay]] = False
+        if not repair:
+            live[:] = False
+    return status, owner0, out_dest, out_edge, out_has_edge

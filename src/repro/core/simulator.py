@@ -1,0 +1,88 @@
+"""Cycle-driven network simulator (paper §4: peersim-equivalent harness).
+
+Messages are held in a growing structure-of-arrays table. Each *network
+delivery* (one DHT routing) costs a uniformly random delay of 1..10 cycles —
+the paper uses the same range, "not to approximate wall time but rather to
+decouple the peers and avoid locked-step behavior". Message counting is per
+network delivery, which puts tree routing and gossip on equal footing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+MIN_DELAY, MAX_DELAY = 1, 10
+AVG_DELAY = (MIN_DELAY + MAX_DELAY) / 2  # "average message delay" = 5.5 ~ 5 cycles
+
+
+@dataclass
+class MessageTable:
+    """Bounded-growth SoA message queue. payload is (ones, total) int64."""
+
+    capacity: int = 1024
+    origin: np.ndarray = field(default=None)  # sender tree position
+    dest: np.ndarray = field(default=None)  # destination address
+    edge: np.ndarray = field(default=None)
+    has_edge: np.ndarray = field(default=None)
+    pay_ones: np.ndarray = field(default=None)
+    pay_total: np.ndarray = field(default=None)
+    seq: np.ndarray = field(default=None)
+    deliver_t: np.ndarray = field(default=None)  # -1 == free slot
+    addr_dtype: type = np.uint64
+
+    def __post_init__(self):
+        c = self.capacity
+        self.origin = np.zeros(c, self.addr_dtype)
+        self.dest = np.zeros(c, self.addr_dtype)
+        self.edge = np.zeros(c, self.addr_dtype)
+        self.has_edge = np.zeros(c, bool)
+        self.pay_ones = np.zeros(c, np.int64)
+        self.pay_total = np.zeros(c, np.int64)
+        self.seq = np.zeros(c, np.int64)
+        self.deliver_t = np.full(c, -1, np.int64)
+
+    def _grow(self, need: int):
+        newcap = max(self.capacity * 2, self.capacity + need)
+        for name in ("origin", "dest", "edge", "has_edge", "pay_ones",
+                     "pay_total", "seq", "deliver_t"):
+            old = getattr(self, name)
+            new = np.zeros(newcap, old.dtype)
+            if name == "deliver_t":
+                new[:] = -1
+            new[: self.capacity] = old
+            setattr(self, name, new)
+        self.capacity = newcap
+
+    def enqueue(self, origin, dest, edge, has_edge, pay_ones, pay_total, seq, deliver_t):
+        k = origin.shape[0]
+        if k == 0:
+            return
+        free = np.nonzero(self.deliver_t < 0)[0]
+        if free.size < k:
+            self._grow(k - free.size)
+            free = np.nonzero(self.deliver_t < 0)[0]
+        sl = free[:k]
+        self.origin[sl] = origin
+        self.dest[sl] = dest
+        self.edge[sl] = edge
+        self.has_edge[sl] = has_edge
+        self.pay_ones[sl] = pay_ones
+        self.pay_total[sl] = pay_total
+        self.seq[sl] = seq
+        self.deliver_t[sl] = deliver_t
+
+    def due(self, t: int) -> np.ndarray:
+        return np.nonzero(self.deliver_t == t)[0]
+
+    def release(self, slots: np.ndarray):
+        self.deliver_t[slots] = -1
+
+    @property
+    def in_flight(self) -> int:
+        return int((self.deliver_t >= 0).sum())
+
+
+def random_delays(rng: np.random.Generator, k: int, t: int) -> np.ndarray:
+    return t + rng.integers(MIN_DELAY, MAX_DELAY + 1, size=k)

@@ -1,0 +1,53 @@
+"""Gossip (LiMoSense-style) parameter averaging — the paper's baseline,
+reproduced at the trainer level so the two sync families are comparable on
+identical footing (same inner steps, same mesh).
+
+Each round, pod g averages its replica with pod g XOR 2^(round mod log2 G)
+— the deterministic finger schedule (a hypercube sweep): after log2(G)
+rounds every pod's value is the global mean, after fewer rounds it is an
+approximation. This mirrors the paper's LiMoSense adaptation of "pick a
+uniformly random finger" (§3.2) in SPMD form (random pairings are not
+expressible as a static collective; the hypercube sweep is the standard
+deterministic equivalent with the same per-round cost).
+
+Cost per round equals a full dense exchange of the parameters — gossip has
+no violation gate and no compression, which is exactly why the paper finds
+it orders of magnitude more expensive at equal accuracy. benchmark:
+benchmarks/sync_comparison.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def gossip_round(params_g, round_idx: int, n_pods: int):
+    """One hypercube-pairwise averaging round over the leading G axis."""
+    assert n_pods & (n_pods - 1) == 0, "gossip schedule needs 2^k pods"
+    k = max(n_pods.bit_length() - 1, 1)
+    shift = 1 << (round_idx % k)
+    idx = jnp.arange(n_pods)
+    partner = idx ^ shift
+
+    def avg(t):
+        tp = t[partner]
+        return ((t.astype(F32) + tp.astype(F32)) * 0.5).astype(t.dtype)
+
+    return jax.tree.map(avg, params_g)
+
+
+def agreement_error(params_g) -> jnp.ndarray:
+    """RMS disagreement across pods (0 == fully synced)."""
+    leaves = jax.tree.leaves(params_g)
+    num = sum(l.size // l.shape[0] for l in leaves)
+    mean_sq = sum(
+        jnp.sum(jnp.square(
+            l.astype(F32) - jnp.mean(l.astype(F32), axis=0, keepdims=True)
+        )) for l in leaves
+    )
+    g = leaves[0].shape[0]
+    return jnp.sqrt(mean_sq / (num * g))

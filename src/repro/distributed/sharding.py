@@ -1,0 +1,323 @@
+"""Partition rules: params / inputs / caches -> PartitionSpec pytrees.
+
+Sharding is derived *structurally* from the same BlockDef pattern that
+built the parameters (no fragile path regexes): `param_specs(cfg)` mirrors
+`model._init_block` exactly.
+
+Baseline layout (see DESIGN.md §5; per-cell overrides are hillclimb knobs):
+  batch axes        ('pod','data') — DP
+  'model' axis      TP: attention heads (as flattened hq*dh), FFN hidden,
+                    vocab (embed rows / lm_head cols), MoE experts (EP),
+                    RG-LRU width (block-diagonal gates shard for free)
+  replicated        norms, biases, routers, MLA low-rank 'a' projections,
+                    sLSTM (tiny, inherently serial)
+  optimizer m/v     additionally sharded over 'data' where the largest dim
+                    divides (ZeRO-1)
+  decode caches     batch over DP axes; KV heads over 'model' when
+                    divisible, else the sequence dim; recurrent state width
+                    over 'model'; cross-attn caches replicated (small)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import BlockDef, ModelConfig, ShapeConfig
+
+TP = "model"
+
+
+def _rep(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def _norm_spec(kind: str):
+    if kind == "layernorm":
+        return {"w": P(), "b": P()}
+    return {"w": P()}
+
+
+def _attn_spec(cfg) -> Dict[str, Any]:
+    s = {
+        "wq": P(None, TP), "wk": P(None, TP), "wv": P(None, TP),
+        "wo": P(TP, None),
+    }
+    if cfg.attn_bias:
+        s.update(bq=P(TP), bk=P(TP), bv=P(TP), bo=P())
+    if cfg.qk_norm:
+        s.update(qnorm=_norm_spec("rmsnorm"), knorm=_norm_spec("rmsnorm"))
+    return s
+
+
+def _cross_spec(cfg) -> Dict[str, Any]:
+    return {
+        "wq": P(None, TP), "wk": P(None, TP), "wv": P(None, TP),
+        "wo": P(TP, None),
+        "qnorm": _norm_spec("rmsnorm"), "knorm": _norm_spec("rmsnorm"),
+        "gate_attn": P(),
+    }
+
+
+def _mla_spec(cfg) -> Dict[str, Any]:
+    return {
+        "wq_a": P(), "q_norm": _norm_spec("rmsnorm"), "wq_b": P(None, TP),
+        "wkv_a": P(), "kv_norm": _norm_spec("rmsnorm"), "wkv_b": P(None, TP),
+        "wo": P(TP, None),
+    }
+
+
+def _mlp_spec(gated: bool) -> Dict[str, Any]:
+    s = {"w_up": P(None, TP), "w_down": P(TP, None)}
+    if gated:
+        s["w_gate"] = P(None, TP)
+    return s
+
+
+def _moe_spec(cfg) -> Dict[str, Any]:
+    s = {
+        "router": P(), "router_bias": P(),
+        "w_gate": P(TP, None, None),  # experts sharded: EP over the TP axis
+        "w_up": P(TP, None, None),
+        "w_down": P(TP, None, None),
+    }
+    if cfg.moe.n_shared:
+        s["shared"] = _mlp_spec(True)
+    return s
+
+
+def _rglru_spec(cfg) -> Dict[str, Any]:
+    return {
+        "w_x": P(None, TP), "w_gate": P(None, TP),
+        "conv_w": P(None, TP), "conv_b": P(TP),
+        "rg_wa": P(TP, None, None), "rg_wx": P(TP, None, None),
+        "log_lambda": P(TP), "w_out": P(TP, None),
+    }
+
+
+def _mlstm_spec(cfg) -> Dict[str, Any]:
+    return {
+        "w_up": P(None, TP), "w_gate": P(None, TP),
+        "w_q": P(TP, None), "w_k": P(TP, None), "w_v": P(TP, None),
+        "w_if": P(TP, None), "b_if": P(),
+        "w_down": P(TP, None), "skip_norm": {"w": P(TP)},
+    }
+
+
+def _slstm_spec(cfg) -> Dict[str, Any]:
+    # tiny + inherently serial: replicate
+    return {"w_gates": P(), "r_gates": P(), "b_gates": P(), "w_out": P()}
+
+
+def _block_spec(bd: BlockDef, cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"norm1": _norm_spec(cfg.norm)}
+    if bd.mixer in ("attn", "swa", "bidir"):
+        s["mixer"] = _attn_spec(cfg)
+    elif bd.mixer == "mla":
+        s["mixer"] = _mla_spec(cfg)
+    elif bd.mixer == "xattn":
+        s["mixer"] = _cross_spec(cfg)
+    elif bd.mixer == "dec":
+        s["mixer"] = _attn_spec(cfg)
+        s["cross"] = _cross_spec(cfg)
+        s["norm_cross"] = _norm_spec(cfg.norm)
+    elif bd.mixer == "rglru":
+        s["mixer"] = _rglru_spec(cfg)
+    elif bd.mixer == "mlstm":
+        s["mixer"] = _mlstm_spec(cfg)
+    elif bd.mixer == "slstm":
+        s["mixer"] = _slstm_spec(cfg)
+    if bd.ffn != "none":
+        s["norm2"] = _norm_spec(cfg.norm)
+        if bd.ffn == "dense":
+            s["ffn"] = _mlp_spec(cfg.gated_mlp)
+        elif bd.ffn == "moe":
+            s["ffn"] = _moe_spec(cfg)
+        else:
+            s["ffn"] = _moe_spec(cfg)
+            s["ffn_dense"] = _mlp_spec(cfg.gated_mlp)
+    return s
+
+
+def _stack(tree):
+    """Prepend the scanned-periods axis (replicated) to every leaf spec."""
+    return jax.tree.map(
+        lambda sp: P(*([None] + list(sp))), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {
+        "embed": P(TP, None),
+        "final_norm": _norm_spec(cfg.norm),
+        "segments": [
+            _stack(tuple(_block_spec(bd, cfg) for bd in pat))
+            for pat, _ in cfg.segments()
+        ],
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = P(None, TP)
+    if cfg.enc_layers:
+        s["enc_segments"] = [
+            _stack(tuple(_block_spec(bd, cfg) for bd in pat))
+            for pat, _ in cfg.enc_segments()
+        ]
+        s["enc_final_norm"] = _norm_spec(cfg.norm)
+    if cfg.frontend and cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+        s["frontend_proj"] = P()
+    if cfg.mtp:
+        s["mtp"] = {
+            "proj": P(None, None),
+            "norm_h": _norm_spec(cfg.norm),
+            "norm_e": _norm_spec(cfg.norm),
+            "block": _block_spec(cfg.pattern[-1], cfg),
+        }
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Inputs / caches / optimizer
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_spec(mesh: Mesh, b: int):
+    ax = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+    return ax if ax and b % total == 0 else None
+
+
+def input_specs_for(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+) -> Dict[str, Any]:
+    """PartitionSpecs matching registry.input_specs' structure."""
+    ba = _batch_spec(mesh, shape.global_batch)
+    tok = P(ba, None)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = tok
+        out["targets"] = tok
+        if cfg.frontend:
+            out["frontend_embeds"] = P(ba, None, None)
+    elif shape.kind == "prefill":
+        out["tokens"] = tok
+        if cfg.frontend:
+            out["frontend_embeds"] = P(ba, None, None)
+    else:
+        out["token"] = tok
+        out["cache"] = cache_specs(cfg, shape.global_batch, shape.seq_len, mesh)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, b: int, cache_len: int, mesh: Mesh):
+    ba = _batch_spec(mesh, b)
+    tp = mesh.shape[TP]
+
+    def kv(length):
+        if cfg.num_kv_heads % tp == 0:
+            return {"k": P(ba, TP, None, None), "v": P(ba, TP, None, None)}
+        if length % tp == 0:
+            return {"k": P(ba, None, TP, None), "v": P(ba, None, TP, None)}
+        return {"k": P(ba, None, None, None), "v": P(ba, None, None, None)}
+
+    def block(bd: BlockDef):
+        if bd.mixer in ("attn", "bidir"):
+            return kv(cache_len)
+        if bd.mixer == "swa":
+            return kv(min(cfg.window, cache_len))
+        if bd.mixer == "mla":
+            l = P(ba, TP, None) if cache_len % tp == 0 else P(ba, None, None)
+            return {"ckv": l, "krope": l}
+        if bd.mixer == "dec":
+            s = kv(cache_len)
+            s.update(xk=P(ba, None, None, None), xv=P(ba, None, None, None))
+            return s
+        if bd.mixer == "xattn":
+            return {"xk": P(ba, None, None, None), "xv": P(ba, None, None, None)}
+        if bd.mixer == "rglru":
+            w = cfg.rec_width or cfg.d_model
+            wsp = TP if w % tp == 0 else None
+            return {"h": P(ba, wsp), "conv": P(ba, None, wsp)}
+        if bd.mixer == "mlstm":
+            dh = 2 * cfg.d_model // cfg.num_heads
+            dsp = TP if dh % tp == 0 else None
+            return {"C": P(ba, None, None, dsp), "n": P(ba, None, dsp),
+                    "m": P(ba, None)}
+        if bd.mixer == "slstm":
+            dsp = TP if cfg.d_model % tp == 0 else None
+            return {"c": P(ba, dsp), "n": P(ba, dsp), "h": P(ba, dsp),
+                    "m": P(ba, dsp)}
+        raise ValueError(bd.mixer)
+
+    return {
+        "pos": P(),
+        "segments": [
+            _stack(tuple(block(bd) for bd in pat)) for pat, _ in cfg.segments()
+        ],
+    }
+
+
+def logits_spec(mesh: Mesh, b: int, vocab: Optional[int] = None):
+    tp = TP if (vocab is None or vocab % mesh.shape[TP] == 0) else None
+    return P(_batch_spec(mesh, b), None, tp)
+
+
+def zero1_specs(pspecs, params_abs, mesh: Mesh):
+    """Optimizer-state specs: params spec + 'data' sharding of the largest
+    unsharded dim when divisible (ZeRO-1)."""
+    dp = mesh.shape.get("data", 1)
+
+    def one(sp, leaf):
+        dims = list(sp) + [None] * (len(leaf.shape) - len(sp))
+        best, best_sz = None, 0
+        for i, (d, cur) in enumerate(zip(leaf.shape, dims)):
+            if cur is None and d % dp == 0 and d > best_sz:
+                best, best_sz = i, d
+        if best is not None and best_sz >= dp:
+            dims[best] = "data"
+        return P(*dims)
+
+    return jax.tree.map(
+        one, pspecs, params_abs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def opt_state_specs(pspecs, params_abs, mesh: Mesh, zero1: bool = True):
+    mv = zero1_specs(pspecs, params_abs, mesh) if zero1 else pspecs
+    return {"m": mv, "v": mv, "count": P()}
+
+
+def sanitize(spec_tree, abs_tree, mesh: Mesh):
+    """Drop axis assignments whose dimension is not divisible by the axis
+    size (jit in_shardings require exact divisibility). Falls back to
+    replication for that dim — e.g. odd vocab sizes (whisper 51866,
+    minicpm 122753) keep a replicated embedding; padding the vocab to a
+    multiple of the TP axis is the hillclimb alternative."""
+
+    def one(sp, leaf):
+        dims = list(sp) + [None] * (len(leaf.shape) - len(sp))
+        out = []
+        for d, ax in zip(leaf.shape, dims):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            sz = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(ax if d % sz == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(one, spec_tree, abs_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

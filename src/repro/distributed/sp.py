@@ -1,0 +1,33 @@
+"""Sequence parallelism (§Perf H6): between blocks, the residual stream is
+sharded over the TP axis along the *sequence* dim, so the norms and
+residual adds run 1/tp-sized and GSPMD turns each TP all-reduce into a
+reduce-scatter + (later) all-gather pair — half the wire bytes of the
+all-reduce it replaces (Korthikanti et al., 2022, mapped to GSPMD via
+sharding constraints instead of explicit collectives).
+
+Enabled per-config (`ModelConfig.seq_shard`); the mesh axes come from the
+same module-context pattern as moe_ep (configs must stay hashable).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX = {"batch_axes": None, "tp_axis": "model"}
+
+
+def set_sp_axes(batch_axes: Optional[Tuple[str, ...]], tp_axis: str = "model"):
+    _CTX["batch_axes"] = tuple(batch_axes) if batch_axes else None
+    _CTX["tp_axis"] = tp_axis
+
+
+def seq_constraint(x):
+    """Constrain (B, S, d) activations to (batch, TP, None) sharding."""
+    ba = _CTX["batch_axes"]
+    if ba is None:
+        return x
+    if x.shape[1] % 16 and x.shape[1] % 2:  # oddly-shaped seq: skip
+        return x
+    return jax.lax.with_sharding_constraint(x, P(ba, _CTX["tp_axis"], None))

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for blockwise attention (causal / sliding-window, GQA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(
+    sq: int, skv: int, causal: bool, window: Optional[int], q_offset: int = 0
+) -> jnp.ndarray:
+    """(sq, skv) boolean mask. Query i sits at absolute position q_offset + i.
+
+    causal: key j visible iff j <= qpos.
+    window w: additionally qpos - w < j  (w most recent keys incl. self).
+    """
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def mha_reference(
+    q: jnp.ndarray,  # (B, Hq, Sq, Dh)
+    k: jnp.ndarray,  # (B, Hkv, Skv, Dh)
+    v: jnp.ndarray,  # (B, Hkv, Skv, Dh)
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Grouped-query attention, numerically-stable softmax, fp32 accumulate."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    dhv = v.shape[-1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    mask = attention_mask(sq, skv, causal, window, q_offset)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p / jnp.maximum(l, 1e-30), vf)
+    return o.reshape(b, hq, sq, dhv).astype(q.dtype)

@@ -1,0 +1,333 @@
+"""Flash-semantics attention in pure XLA (lax.scan over KV blocks).
+
+The Pallas kernel cannot lower off-TPU, but compiling the dry-run with the
+naive O(S^2)-memory reference would misrepresent the system (45 GB of
+score buffers at 4k train shapes). This module provides the same online-
+softmax blocking as the kernel using `lax.scan`, with a hand-written
+FlashAttention-2 backward (recompute per block from saved LSE) — so both
+forward and backward compile to O(S * Dh) memory everywhere, and the
+roofline reads the algorithm the real system runs.
+
+Two schedules:
+  * pair scan (causal / sliding-window): iterates only the *visible*
+    (q-block, kv-block) pairs — lower-triangular for causal (~0.5x FLOPs),
+    a diagonal band for windows (window 2048 @ 32k: ~0.08x). This is §Perf
+    hillclimb H1; the baseline streamed every kv block under masking.
+  * kv stream (non-causal / padded cross-attention): streaming scan with
+    optional kv_len masking.
+
+Used by ops.flash_attention whenever the Pallas kernel is unavailable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _block_mask(qpos, kpos, causal, window, kv_len=None):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def _pick_block(sq: int, skv: int, want: int = 512) -> int:
+    c = min(want, sq, skv)
+    while sq % c or skv % c:
+        c //= 2
+    return max(c, 1)
+
+
+def _visible_pairs(nq: int, nk: int, c: int, causal: bool,
+                   window: Optional[int]):
+    """Static list of (q block, kv block) pairs with any unmasked entry."""
+    pairs = []
+    for qi in range(nq):
+        hi = min(qi, nk - 1) if causal else nk - 1
+        lo = 0
+        if window is not None:
+            lo = max(0, (qi * c - window + 1) // c)
+        pairs.extend((qi, ki) for ki in range(lo, hi + 1))
+    return pairs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(
+    q, k, v, causal: bool = True, window: Optional[int] = None,
+    scale: Optional[float] = None, q_offset: int = 0,
+    kv_len: Optional[int] = None,
+):
+    """GQA flash attention, O(S*Dh) memory, pure XLA. Same contract as
+    ops.flash_attention; kv_len masks padded keys (static)."""
+    o, _ = _fwd(q, k, v, causal, window, scale, q_offset, kv_len)
+    return o
+
+
+def _fwd(q, k, v, causal, window, scale, q_offset, kv_len):
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dhv = v.shape[-1]
+    if scale is None:
+        scale = dh ** -0.5
+    g = hq // hkv
+    use_pairs = (causal or window is not None) and kv_len is None
+    if use_pairs:
+        o, lse = _pair_fwd(q, k, v, causal, window, scale, q_offset)
+    else:
+        qg = q.reshape(b, hkv, g * sq, dh)
+        o, lse = _stream_fwd(qg, k, v, causal, window, scale, q_offset, g,
+                             kv_len)
+        o = o.reshape(b, hq, sq, dhv)
+        lse = lse.reshape(b, hq, sq)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Pair schedule (causal / window): only visible blocks are computed
+# ---------------------------------------------------------------------------
+
+def _pair_fwd(q, k, v, causal, window, scale, q_offset):
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dhv = v.shape[-1]
+    g = hq // hkv
+    c = _pick_block(sq, skv)
+    nq, nk = sq // c, skv // c
+    pairs = _visible_pairs(nq, nk, c, causal, window)
+
+    # blocks: qb (nq, b, hkv, g*c, dh); rows within a block are (g, c)
+    qb = (q.reshape(b, hkv, g, nq, c, dh).transpose(3, 0, 1, 2, 4, 5)
+          .reshape(nq, b, hkv, g * c, dh).astype(F32) * scale)
+    kb = k.reshape(b, hkv, nk, c, dh).transpose(2, 0, 1, 3, 4).astype(F32)
+    vb = v.reshape(b, hkv, nk, c, dhv).transpose(2, 0, 1, 3, 4).astype(F32)
+    rel = jnp.tile(jnp.arange(c), g)  # row -> within-block position
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qq = jax.lax.dynamic_index_in_dim(qb, qi, 0, keepdims=False)
+        kk = jax.lax.dynamic_index_in_dim(kb, ki, 0, keepdims=False)
+        vv = jax.lax.dynamic_index_in_dim(vb, ki, 0, keepdims=False)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qq, kk)
+        qpos = q_offset + qi * c + rel
+        kpos = ki * c + jnp.arange(c)
+        mask = _block_mask(qpos, kpos, causal, window)
+        s = jnp.where(mask[None, None], s, NEG)
+        mi = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(-1))
+        alpha = jnp.exp(mi - m_new)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        li = li * alpha + p.sum(-1)
+        ai = ai * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, qi, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, qi, 0)
+        return (acc, m, l), None
+
+    init = (
+        jnp.zeros((nq, b, hkv, g * c, dhv), F32),
+        jnp.full((nq, b, hkv, g * c), NEG, F32),
+        jnp.zeros((nq, b, hkv, g * c), F32),
+    )
+    (acc, m, l), _ = jax.lax.scan(step, init, jnp.asarray(pairs, jnp.int32))
+    l = jnp.maximum(l, 1e-30)
+    o = acc / l[..., None]
+    lse = m + jnp.log(l)
+    # back to (b, hq, sq, dhv): block rows (nq, g, c) -> heads (g) x (nq*c)
+    o = (o.reshape(nq, b, hkv, g, c, dhv).transpose(1, 2, 3, 0, 4, 5)
+         .reshape(b, hq, sq, dhv).astype(q.dtype))
+    lse = (lse.reshape(nq, b, hkv, g, c).transpose(1, 2, 3, 0, 4)
+           .reshape(b, hq, sq))
+    return o, lse
+
+
+def _pair_bwd(q, k, v, o, lse, gout, causal, window, scale, q_offset):
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dhv = v.shape[-1]
+    g = hq // hkv
+    c = _pick_block(sq, skv)
+    nq, nk = sq // c, skv // c
+    pairs = _visible_pairs(nq, nk, c, causal, window)
+
+    def blkq(t, dlast):
+        return (t.reshape(b, hkv, g, nq, c, dlast).transpose(3, 0, 1, 2, 4, 5)
+                .reshape(nq, b, hkv, g * c, dlast).astype(F32))
+
+    qb = blkq(q, dh)
+    ob = blkq(o, dhv)
+    gb = blkq(gout, dhv)
+    lseb = (lse.reshape(b, hkv, g, nq, c).transpose(3, 0, 1, 2, 4)
+            .reshape(nq, b, hkv, g * c))
+    kb = k.reshape(b, hkv, nk, c, dh).transpose(2, 0, 1, 3, 4).astype(F32)
+    vb = v.reshape(b, hkv, nk, c, dhv).transpose(2, 0, 1, 3, 4).astype(F32)
+    drow = jnp.sum(gb * ob, axis=-1)  # (nq, b, h, g*c)
+    rel = jnp.tile(jnp.arange(c), g)
+
+    def step(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair[0], pair[1]
+        qq = jax.lax.dynamic_index_in_dim(qb, qi, 0, keepdims=False)
+        kk = jax.lax.dynamic_index_in_dim(kb, ki, 0, keepdims=False)
+        vv = jax.lax.dynamic_index_in_dim(vb, ki, 0, keepdims=False)
+        gg = jax.lax.dynamic_index_in_dim(gb, qi, 0, keepdims=False)
+        ls = jax.lax.dynamic_index_in_dim(lseb, qi, 0, keepdims=False)
+        dr = jax.lax.dynamic_index_in_dim(drow, qi, 0, keepdims=False)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qq, kk) * scale
+        qpos = q_offset + qi * c + rel
+        kpos = ki * c + jnp.arange(c)
+        mask = _block_mask(qpos, kpos, causal, window)
+        p = jnp.where(mask[None, None], jnp.exp(s - ls[..., None]), 0.0)
+        dvi = jnp.einsum("bhqk,bhqd->bhkd", p, gg)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", gg, vv)
+        ds = p * (dp - dr[..., None]) * scale
+        dqi = jnp.einsum("bhqk,bhkd->bhqd", ds, kk)
+        dki = jnp.einsum("bhqk,bhqd->bhkd", ds, qq)
+
+        def upd(buf, i, val):
+            cur = jax.lax.dynamic_index_in_dim(buf, i, 0, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(buf, cur + val, i, 0)
+
+        return (upd(dq, qi, dqi), upd(dk, ki, dki), upd(dv, ki, dvi)), None
+
+    init = (
+        jnp.zeros((nq, b, hkv, g * c, dh), F32),
+        jnp.zeros((nk, b, hkv, c, dh), F32),
+        jnp.zeros((nk, b, hkv, c, dhv), F32),
+    )
+    (dq, dk, dv), _ = jax.lax.scan(step, init, jnp.asarray(pairs, jnp.int32))
+    dq = (dq.reshape(nq, b, hkv, g, c, dh).transpose(1, 2, 3, 0, 4, 5)
+          .reshape(b, hq, sq, dh))
+    dk = dk.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, dh)
+    dv = dv.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, dhv)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Streaming schedule (non-causal / kv_len-masked cross attention)
+# ---------------------------------------------------------------------------
+
+def _stream_fwd(qg, k, v, causal, window, scale, q_offset, g, kv_len=None,
+                block_k: int = 512):
+    b, h, gsq, dh = qg.shape
+    sq = gsq // g
+    skv = k.shape[2]
+    dhv = v.shape[-1]
+    bk = min(block_k, skv)
+    while skv % bk:
+        bk //= 2
+    nk = skv // bk
+    qf = qg.astype(F32) * scale
+    kb = k.astype(F32).reshape(b, h, nk, bk, dh).transpose(2, 0, 1, 3, 4)
+    vb = v.astype(F32).reshape(b, h, nk, bk, dhv).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.tile(jnp.arange(sq), g)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kk, vv, ki = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kk)
+        kpos = ki * bk + jnp.arange(bk)
+        mask = _block_mask(qpos, kpos, causal, window, kv_len)
+        s = jnp.where(mask[None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vv)
+        return (acc, m_new, l), None
+
+    init = (
+        jnp.zeros((b, h, gsq, dhv), F32),
+        jnp.full((b, h, gsq), NEG, F32),
+        jnp.zeros((b, h, gsq), F32),
+    )
+    (acc, m, l), _ = jax.lax.scan(step, init, (kb, vb, jnp.arange(nk)))
+    l = jnp.maximum(l, 1e-30)
+    o = (acc / l[..., None]).astype(qg.dtype)
+    lse = m + jnp.log(l)
+    return o, lse
+
+
+def _stream_bwd(qg, k, v, og, lse, gg, causal, window, scale, q_offset, g,
+                kv_len=None, block_k: int = 512):
+    b, h, gsq, dh = qg.shape
+    sq = gsq // g
+    skv = k.shape[2]
+    dhv = v.shape[-1]
+    bk = min(block_k, skv)
+    while skv % bk:
+        bk //= 2
+    nk = skv // bk
+    qf = qg.astype(F32)
+    gf = gg.astype(F32)
+    of = og.astype(F32)
+    d_row = jnp.sum(gf * of, axis=-1)
+    kb = k.astype(F32).reshape(b, h, nk, bk, dh).transpose(2, 0, 1, 3, 4)
+    vb = v.astype(F32).reshape(b, h, nk, bk, dhv).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.tile(jnp.arange(sq), g)
+
+    def step(dq, blk):
+        kk, vv, ki = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kk) * scale
+        kpos = ki * bk + jnp.arange(bk)
+        mask = _block_mask(qpos, kpos, causal, window, kv_len)
+        p = jnp.where(mask[None, None], jnp.exp(s - lse[..., None]), 0.0)
+        dv = jnp.einsum("bhqk,bhqd->bhkd", p, gf)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", gf, vv)
+        ds = p * (dp - d_row[..., None]) * scale
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds, kk)
+        dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, h, gsq, dh), F32)
+    dq, (dk, dv) = jax.lax.scan(step, dq0, (kb, vb, jnp.arange(nk)))
+    dk = dk.transpose(1, 2, 0, 3, 4).reshape(b, h, skv, dh)
+    dv = dv.transpose(1, 2, 0, 3, 4).reshape(b, h, skv, dhv)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom VJP plumbing
+# ---------------------------------------------------------------------------
+
+def _vjp_fwd(q, k, v, causal, window, scale, q_offset, kv_len):
+    o, lse = _fwd(q, k, v, causal, window, scale, q_offset, kv_len)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, window, scale, q_offset, kv_len, res, gout):
+    q, k, v, o, lse = res
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    dhv = v.shape[-1]
+    g = hq // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    use_pairs = (causal or window is not None) and kv_len is None
+    if use_pairs:
+        dq, dk, dv = _pair_bwd(q, k, v, o, lse, gout, causal, window, scale,
+                               q_offset)
+    else:
+        qg = q.reshape(b, hkv, g * sq, dh)
+        og = o.reshape(b, hkv, g * sq, dhv)
+        gg = gout.reshape(b, hkv, g * sq, dhv)
+        lseg = lse.reshape(b, hkv, g * sq)
+        dq, dk, dv = _stream_bwd(qg, k, v, og, lseg, gg, causal, window,
+                                 scale, q_offset, g, kv_len)
+        dq = dq.reshape(b, hq, sq, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_xla.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for threshold compression (no VJP: runs on gradients)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import threshold_gate_reference
+from .threshold_gate import threshold_gate_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def threshold_gate(
+    grad: jnp.ndarray,
+    residual: jnp.ndarray,
+    tau,
+    use_kernel: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(send, new_residual, n_sent). See ref.py for semantics."""
+    tau = jnp.asarray(tau, jnp.float32)
+    if use_kernel and grad.size >= 8:
+        return threshold_gate_kernel(grad, residual, tau,
+                                     interpret=not _on_tpu())
+    return threshold_gate_reference(grad, residual, tau)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for error-feedback threshold compression.
+
+This is the paper's local-thresholding insight applied at tensor
+granularity: a coordinate of the gradient is communicated only when its
+accumulated magnitude crosses tau ("violation"); everything below threshold
+stays in a local residual ("agreement holds — stay silent").
+
+    acc     = grad + residual
+    send    = where(|acc| >= tau, acc, 0)
+    new_res = acc - send        (error feedback: nothing is ever lost)
+    nsent   = count(|acc| >= tau)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def threshold_gate_reference(
+    grad: jnp.ndarray, residual: jnp.ndarray, tau: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    acc = grad.astype(jnp.float32) + residual.astype(jnp.float32)
+    mask = jnp.abs(acc) >= tau.astype(jnp.float32)
+    send = jnp.where(mask, acc, 0.0)
+    new_res = acc - send
+    nsent = jnp.sum(mask.astype(jnp.int32))
+    return send.astype(grad.dtype), new_res.astype(residual.dtype), nsent

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the right step (train_step / prefill / serve_step) against
+     ShapeDtypeStruct inputs (zero allocation),
+  3. compiles, records memory_analysis() + cost_analysis() + the
+     collective-bytes histogram parsed from the HLO,
+  4. appends a JSON record consumed by analysis.roofline and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cbase
+from repro.configs.registry import ARCH_IDS, get_config, input_specs
+from repro.distributed import sharding as shd
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import abstract_params
+from repro.optim.adamw import AdamWConfig, abstract_state
+from repro.analysis.hlo import collective_bytes, flops_and_bytes
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               remat: str = "auto", extra_overrides: Dict[str, Any] = None,
+               moe_impl: str = None, seq_shard: bool = False):
+    """Lower+compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    if seq_shard:
+        from repro.distributed.sp import set_sp_axes
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+        set_sp_axes(("pod", "data") if multi_pod else ("data",), "model")
+    if moe_impl and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl=moe_impl))
+    shape = {s.name: s for s in cbase.ALL_SHAPES}[shape_name]
+    if shape.name == "long_500k" and not cbase.sub_quadratic(cfg):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "SKIP", "reason": "full-attention arch (DESIGN.md)"}
+    if remat == "auto":
+        remat = "block" if shape.kind == "train" else "none"
+    cfg = dataclasses.replace(cfg, remat=remat, **(extra_overrides or {}))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.moe is not None and cfg.moe.impl == "ep_a2a":
+        from repro.distributed.moe_ep import set_moe_mesh
+        set_moe_mesh(mesh, ("pod", "data") if multi_pod else ("data",),
+                     "model")
+    params_abs = abstract_params(cfg)
+    pspecs = shd.sanitize(shd.param_specs(cfg), params_abs, mesh)
+    ins = input_specs(cfg, shape)
+    in_sh = shd.input_specs_for(cfg, shape, mesh)
+    if "cache" in ins:
+        in_sh["cache"] = shd.sanitize(in_sh["cache"], ins["cache"], mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt_abs = abstract_state(params_abs)
+            ospecs = shd.opt_state_specs(pspecs, params_abs, mesh, zero1=True)
+            step = S.make_train_step(cfg, AdamWConfig())
+            jf = jax.jit(
+                step,
+                in_shardings=(
+                    _named(mesh, pspecs), _named(mesh, ospecs),
+                    _named(mesh, in_sh["tokens"]), _named(mesh, in_sh["targets"]),
+                ) + ((_named(mesh, in_sh["frontend_embeds"]),) if cfg.frontend else ()),
+                out_shardings=(
+                    _named(mesh, pspecs), _named(mesh, ospecs),
+                    None,
+                ),
+                donate_argnums=(0, 1),
+            )
+            args = (params_abs, opt_abs, ins["tokens"], ins["targets"]) + (
+                (ins["frontend_embeds"],) if cfg.frontend else ()
+            )
+            lowered = jf.lower(*args)
+        elif shape.kind == "prefill":
+            step = S.make_prefill_step(cfg, cache_len=None)
+            jf = jax.jit(
+                step,
+                in_shardings=(
+                    _named(mesh, pspecs), _named(mesh, in_sh["tokens"]),
+                ) + ((_named(mesh, in_sh["frontend_embeds"]),) if cfg.frontend else ()),
+                out_shardings=_named(
+                    mesh, shd.logits_spec(mesh, shape.global_batch,
+                                          cfg.vocab_size)
+                ),
+            )
+            args = (params_abs, ins["tokens"]) + (
+                (ins["frontend_embeds"],) if cfg.frontend else ()
+            )
+            lowered = jf.lower(*args)
+        else:  # decode
+            step = S.make_decode_step(cfg)
+            cache_sh = _named(mesh, in_sh["cache"])
+            jf = jax.jit(
+                step,
+                in_shardings=(
+                    _named(mesh, pspecs), _named(mesh, in_sh["token"]), cache_sh,
+                ),
+                out_shardings=(
+                    _named(mesh, shd.logits_spec(mesh, shape.global_batch,
+                                                 cfg.vocab_size)),
+                    cache_sh,
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jf.lower(params_abs, ins["token"], ins["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_txt = compiled.as_text()
+    coll = collective_bytes(hlo_txt)
+    fb = flops_and_bytes(hlo_txt)  # loop-scaled (cost_analysis counts scan
+    # bodies once — verified; see analysis.hlo)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "OK",
+        "remat": remat,
+        "n_devices": int(jax.device_count()),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "args": getattr(mem, "argument_size_in_bytes", 0),
+            "out": getattr(mem, "output_size_in_bytes", 0),
+            "alias": getattr(mem, "alias_size_in_bytes", 0),
+        },
+        "cost": {
+            "flops": fb["flops"],
+            "bytes_accessed": fb["bytes"],
+            "kernel_scope_flops": fb["kernel_scope_flops"],
+            "kernel_scope_bytes": fb["kernel_scope_bytes"],
+            "bytes_fused": fb["bytes_fused"],
+            "kernel_scope_bytes_fused": fb["kernel_scope_bytes_fused"],
+            "xla_flops_unscaled": cost.get("flops", 0.0),
+            "xla_bytes_unscaled": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": coll,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in cbase.ALL_SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="auto")
+    ap.add_argument("--moe-impl", default=None, choices=(None, "gather", "ep_a2a"))
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in cbase.ALL_SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{'mp' if args.multi_pod else 'sp'}"
+        try:
+            rec = lower_cell(arch, shape, args.multi_pod, remat=args.remat,
+                             moe_impl=args.moe_impl)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        short = {k: rec.get(k) for k in
+                 ("arch", "shape", "multi_pod", "status", "compile_s")}
+        if rec["status"] == "OK":
+            short["flops"] = f"{rec['cost']['flops']:.3e}"
+            short["coll_bytes"] = f"{sum(rec['collectives'].values()):.3e}"
+            short["mem_GB"] = round(rec["memory"]["bytes_per_device"] / 2**30, 2)
+        print(json.dumps(short))
+
+
+if __name__ == "__main__":
+    main()

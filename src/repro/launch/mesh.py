@@ -1,0 +1,30 @@
+"""Production meshes. Functions, not module constants — importing this
+module must never touch jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax init;
+tests and benches must keep seeing 1 device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod slice: 16x16 = 256 chips (data, model); multi_pod stacks two
+    pods into (pod, data, model) = (2, 16, 16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1):
+    """Arbitrary (pod, data, model) mesh for tests/examples."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip)
+HW = dict(
+    peak_bf16_flops=197e12,  # FLOP/s
+    hbm_bw=819e9,  # B/s
+    ici_bw=5e10,  # B/s per link
+)

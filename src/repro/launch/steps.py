@@ -1,0 +1,49 @@
+"""Jittable train/prefill/decode step builders shared by train.py,
+serve.py and dryrun.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step as _decode, forward, lm_loss
+from repro.optim.adamw import AdamWConfig, apply_update
+from repro.optim import schedules
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig,
+                    schedule: str = "cosine", total_steps: int = 10_000):
+    sched = schedules.get(schedule)
+
+    def train_step(params, opt_state, tokens, targets, frontend_embeds=None):
+        loss, grads = jax.value_and_grad(lm_loss)(
+            params, cfg, tokens, targets, frontend_embeds
+        )
+        scale = sched(opt_state["count"], total_steps)
+        params, opt_state, metrics = apply_update(
+            params, grads, opt_state, opt, scale
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: Optional[int] = None):
+    def prefill(params, tokens, frontend_embeds=None):
+        if cache_len is None:
+            return forward(params, cfg, tokens, frontend_embeds, mode="train")
+        return forward(params, cfg, tokens, frontend_embeds, mode="prefill",
+                       cache_len=cache_len)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, cache):
+        return _decode(params, cfg, token, cache)
+
+    return serve_step

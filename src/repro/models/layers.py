@@ -1,0 +1,743 @@
+"""Model building blocks, pure-functional JAX (params are plain pytrees).
+
+Covers every mixer/FFN the ten assigned architectures need:
+  * norms: RMSNorm (with optional Gemma-style 1+w), LayerNorm
+  * rotary embeddings (theta configurable)
+  * attention: GQA/MQA self-attention (optionally sliding-window / bidir),
+    cross-attention, and DeepSeek MLA (low-rank q/kv compression, decoupled RoPE,
+    compressed decode cache with the absorption trick)
+  * FFNs: SiLU/GeLU gated or plain MLPs; mixture-of-experts with top-k
+    routing (static capacity, sort-free scatter dispatch), optional shared
+    experts and dense-parallel branch (Arctic)
+  * RG-LRU recurrent block (Griffin) using the Pallas scan kernel
+  * xLSTM mixers: mLSTM (parallel quadratic form / recurrent decode form),
+    sLSTM (sequential scan)
+
+All matmuls run in the activation dtype with fp32 accumulation
+(`preferred_element_type`), norms/softmax/gates in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import decode_attention, flash_attention
+from repro.kernels.flash_attention.ref import mha_reference
+from repro.kernels.rglru.ops import linear_scan
+from repro.kernels.rglru.ref import rglru_gates
+
+Params = Dict[str, Any]
+F32 = jnp.float32
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=F32
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+             unit_offset: bool = False) -> jnp.ndarray:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(F32)) if unit_offset else w.astype(F32)
+    return (y * scale).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(F32) + b.astype(F32)).astype(x.dtype)
+
+
+def apply_norm(x: jnp.ndarray, p: Params, kind: str) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"])
+    if kind == "rmsnorm_unit":
+        return rms_norm(x, p["w"], unit_offset=True)
+    if kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    raise ValueError(kind)
+
+
+def init_norm(key, d: int, kind: str, dtype) -> Params:
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    if kind == "rmsnorm_unit":
+        return {"w": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, Dh) with positions (..., S) or (S,); rotate pairs."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., None].astype(F32) * freq  # (..., S, half)
+    # broadcast ang to x's rank: x (..., H, S, Dh) vs positions (..., S)
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Self / cross attention (GQA)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, hq * dh), dtype) * s,
+        "wk": jax.random.normal(k2, (d, hkv * dh), dtype) * s,
+        "wv": jax.random.normal(k3, (d, hkv * dh), dtype) * s,
+        "wo": jax.random.normal(k4, (hq * dh, d), dtype) * s,
+    }
+    if cfg.attn_bias:
+        p.update(
+            bq=jnp.zeros((hq * dh,), dtype),
+            bk=jnp.zeros((hkv * dh,), dtype),
+            bv=jnp.zeros((hkv * dh,), dtype),
+            bo=jnp.zeros((d,), dtype),
+        )
+    if cfg.qk_norm:
+        p.update(qnorm=init_norm(key, dh, "rmsnorm", dtype),
+                 knorm=init_norm(key, dh, "rmsnorm", dtype))
+    return p
+
+
+def _proj(x, w, b=None):
+    y = matmul(x, w)
+    return y + b.astype(y.dtype) if b is not None else y
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    positions: jnp.ndarray,  # (S,) or (B, S)
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,  # decode: {"k","v"} (B, Hkv, L, Dh)
+    cache_pos: Optional[jnp.ndarray] = None,  # scalar current position
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """GQA self-attention. Returns (y, updated cache or fresh cache)."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = _proj(x, p["wq"], p.get("bq")).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"]["w"])
+        k = rms_norm(k, p["knorm"]["w"])
+    if cfg.rope_theta:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    scale = cfg.attn_scale if cfg.attn_scale else dh ** -0.5
+
+    if cache is None:
+        o = flash_attention(
+            q, k, v, causal, window, scale, 0, cfg.use_pallas
+        )
+        o = jax.ad_checkpoint.checkpoint_name(o, "flash_out")
+        new_cache = None
+    else:
+        # single-token decode: write k/v at cache_pos (mod L for windowed)
+        L = cache["k"].shape[2]
+        slot = cache_pos % L
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, slot, 0))
+        if window is not None and L == window:
+            # rolling buffer: slot i holds position pos - ((pos - i) mod L),
+            # valid iff >= 0 — ordering is irrelevant post-RoPE.
+            slots = jnp.arange(L)
+            abspos = cache_pos - ((cache_pos - slots) % L)
+            valid = abspos >= 0
+            qf = q.astype(F32).reshape(b, hkv, hq // hkv, dh)
+            sc = jnp.einsum("bhgd,bhld->bhgl", qf, kc.astype(F32)) * scale
+            sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+            pr = jax.nn.softmax(sc, axis=-1)
+            o = jnp.einsum("bhgl,bhld->bhgd", pr, vc.astype(F32))
+            o = o.reshape(b, hq, 1, dh).astype(x.dtype)
+        else:
+            length = jnp.full((b,), cache_pos + 1, jnp.int32)
+            o = decode_attention(q, kc, vc, length, window, scale)
+        new_cache = {"k": kc, "v": vc}
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return _proj(y, p["wo"], p.get("bo")), new_cache
+
+
+def init_cross_attention(key, cfg, dtype, kv_dim: Optional[int] = None) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    kv_dim = kv_dim or d
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, hq * dh), dtype) * s,
+        "wk": jax.random.normal(k2, (kv_dim, hkv * dh), dtype) * (kv_dim ** -0.5),
+        "wv": jax.random.normal(k3, (kv_dim, hkv * dh), dtype) * (kv_dim ** -0.5),
+        "wo": jax.random.normal(k4, (hq * dh, d), dtype) * s,
+        "qnorm": init_norm(key, dh, "rmsnorm", dtype),
+        "knorm": init_norm(key, dh, "rmsnorm", dtype),
+        "gate_attn": jnp.zeros((1,), dtype),
+    }
+
+
+def cross_attention(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    memory: jnp.ndarray,  # (B, M, d_kv) — encoder states / vision tokens
+    cfg,
+    gated: bool = False,
+    cache: Optional[Params] = None,  # precomputed {"k","v"}
+) -> Tuple[jnp.ndarray, Params]:
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = matmul(x, p["wq"]).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    if cache is None:
+        m = memory.shape[1]
+        k = matmul(memory, p["wk"]).reshape(b, m, hkv, dh).transpose(0, 2, 1, 3)
+        v = matmul(memory, p["wv"]).reshape(b, m, hkv, dh).transpose(0, 2, 1, 3)
+        cache = {"k": k, "v": v}
+    k, v = cache["k"], cache["v"]
+    q = rms_norm(q, p["qnorm"]["w"])
+    k = rms_norm(k, p["knorm"]["w"])
+    mlen = k.shape[2]
+    pad = (-mlen) % 128
+    if pad and s * mlen >= 128 * 128:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        from repro.kernels.flash_attention.xla_ref import flash_attention_xla
+        o = flash_attention_xla(q, kp, vp, False, None, None, 0, mlen)
+    elif s * mlen >= 128 * 128:
+        from repro.kernels.flash_attention.xla_ref import flash_attention_xla
+        o = flash_attention_xla(q, k, v, False, None, None, 0, None)
+    else:
+        o = mha_reference(q, k, v, causal=False, window=None)
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    y = matmul(y, p["wo"])
+    if gated:
+        y = jnp.tanh(p["gate_attn"].astype(F32)).astype(y.dtype) * y
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": jax.random.normal(ks[0], (d, m.q_lora_rank), dtype) * s,
+        "q_norm": init_norm(ks[1], m.q_lora_rank, "rmsnorm", dtype),
+        "wq_b": jax.random.normal(ks[2], (m.q_lora_rank, h * qh), dtype)
+        * (m.q_lora_rank ** -0.5),
+        "wkv_a": jax.random.normal(ks[3], (d, m.kv_lora_rank + m.qk_rope_dim), dtype) * s,
+        "kv_norm": init_norm(ks[4], m.kv_lora_rank, "rmsnorm", dtype),
+        "wkv_b": jax.random.normal(
+            ks[5], (m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim)), dtype
+        ) * (m.kv_lora_rank ** -0.5),
+        "wo": jax.random.normal(ks[6], (h * m.v_head_dim, d), dtype)
+        * ((h * m.v_head_dim) ** -0.5),
+    }
+
+
+def mla_attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,  # {"ckv": (B,L,r), "krope": (B,L,rope)}
+    cache_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """MLA with decoupled RoPE. Decode uses the compressed-cache absorption
+    form: scores = (q_nope W_uk) · c_kv + q_rope · k_rope; values likewise
+    read from c_kv through W_uv — HBM traffic is r+rope per token, not
+    2 * H * Dh (the 93% KV-cache cut that motivates MLA)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rdim, vdim, r = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+
+    q = matmul(rms_norm(matmul(x, p["wq_a"]), p["q_norm"]["w"]), p["wq_b"])
+    q = q.reshape(b, s, h, nope + rdim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = matmul(x, p["wkv_a"])  # (B,S,r+rope)
+    ckv = rms_norm(kv_a[..., :r], p["kv_norm"]["w"])
+    k_rope = rope(kv_a[..., None, :, r:], positions, cfg.rope_theta)  # (B,1,S,rope)
+    scale = (nope + rdim) ** -0.5
+
+    wkv_b = p["wkv_b"].reshape(r, h, nope + vdim)
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhn->bhsn", ckv, wkv_b[..., :nope]).astype(x.dtype)
+        v = jnp.einsum("bsr,rhn->bhsn", ckv, wkv_b[..., nope:]).astype(x.dtype)
+        kk = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, h, s, rdim)).astype(x.dtype)], -1)
+        qq = jnp.concatenate([q_nope, q_rope], -1)
+        o = flash_attention(qq, kk, v, True, None, scale, 0, cfg.use_pallas)
+        o = jax.ad_checkpoint.checkpoint_name(o, "flash_out")
+        new_cache = None
+    else:
+        L = cache["ckv"].shape[1]
+        kc = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, cache_pos, 0))
+        rc = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope[:, 0], (0, cache_pos, 0)
+        )
+        # absorption: fold W_uk into q, W_uv into the output read
+        q_c = jnp.einsum("bhsn,rhn->bhsr", q_nope.astype(F32), wkv_b[..., :nope].astype(F32))
+        sc = jnp.einsum("bhsr,blr->bhsl", q_c, kc.astype(F32))
+        sc += jnp.einsum("bhsr,blr->bhsl", q_rope.astype(F32), rc.astype(F32))
+        sc *= scale
+        valid = jnp.arange(L)[None, :] <= cache_pos
+        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o_c = jnp.einsum("bhsl,blr->bhsr", pr, kc.astype(F32))
+        o = jnp.einsum("bhsr,rhn->bhsn", o_c, wkv_b[..., nope:].astype(F32)).astype(x.dtype)
+        new_cache = {"ckv": kc, "krope": rc}
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
+    return matmul(y, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x.astype(F32)).astype(x.dtype)
+    if kind == "gelu":
+        return jax.nn.gelu(x.astype(F32), approximate=True).astype(x.dtype)
+    raise ValueError(kind)
+
+
+def init_mlp(key, d: int, ff: int, gated: bool, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": jax.random.normal(k1, (d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k2, (ff, d), dtype) * ff ** -0.5,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(k3, (d, ff), dtype) * d ** -0.5
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = matmul(x, p["w_up"])
+    if "w_gate" in p:
+        up = _act(matmul(x, p["w_gate"]), act) * up
+    else:
+        up = _act(up, act)
+    return matmul(up, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of experts (static capacity, scatter dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg, dtype) -> Params:
+    mo = cfg.moe
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, ff = mo.n_experts, mo.d_ff
+    p = {
+        "router": jax.random.normal(k1, (d, e), dtype) * d ** -0.5,
+        "router_bias": jnp.zeros((e,), F32),  # aux-free balancing bias
+        "w_gate": jax.random.normal(k2, (e, d, ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k3, (e, d, ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k4, (e, ff, d), dtype) * ff ** -0.5,
+    }
+    if mo.n_shared:
+        p["shared"] = init_mlp(k5, d, mo.d_ff * mo.n_shared, True, dtype)
+    return p
+
+
+def moe(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Top-k MoE with static capacity and scatter/gather dispatch.
+
+    Dispatch is O(T·k·d) data movement (scatter into the (E, C, d) expert
+    buffer, gather back), NOT the O(T·E·C·d) one-hot-einsum formulation —
+    so compiled FLOPs reflect real expert work (see DESIGN.md §MoE).
+    Tokens beyond an expert's capacity are dropped (residual passes
+    through), standard Switch/GShard semantics.
+    """
+    mo = cfg.moe
+    if mo.impl == "ep_a2a":
+        from repro.distributed.moe_ep import current_moe_mesh, moe_ep
+
+        mesh, token_axes, ax = current_moe_mesh()
+        if mesh is not None:
+            import numpy as _np
+
+            n_tok_dev = _np.prod([mesh.shape[a] for a in token_axes])
+            t_local = x.shape[0] * x.shape[1] // int(n_tok_dev)
+            # token-sharded dispatch needs >= 1 token per expert-rank;
+            # decode batches fall back to the gather impl (tiny anyway)
+            if t_local >= mesh.shape[ax]:
+                return moe_ep(p, x, cfg)
+    b, s, d = x.shape
+    t = b * s
+    e, k = mo.n_experts, mo.top_k
+    xt = x.reshape(t, d)
+
+    logits = matmul(xt, p["router"]).astype(F32)  # (T, E)
+    if mo.router == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"][None, :]  # bias only picks experts
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        sel = scores
+    topw, tope = jax.lax.top_k(sel, k)  # (T, k)
+    gatew = jnp.take_along_axis(scores, tope, axis=-1)  # weights w/o bias
+    if mo.router == "sigmoid":
+        gatew = gatew / jnp.maximum(gatew.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(t * k / e * mo.capacity_factor) + 1
+    flat_e = tope.reshape(-1)  # (T*k,)
+    # position of each (token, slot) within its expert queue
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)  # exclusive prefix count
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < cap
+    buf_idx = jnp.where(keep, flat_e * cap + slot, e * cap)  # overflow bin
+
+    xb = jnp.repeat(xt, k, axis=0)  # (T*k, d) token copies per slot
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[buf_idx].set(xb)
+    buf = buf[:-1].reshape(e, cap, d)
+
+    up = jnp.einsum("ecd,edf->ecf", buf.astype(F32), p["w_up"].astype(F32))
+    gate = jnp.einsum("ecd,edf->ecf", buf.astype(F32), p["w_gate"].astype(F32))
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(F32)).astype(x.dtype)
+
+    out_flat = out.reshape(e * cap, d)
+    y = out_flat[jnp.minimum(buf_idx, e * cap - 1)]  # (T*k, d)
+    y = jnp.where(keep[:, None], y, 0.0)
+    y = y * gatew.reshape(-1)[:, None].astype(x.dtype)
+    y = y.reshape(t, k, d).sum(axis=1)
+
+    if mo.n_shared:
+        y = y + mlp(p["shared"], xt, "silu")
+    return y.reshape(b, s, d)
+
+
+def moe_load_stats(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Per-expert selection frequency (for the aux-free bias controller)."""
+    mo = cfg.moe
+    xt = x.reshape(-1, x.shape[-1])
+    logits = matmul(xt, p["router"]).astype(F32)
+    scores = jax.nn.sigmoid(logits) if mo.router == "sigmoid" else jax.nn.softmax(logits, -1)
+    _, tope = jax.lax.top_k(scores + p["router_bias"][None, :], mo.top_k)
+    return jnp.bincount(tope.reshape(-1), length=mo.n_experts)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key, cfg, dtype) -> Params:
+    d, w = cfg.d_model, cfg.rec_width
+    nb = cfg.num_heads  # gates are block-diagonal (official Griffin impl) —
+    # this is also what makes them TP-shardable with zero collectives.
+    bw = w // nb
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    # Lambda init so a in (0.9, 0.999) (paper): sigmoid^-1 over that range
+    lam = jax.random.uniform(ks[4], (w,), F32, 2.2, 6.9)
+    return {
+        "w_x": jax.random.normal(ks[0], (d, w), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (d, w), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (4, w), dtype) * 0.25,
+        "conv_b": jnp.zeros((w,), dtype),
+        "rg_wa": jax.random.normal(ks[3], (nb, bw, bw), dtype) * bw ** -0.5,
+        "rg_wx": jax.random.normal(ks[5], (nb, bw, bw), dtype) * bw ** -0.5,
+        "log_lambda": lam,
+        "w_out": jax.random.normal(ks[6], (w, d), dtype) * w ** -0.5,
+    }
+
+
+def _causal_conv4(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, taps=4. x: (B,S,W); state: (B,3,W) history."""
+    if state is None:
+        hist = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    else:
+        hist = state
+    xp = jnp.concatenate([hist, x], axis=1)  # (B, S+3, W)
+    y = sum(
+        xp[:, 3 - i : xp.shape[1] - i] * w[3 - i][None, None, :] for i in range(4)
+    )
+    new_state = xp[:, -3:]
+    return y + b[None, None, :], new_state
+
+
+def rglru_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    cache: Optional[Params] = None,  # {"h": (B,W), "conv": (B,3,W)}
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    gate = _act(matmul(x, p["w_gate"]), "gelu")
+    u = matmul(x, p["w_x"])
+    u, conv_state = _causal_conv4(
+        u, p["conv_w"], p["conv_b"], None if cache is None else cache["conv"]
+    )
+    b_, s_, w_ = u.shape
+    nb, bw = p["rg_wa"].shape[0], p["rg_wa"].shape[1]
+    ub = u.reshape(b_, s_, nb, bw)
+    r = jnp.einsum("bsnw,nwv->bsnv", ub.astype(F32),
+                   p["rg_wa"].astype(F32)).reshape(b_, s_, w_).astype(u.dtype)
+    i = jnp.einsum("bsnw,nwv->bsnv", ub.astype(F32),
+                   p["rg_wx"].astype(F32)).reshape(b_, s_, w_).astype(u.dtype)
+    a_t, u_t = rglru_gates(u, r, i, p["log_lambda"], cfg.rglru_c)
+    h0 = None if cache is None else cache["h"]
+    h, h_last = linear_scan(a_t, u_t, h0, cfg.use_pallas)
+    y = matmul(h * gate, p["w_out"])
+    new_cache = None if cache is None else {"h": h_last, "conv": conv_state}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM mixers
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    up = 2 * d
+    dh = up // h
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "w_up": jax.random.normal(ks[0], (d, up), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (d, up), dtype) * s,
+        "w_q": jax.random.normal(ks[2], (up, up), dtype) * up ** -0.5,
+        "w_k": jax.random.normal(ks[3], (up, up), dtype) * up ** -0.5,
+        "w_v": jax.random.normal(ks[4], (up, up), dtype) * up ** -0.5,
+        "w_if": jax.random.normal(ks[5], (up, 2 * h), dtype) * s,  # i,f gates
+        "b_if": jnp.concatenate([jnp.zeros((h,), F32), 3.0 * jnp.ones((h,), F32)]),
+        "w_down": jax.random.normal(ks[6], (up, d), dtype) * up ** -0.5,
+        "skip_norm": init_norm(ks[7], up, "rmsnorm", dtype),
+    }
+
+
+def mlstm_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    cache: Optional[Params] = None,  # {"C": (B,H,dh,dh), "n": (B,H,dh), "m": (B,H)}
+    return_state: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """mLSTM (xLSTM §mLSTM): matrix memory, exponential gating.
+
+    Training/prefill uses the stabilized parallel (quadratic) form; decode
+    uses the O(1)-state recurrent form. Both share parameters exactly.
+    `return_state=True` additionally materializes the final (C, n, m) from
+    the parallel form so prefill can hand off to recurrent decode.
+    """
+    b, s, d = x.shape
+    h = cfg.num_heads
+    up = p["w_up"].shape[1]
+    dh = up // h
+    z = matmul(x, p["w_up"])
+    gate = jax.nn.silu(matmul(x, p["w_gate"]).astype(F32)).astype(x.dtype)
+    q = matmul(z, p["w_q"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = matmul(z, p["w_k"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3) * dh ** -0.5
+    v = matmul(z, p["w_v"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    ifg = matmul(z, p["w_if"]).astype(F32) + p["b_if"]
+    ig, fg = ifg[..., :h], ifg[..., h:]  # (B,S,H) log-space gates
+    log_i = ig.transpose(0, 2, 1)  # (B,H,S)
+    log_f = jax.nn.log_sigmoid(fg).transpose(0, 2, 1)
+
+    if cache is None:
+        if s > 256:
+            # chunkwise-parallel form (TFLA-style): O(S*C) memory
+            o, st = _mlstm_chunked(
+                q.astype(F32), k.astype(F32), v.astype(F32), log_i, log_f,
+                chunk=256,
+            )
+            new_cache = st if return_state else None
+        else:
+            # parallel form: D_ij = exp(sum_{j<k<=i} log_f + log_i_j - m_i)
+            cf = jnp.cumsum(log_f, axis=-1)  # (B,H,S)
+            dmat = cf[..., :, None] - cf[..., None, :] + log_i[..., None, :]
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            dmat = jnp.where(mask, dmat, -jnp.inf)
+            m = jnp.maximum(jnp.max(dmat, axis=-1), 0.0)  # (B,H,S)
+            dexp = jnp.exp(dmat - m[..., None])
+            sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32))
+            w = sc * dexp
+            norm = jnp.maximum(jnp.abs(w.sum(-1)), jnp.exp(-m))  # (B,H,S)
+            o = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(F32)) / norm[..., None]
+            new_cache = None
+            if return_state:
+                # final state: C_S = sum_j exp(cf_S - cf_j + li_j - m_C) k v^T
+                wj = cf[..., -1:] - cf + log_i  # (B,H,S)
+                m_c = jnp.maximum(jnp.max(wj, axis=-1), 0.0)  # (B,H)
+                wexp = jnp.exp(wj - m_c[..., None])
+                Cs = jnp.einsum("bhs,bhsd,bhse->bhde", wexp, k.astype(F32),
+                                v.astype(F32))
+                ns = jnp.einsum("bhs,bhsd->bhd", wexp, k.astype(F32))
+                new_cache = {"C": Cs, "n": ns, "m": m_c}
+    else:
+        # recurrent form (S == 1)
+        C, n, m_prev = cache["C"].astype(F32), cache["n"].astype(F32), cache["m"]
+        li, lf = log_i[..., 0], log_f[..., 0]  # (B,H)
+        m_new = jnp.maximum(lf + m_prev, li)
+        fi = jnp.exp(lf + m_prev - m_new)[..., None]
+        ii = jnp.exp(li - m_new)[..., None]
+        k1, v1, q1 = k[:, :, 0].astype(F32), v[:, :, 0].astype(F32), q[:, :, 0].astype(F32)
+        C = fi[..., None] * C + ii[..., None] * jnp.einsum("bhd,bhe->bhde", k1, v1)
+        n = fi * n + ii * k1
+        num = jnp.einsum("bhd,bhde->bhe", q1, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n)), jnp.exp(-m_new))
+        o = (num / den[..., None])[:, :, None, :]  # (B,H,1,dh)
+        new_cache = {"C": C.astype(cache["C"].dtype), "n": n.astype(cache["n"].dtype),
+                     "m": m_new}
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, up).astype(x.dtype)
+    y = rms_norm(y, p["skip_norm"]["w"]) * gate
+    return matmul(y, p["w_down"]), new_cache
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int):
+    """Chunkwise-parallel mLSTM (the TPU analogue of TiledFlashLinearAttn).
+
+    Scans over S/C chunks carrying the stabilized matrix state
+    (C_state, n, m): within a chunk the quadratic form runs over (C x C)
+    tiles; across chunks contributions flow through the state — memory is
+    O(S*C + dh^2) instead of O(S^2). Exactly matches the quadratic form
+    (same stabilizer convention: m_t = max(inter, intra, 0)).
+
+    q/k/v: (B,H,S,dh) fp32 (k pre-scaled); log_i/log_f: (B,H,S).
+    Returns (h (B,H,S,dh), {"C","n","m"} final state).
+    """
+    b, h, s, dh = q.shape
+    c = chunk
+    while s % c:
+        c //= 2
+    nc = s // c
+    qs = q.reshape(b, h, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    ks = k.reshape(b, h, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, nc, c, dh).transpose(2, 0, 1, 3, 4)
+    lis = log_i.reshape(b, h, nc, c).transpose(2, 0, 1, 3)
+    lfs = log_f.reshape(b, h, nc, c).transpose(2, 0, 1, 3)
+
+    def step(carry, blk):
+        Cm, n, ms = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qq, kk, vv, li, lf = blk
+        bcum = jnp.cumsum(lf, axis=-1)  # (B,H,C) inclusive local decay
+        btot = bcum[..., -1]  # (B,H)
+        # intra-chunk log weights d_tj = b_t - b_j + li_j (j <= t)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(mask, dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=-1)  # (B,H,C)
+        m_inter = bcum + ms[..., None]  # (B,H,C)
+        m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), 0.0)
+        dexp = jnp.exp(dmat - m_t[..., None])
+        w = jnp.einsum("bhqd,bhkd->bhqk", qq, kk) * dexp
+        inter_scale = jnp.exp(m_inter - m_t)  # (B,H,C)
+        num = jnp.einsum("bhqk,bhkd->bhqd", w, vv) \
+            + inter_scale[..., None] * jnp.einsum("bhqd,bhde->bhqe", qq, Cm)
+        den = w.sum(-1) + inter_scale * jnp.einsum("bhqd,bhd->bhq", qq, n)
+        hh = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to chunk end
+        wj = btot[..., None] - bcum + li  # (B,H,C)
+        m_new = jnp.maximum(btot + ms, jnp.max(wj, axis=-1))
+        m_new = jnp.maximum(m_new, 0.0)
+        carry_scale = jnp.exp(btot + ms - m_new)  # (B,H)
+        wexp = jnp.exp(wj - m_new[..., None])
+        Cm = carry_scale[..., None, None] * Cm + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", wexp, kk, vv
+        )
+        n = carry_scale[..., None] * n + jnp.einsum("bhs,bhsd->bhd", wexp, kk)
+        return (Cm, n, m_new), hh
+
+    init = (
+        jnp.zeros((b, h, dh, dh), F32),
+        jnp.zeros((b, h, dh), F32),
+        jnp.full((b, h), -1e30, F32),
+    )
+    (Cm, n, ms), hs = jax.lax.scan(step, init, (qs, ks, vs, lis, lfs))
+    out = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    return out, {"C": Cm, "n": n, "m": ms}
+
+
+def init_slstm(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    return {
+        "w_gates": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,  # i,f,z,o
+        "r_gates": jax.random.normal(ks[1], (d, 4 * d), dtype) * s,  # recurrent
+        "b_gates": jnp.zeros((4 * d,), F32),
+        "w_out": jax.random.normal(ks[2], (d, d), dtype) * s,
+    }
+
+
+def slstm_block(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    cache: Optional[Params] = None,  # {"c","n","h","m"} each (B, d)
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """sLSTM (xLSTM §sLSTM): scalar memory, exponential gating + stabilizer.
+
+    Strictly sequential — implemented with lax.scan over time. This is the
+    one inherently serial mixer in the pool; DESIGN.md discusses why it
+    caps achievable MFU for the xlstm config.
+    """
+    b, s, d = x.shape
+    wx = (matmul(x, p["w_gates"]).astype(F32) + p["b_gates"])  # (B,S,4d)
+
+    def step(carry, wx_t):
+        c, n, hs, m = carry
+        g = wx_t + matmul(hs.astype(x.dtype), p["r_gates"]).astype(F32)
+        ig, fg, zg, og = jnp.split(g, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(fg)
+        m_new = jnp.maximum(lf + m, ig)
+        i_ = jnp.exp(ig - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zg)
+        n = f_ * n + i_
+        hs_new = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+        return (c, n, hs_new, m_new), hs_new
+
+    if cache is None:
+        init = tuple(jnp.zeros((b, d), F32) for _ in range(3)) + (
+            jnp.full((b, d), -1e30, F32),
+        )
+        (c, n, hs, m), hseq = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+        y = hseq.transpose(1, 0, 2).astype(x.dtype)
+        new_cache = None
+    else:
+        init = (cache["c"].astype(F32), cache["n"].astype(F32),
+                cache["h"].astype(F32), cache["m"].astype(F32))
+        (c, n, hs, m), hseq = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+        y = hseq.transpose(1, 0, 2).astype(x.dtype)
+        new_cache = {"c": c, "n": n, "h": hs, "m": m}
+    return matmul(y, p["w_out"]), new_cache

@@ -1,0 +1,557 @@
+"""Model assembly: embeddings -> pattern-scanned blocks -> logits.
+
+One code path serves all ten architectures:
+  * decoder-only LMs (dense / MoE / hybrid / SSM) — `pattern` picks mixers;
+  * encoder-decoder (Whisper) — `enc_layers`/`enc_pattern` add an encoder
+    consuming frontend-stub embeddings; decoder blocks are 'dec' (self +
+    cross);
+  * VLM (Llama-3.2-Vision) — 'xattn' blocks attend to projected vision
+    tokens.
+
+Layers are stacked with `lax.scan` over homogeneous *segments* (see
+configs.base.ModelConfig.segments): parameters and caches carry a leading
+n_periods axis, so the compiled HLO contains each distinct block exactly
+once per segment regardless of depth — essential for CPU-host compile times
+at 61-layer/671B scale and for clean roofline accounting.
+
+Three entry modes:
+  forward(mode='train')    -> logits
+  forward(mode='prefill')  -> logits + decode-ready cache
+  decode_step              -> next-token logits + updated cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockDef, ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, bd: BlockDef, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": L.init_norm(ks[0], cfg.d_model, cfg.norm, dtype)}
+    if bd.mixer in ("attn", "swa", "bidir"):
+        p["mixer"] = L.init_attention(ks[1], cfg, dtype)
+    elif bd.mixer == "mla":
+        p["mixer"] = L.init_mla(ks[1], cfg, dtype)
+    elif bd.mixer == "xattn":
+        p["mixer"] = L.init_cross_attention(ks[1], cfg, dtype)
+    elif bd.mixer == "dec":
+        p["mixer"] = L.init_attention(ks[1], cfg, dtype)
+        p["cross"] = L.init_cross_attention(ks[2], cfg, dtype)
+        p["norm_cross"] = L.init_norm(ks[3], cfg.d_model, cfg.norm, dtype)
+    elif bd.mixer == "rglru":
+        p["mixer"] = L.init_rglru_block(ks[1], cfg, dtype)
+    elif bd.mixer == "mlstm":
+        p["mixer"] = L.init_mlstm(ks[1], cfg, dtype)
+    elif bd.mixer == "slstm":
+        p["mixer"] = L.init_slstm(ks[1], cfg, dtype)
+    else:
+        raise ValueError(bd.mixer)
+    if bd.ffn != "none":
+        p["norm2"] = L.init_norm(ks[4], cfg.d_model, cfg.norm, dtype)
+        if bd.ffn == "dense":
+            p["ffn"] = L.init_mlp(ks[5], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+        elif bd.ffn == "moe":
+            p["ffn"] = L.init_moe(ks[5], cfg, dtype)
+        elif bd.ffn == "dense_moe":
+            p["ffn"] = L.init_moe(ks[5], cfg, dtype)
+            p["ffn_dense"] = L.init_mlp(
+                ks[6], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype
+            )
+        else:
+            raise ValueError(bd.ffn)
+    return p
+
+
+def _init_segment(key, pattern, n_periods, cfg, dtype):
+    def one(k):
+        kk = jax.random.split(k, len(pattern))
+        return tuple(_init_block(kk[j], bd, cfg, dtype) for j, bd in enumerate(pattern))
+
+    return jax.vmap(one)(jax.random.split(key, n_periods))
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = cfg.jdtype
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), dtype)
+        * cfg.d_model ** -0.5,
+        "final_norm": L.init_norm(ks[1], cfg.d_model, cfg.norm, dtype),
+        "segments": [
+            _init_segment(k, pat, n, cfg, dtype)
+            for k, (pat, n) in zip(
+                jax.random.split(ks[2], max(len(cfg.segments()), 1)), cfg.segments()
+            )
+        ],
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+            * cfg.d_model ** -0.5
+        )
+    if cfg.enc_layers:
+        p["enc_segments"] = [
+            _init_segment(k, pat, n, cfg, dtype)
+            for k, (pat, n) in zip(
+                jax.random.split(ks[4], len(cfg.enc_segments())), cfg.enc_segments()
+            )
+        ]
+        p["enc_final_norm"] = L.init_norm(ks[5], cfg.d_model, cfg.norm, dtype)
+    if cfg.frontend and cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+        p["frontend_proj"] = (
+            jax.random.normal(ks[6], (cfg.frontend_dim, cfg.d_model), dtype)
+            * cfg.frontend_dim ** -0.5
+        )
+    if cfg.mtp:
+        # DeepSeek-V3 MTP (depth 1): RMSNorm(h) ++ RMSNorm(emb(next)) -> proj
+        # -> one extra block -> shared head predicts token t+2
+        km = jax.random.split(ks[7], 3)
+        p["mtp"] = {
+            "proj": jax.random.normal(km[0], (2 * cfg.d_model, cfg.d_model),
+                                      dtype) * (2 * cfg.d_model) ** -0.5,
+            "norm_h": L.init_norm(km[1], cfg.d_model, cfg.norm, dtype),
+            "norm_e": L.init_norm(km[1], cfg.d_model, cfg.norm, dtype),
+            "block": _init_block(km[2], cfg.pattern[-1], cfg, dtype),
+        }
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _block_cache(bd: BlockDef, cfg: ModelConfig, b: int, cache_len: int, dtype):
+    hkv, dh = cfg.num_kv_heads, cfg.hd
+    if bd.mixer in ("attn", "bidir"):
+        return {"k": jnp.zeros((b, hkv, cache_len, dh), dtype),
+                "v": jnp.zeros((b, hkv, cache_len, dh), dtype)}
+    if bd.mixer == "swa":
+        w = min(cfg.window, cache_len)
+        return {"k": jnp.zeros((b, hkv, w, dh), dtype),
+                "v": jnp.zeros((b, hkv, w, dh), dtype)}
+    if bd.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((b, cache_len, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((b, cache_len, m.qk_rope_dim), dtype)}
+    if bd.mixer == "dec":
+        mt = cfg.n_frontend_tokens
+        return {
+            "k": jnp.zeros((b, hkv, cache_len, dh), dtype),
+            "v": jnp.zeros((b, hkv, cache_len, dh), dtype),
+            "xk": jnp.zeros((b, hkv, mt, dh), dtype),
+            "xv": jnp.zeros((b, hkv, mt, dh), dtype),
+        }
+    if bd.mixer == "xattn":
+        mt = cfg.n_frontend_tokens
+        return {"xk": jnp.zeros((b, hkv, mt, dh), dtype),
+                "xv": jnp.zeros((b, hkv, mt, dh), dtype)}
+    if bd.mixer == "rglru":
+        w = cfg.rec_width or cfg.d_model
+        return {"h": jnp.zeros((b, w), dtype), "conv": jnp.zeros((b, 3, w), dtype)}
+    if bd.mixer == "mlstm":
+        up = 2 * cfg.d_model
+        dhm = up // cfg.num_heads
+        return {"C": jnp.zeros((b, cfg.num_heads, dhm, dhm), F32),
+                "n": jnp.zeros((b, cfg.num_heads, dhm), F32),
+                "m": jnp.full((b, cfg.num_heads), -1e30, F32)}
+    if bd.mixer == "slstm":
+        d = cfg.d_model
+        z = lambda: jnp.zeros((b, d), F32)
+        return {"c": z(), "n": z(), "h": z(), "m": jnp.full((b, d), -1e30, F32)}
+    raise ValueError(bd.mixer)
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Params:
+    """Zeroed decode cache (use under jax.eval_shape for the dry-run)."""
+    dtype = cfg.jdtype
+
+    def seg_cache(pat, n):
+        def one(_):
+            return tuple(_block_cache(bd, cfg, batch, cache_len, dtype) for bd in pat)
+
+        return jax.vmap(one)(jnp.arange(n))
+
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "segments": [seg_cache(pat, n) for pat, n in cfg.segments()],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_block(
+    bd: BlockDef,
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+    cache: Optional[Params],
+    cache_pos: Optional[jnp.ndarray],
+    prefill_len: Optional[int],
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Returns (x, new_cache). In prefill mode (prefill_len set, cache None)
+    builds a fresh cache; in decode mode updates the given cache."""
+    h = L.apply_norm(x, p["norm1"], cfg.norm)
+    new_cache: Optional[Params] = None
+    b, s, _ = x.shape
+
+    def pad_kv(k, v, length):
+        buf = lambda t, Lc: jnp.zeros(
+            (b, cfg.num_kv_heads, Lc, cfg.hd), t.dtype
+        ).at[:, :, : t.shape[2]].set(t)
+        return buf(k, length), buf(v, length)
+
+    if bd.mixer in ("attn", "swa", "bidir"):
+        window = cfg.window if bd.mixer == "swa" else None
+        if cache is not None:
+            y, new_cache = L.attention(
+                p["mixer"], h, cfg, positions, bd.mixer != "bidir", window,
+                cache=cache, cache_pos=cache_pos,
+            )
+        else:
+            y, _ = L.attention(
+                p["mixer"], h, cfg, positions, bd.mixer != "bidir", window
+            )
+            if prefill_len is not None:
+                # rebuild k/v for the cache (cheap vs attention itself)
+                k = L._proj(h, p["mixer"]["wk"], p["mixer"].get("bk"))
+                v = L._proj(h, p["mixer"]["wv"], p["mixer"].get("bv"))
+                k = k.reshape(b, s, cfg.num_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+                v = v.reshape(b, s, cfg.num_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+                if cfg.qk_norm:
+                    k = L.rms_norm(k, p["mixer"]["knorm"]["w"])
+                if cfg.rope_theta:
+                    k = L.rope(k, positions, cfg.rope_theta)
+                if window is not None:
+                    w = min(cfg.window, prefill_len)
+                    # last w tokens land at slots (pos % w) — static perm
+                    keep = k[:, :, max(0, s - w):]
+                    vkeep = v[:, :, max(0, s - w):]
+                    idx = (jnp.arange(max(0, s - w), s) % w)
+                    kc = jnp.zeros((b, cfg.num_kv_heads, w, cfg.hd), k.dtype
+                                   ).at[:, :, idx].set(keep)
+                    vc = jnp.zeros((b, cfg.num_kv_heads, w, cfg.hd), v.dtype
+                                   ).at[:, :, idx].set(vkeep)
+                    new_cache = {"k": kc, "v": vc}
+                else:
+                    kc, vc = pad_kv(k, v, prefill_len)
+                    new_cache = {"k": kc, "v": vc}
+    elif bd.mixer == "mla":
+        if cache is not None:
+            y, new_cache = L.mla_attention(
+                p["mixer"], h, cfg, positions, cache=cache, cache_pos=cache_pos
+            )
+        else:
+            y, _ = L.mla_attention(p["mixer"], h, cfg, positions)
+            if prefill_len is not None:
+                m = cfg.mla
+                kv_a = L.matmul(h, p["mixer"]["wkv_a"])
+                ckv = L.rms_norm(kv_a[..., : m.kv_lora_rank],
+                                 p["mixer"]["kv_norm"]["w"])
+                krope = L.rope(kv_a[..., None, :, m.kv_lora_rank:],
+                               positions, cfg.rope_theta)[:, 0]
+                padto = lambda t: jnp.zeros(
+                    (b, prefill_len, t.shape[-1]), t.dtype
+                ).at[:, : t.shape[1]].set(t)
+                new_cache = {"ckv": padto(ckv), "krope": padto(krope)}
+    elif bd.mixer == "xattn":
+        xc = None if cache is None else {"k": cache["xk"], "v": cache["xv"]}
+        y, xc = L.cross_attention(p["mixer"], h, memory, cfg, gated=True, cache=xc)
+        if cache is not None or prefill_len is not None:
+            new_cache = {"xk": xc["k"], "xv": xc["v"]}
+    elif bd.mixer == "dec":
+        sc = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+        y, sc_new = L.attention(
+            p["mixer"], h, cfg, positions, True, None,
+            cache=sc, cache_pos=cache_pos,
+        )
+        x = x + y
+        h2 = L.apply_norm(x, p["norm_cross"], cfg.norm)
+        xc = None if cache is None else {"k": cache["xk"], "v": cache["xv"]}
+        y, xc = L.cross_attention(p["cross"], h2, memory, cfg, gated=False, cache=xc)
+        if cache is not None:
+            new_cache = {"k": sc_new["k"], "v": sc_new["v"],
+                         "xk": xc["k"], "xv": xc["v"]}
+        elif prefill_len is not None:
+            k = L._proj(h, p["mixer"]["wk"], p["mixer"].get("bk"))
+            v = L._proj(h, p["mixer"]["wv"], p["mixer"].get("bv"))
+            k = k.reshape(b, s, cfg.num_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+            v = v.reshape(b, s, cfg.num_kv_heads, cfg.hd).transpose(0, 2, 1, 3)
+            if cfg.rope_theta:
+                k = L.rope(k, positions, cfg.rope_theta)
+            kc, vc = pad_kv(k, v, prefill_len)
+            new_cache = {"k": kc, "v": vc, "xk": xc["k"], "xv": xc["v"]}
+    elif bd.mixer == "rglru":
+        if cache is None and prefill_len is not None:
+            w = cfg.rec_width or cfg.d_model
+            cache = {"h": jnp.zeros((b, w), h.dtype),
+                     "conv": jnp.zeros((b, 3, w), h.dtype)}
+        y, new_cache = L.rglru_block(p["mixer"], h, cfg, cache=cache)
+    elif bd.mixer == "mlstm":
+        want_state = cache is None and prefill_len is not None
+        y, new_cache = L.mlstm_block(p["mixer"], h, cfg, cache=cache,
+                                     return_state=want_state)
+    elif bd.mixer == "slstm":
+        if cache is None and prefill_len is not None:
+            d = cfg.d_model
+            cache = {"c": jnp.zeros((b, d), F32), "n": jnp.zeros((b, d), F32),
+                     "h": jnp.zeros((b, d), F32), "m": jnp.full((b, d), -1e30, F32)}
+        y, new_cache = L.slstm_block(p["mixer"], h, cfg, cache=cache)
+    else:
+        raise ValueError(bd.mixer)
+    x = x + y
+
+    if bd.ffn != "none":
+        h = L.apply_norm(x, p["norm2"], cfg.norm)
+        if bd.ffn == "dense":
+            y = L.mlp(p["ffn"], h, cfg.activation)
+        elif bd.ffn == "moe":
+            y = L.moe(p["ffn"], h, cfg)
+        else:  # dense_moe (Arctic): parallel residual MLP + MoE
+            y = L.mlp(p["ffn_dense"], h, cfg.activation) + L.moe(p["ffn"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Segment scan
+# ---------------------------------------------------------------------------
+
+def _run_segments(
+    params_segs: List[Params],
+    segs,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+    cache_segs: Optional[List[Params]],
+    cache_pos: Optional[jnp.ndarray],
+    prefill_len: Optional[int],
+):
+    """Scan x through all segments; returns (x, new_cache_segs or None)."""
+    out_caches = []
+    want_cache = cache_segs is not None or prefill_len is not None
+    for si, (pat, n) in enumerate(segs):
+        pseg = params_segs[si]
+        cseg = None if cache_segs is None else cache_segs[si]
+
+        def body(carry, per, pat=pat):
+            xx = carry
+            if cseg is None:
+                pp, cc = per, (None,) * len(pat)
+            else:
+                pp, cc = per
+            new_cc = []
+            for j, bd in enumerate(pat):
+                if cfg.seq_shard and xx.shape[1] > 1:
+                    from repro.distributed.sp import seq_constraint
+
+                    xx = seq_constraint(xx)
+                xx, c = _apply_block(
+                    bd, pp[j], xx, cfg, positions, memory, cc[j],
+                    cache_pos, prefill_len,
+                )
+                new_cc.append(c)
+            out = tuple(new_cc) if want_cache else None
+            return xx, out
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        elif cfg.remat == "block_save_flash":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "flash_out"),
+            )
+        if cfg.scan_layers:
+            xs = pseg if cseg is None else (pseg, cseg)
+            x, newc = jax.lax.scan(body, x, xs)
+        else:
+            newcs = []
+            for i in range(n):
+                per = jax.tree.map(lambda t: t[i], pseg)
+                if cseg is not None:
+                    per = (per, jax.tree.map(lambda t: t[i], cseg))
+                x, nc = body(x, per)
+                newcs.append(nc)
+            newc = (
+                jax.tree.map(lambda *ts: jnp.stack(ts), *newcs)
+                if want_cache else None
+            )
+        out_caches.append(newc)
+    return x, (out_caches if want_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=F32) * (jnp.log(10_000.0) / (half - 1)))
+    ang = positions[:, None].astype(F32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _encode(params: Params, cfg: ModelConfig, frontend_embeds: jnp.ndarray):
+    """Encoder stack (Whisper) over frontend-stub embeddings."""
+    x = frontend_embeds.astype(cfg.jdtype)
+    if "frontend_proj" in params:
+        x = L.matmul(x, params["frontend_proj"])
+    mpos = jnp.arange(x.shape[1])
+    if not cfg.rope_theta:
+        x = x + _sinusoid(mpos, cfg.d_model)[None].astype(x.dtype)
+    x, _ = _run_segments(
+        params["enc_segments"], cfg.enc_segments(), x, cfg, mpos,
+        None, None, None, None,
+    )
+    return L.apply_norm(x, params["enc_final_norm"], cfg.norm)
+
+
+def _memory(params: Params, cfg: ModelConfig, frontend_embeds):
+    if frontend_embeds is None:
+        return None
+    if cfg.enc_layers:
+        return _encode(params, cfg, frontend_embeds)
+    x = frontend_embeds.astype(cfg.jdtype)
+    if "frontend_proj" in params:
+        x = L.matmul(x, params["frontend_proj"])
+    return x
+
+
+def _logits(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = L.apply_norm(x, params["final_norm"], cfg.norm)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jax.lax.dot_general(
+        x, head, (((2,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S) int32
+    frontend_embeds: Optional[jnp.ndarray] = None,  # (B, M, fd)
+    mode: str = "train",
+    cache_len: Optional[int] = None,
+):
+    """mode='train' -> logits; mode='prefill' -> (logits, cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] * (cfg.emb_scale or 1.0)
+    x = x.astype(cfg.jdtype)
+    positions = jnp.arange(s)
+    if not cfg.rope_theta:
+        x = x + _sinusoid(positions, cfg.d_model)[None].astype(x.dtype)
+    memory = _memory(params, cfg, frontend_embeds)
+    prefill_len = cache_len if mode == "prefill" else None
+    x, caches = _run_segments(
+        params["segments"], cfg.segments(), x, cfg, positions, memory,
+        None, None, prefill_len,
+    )
+    logits = _logits(params, cfg, x)
+    if mode == "prefill":
+        cache = {"pos": jnp.asarray(s, jnp.int32), "segments": caches}
+        return logits, cache
+    return logits
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) int32
+    cache: Params,
+    frontend_embeds: Optional[jnp.ndarray] = None,
+):
+    """One decode step; returns (logits (B,1,V), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"][token] * (cfg.emb_scale or 1.0)
+    x = x.astype(cfg.jdtype)
+    positions = pos[None]
+    if not cfg.rope_theta:
+        x = x + _sinusoid(positions, cfg.d_model)[None].astype(x.dtype)
+    memory = _memory(params, cfg, frontend_embeds)
+    x, caches = _run_segments(
+        params["segments"], cfg.segments(), x, cfg, positions, memory,
+        cache["segments"], pos, None,
+    )
+    logits = _logits(params, cfg, x)
+    return logits, {"pos": pos + 1, "segments": caches}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def _ce(logits, targets, z_loss):
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (targets >= 0).astype(F32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    targets: jnp.ndarray,  # (B, S); -1 = ignore
+    frontend_embeds: Optional[jnp.ndarray] = None,
+    z_loss: float = 1e-4,
+) -> jnp.ndarray:
+    b, s = tokens.shape
+    x = params["embed"][tokens] * (cfg.emb_scale or 1.0)
+    x = x.astype(cfg.jdtype)
+    positions = jnp.arange(s)
+    if not cfg.rope_theta:
+        x = x + _sinusoid(positions, cfg.d_model)[None].astype(x.dtype)
+    memory = _memory(params, cfg, frontend_embeds)
+    h, _ = _run_segments(
+        params["segments"], cfg.segments(), x, cfg, positions, memory,
+        None, None, None,
+    )
+    loss = _ce(_logits(params, cfg, h), targets, z_loss)
+    if cfg.mtp and "mtp" in params:
+        # predict token t+2 from (h_t, emb of token t+1) — DeepSeek-V3 MTP
+        mp = params["mtp"]
+        nh = L.apply_norm(h[:, :-1], mp["norm_h"], cfg.norm)
+        ne = L.apply_norm(x[:, 1:], mp["norm_e"], cfg.norm)
+        z = L.matmul(jnp.concatenate([nh, ne], axis=-1), mp["proj"])
+        z, _ = _apply_block(cfg.pattern[-1], mp["block"], z, cfg,
+                            positions[:-1], memory, None, None, None)
+        mtp_targets = jnp.concatenate(
+            [targets[:, 1:], jnp.full((b, 1), -1, targets.dtype)], axis=1
+        )[:, :-1]
+        loss = loss + cfg.mtp_weight * _ce(
+            _logits(params, cfg, z), mtp_targets, z_loss)
+    return loss

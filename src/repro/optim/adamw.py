@@ -1,0 +1,86 @@
+"""AdamW with global-norm clipping, pure JAX (no optax dependency).
+
+State is a pytree mirroring params (m, v in fp32) plus a step count.
+ZeRO-1 sharding of (m, v) over the data axis is expressed through
+`repro.distributed.sharding.zero1_spec` — the update itself is sharding-
+agnostic (GSPMD partitions the elementwise ops wherever the state lives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4  # peak; multiplied by the schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jnp.zeros(t.shape, F32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(params):
+    return jax.eval_shape(init_state, params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_update(
+    params,
+    grads,
+    state,
+    cfg: AdamWConfig,
+    schedule_scale: jnp.ndarray,  # scalar in [0, 1] from the LR schedule
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (params, state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** count.astype(F32)
+    b2c = 1.0 - cfg.b2 ** count.astype(F32)
+    lr = cfg.lr * schedule_scale
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * gf
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(gf)
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(tdef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(tdef, [o[2] for o in out]),
+        "count": count,
+    }
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,43 @@
+"""LR schedules as scalar-in/scalar-out jax functions (scale in [0,1]).
+
+Includes WSD (warmup-stable-decay) — MiniCPM's schedule — alongside the
+standard cosine/linear ramps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def cosine(step, total_steps: int, warmup: int = 0, final: float = 0.1):
+    s = jnp.asarray(step, F32)
+    w = jnp.clip(s / jnp.maximum(warmup, 1), 0.0, 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+    cos = final + (1 - final) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, w, cos)
+
+
+def linear(step, total_steps: int, warmup: int = 0, final: float = 0.0):
+    s = jnp.asarray(step, F32)
+    w = jnp.clip(s / jnp.maximum(warmup, 1), 0.0, 1.0)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+    return jnp.where(s < warmup, w, 1.0 - (1.0 - final) * prog)
+
+
+def wsd(step, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.10, final: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395 §4): linear warmup,
+    long flat stage, then a short exponential-ish (we use cosine) decay."""
+    s = jnp.asarray(step, F32)
+    wu = max(int(total_steps * warmup_frac), 1)
+    dec = max(int(total_steps * decay_frac), 1)
+    stable_end = total_steps - dec
+    warm = s / wu
+    prog = jnp.clip((s - stable_end) / dec, 0.0, 1.0)
+    decay = final + (1 - final) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < wu, warm, jnp.where(s < stable_end, 1.0, decay))
+
+
+def get(kind: str):
+    return {"cosine": cosine, "linear": linear, "wsd": wsd}[kind]

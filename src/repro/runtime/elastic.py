@@ -1,0 +1,77 @@
+"""Elastic membership via the paper's protocols (DESIGN.md §2).
+
+Hosts/pods are peers on a virtual ring: host h gets address h * 2^d / H.
+The binary-tree position algebra then gives every host its control-tree
+neighbors (UP/CW/CCW) *locally* — no membership service — and Alg. 2 tells
+us exactly which hosts must re-wire when one joins or leaves (≤ 5, Lemma 5).
+
+This module drives the *control plane*: the data plane (mesh shapes for
+XLA) still needs a full re-compile on membership change, but the control
+tree survives arbitrary churn with O(1) local updates — it is what carries
+heartbeats, violation votes (threshold_sync) and straggler reports between
+sync points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import addressing as A
+from repro.core.dht import Ring
+from repro.core import notify as N
+
+D_BITS = 32
+
+
+@dataclasses.dataclass
+class Membership:
+    """Current host set, as a ring of equally-spaced addresses."""
+
+    host_ids: List[int]  # stable, sorted host identifiers
+
+    def ring(self) -> Ring:
+        # equal spacing by rank keeps the tree perfectly balanced for 2^k
+        n = len(self.host_ids)
+        spacing = (1 << D_BITS) // n
+        addrs = (np.arange(n, dtype=np.uint64) * np.uint64(spacing))
+        return Ring(addrs, D_BITS)
+
+    def tree_neighbors(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        ring = self.ring()
+        return A.tree_neighbors_reference(ring.addrs, D_BITS)
+
+    def affected_by_leave(self, host_rank: int) -> List[int]:
+        """Ranks whose control-tree neighbors change if `host_rank` leaves
+        (computed via Alg. 2 on the post-change ring)."""
+        ring = self.ring()
+        after = ring.leave(host_rank)
+        notifs = N.notify_leave(after, ring, host_rank)
+        # post-ring indices >= host_rank shift by +1 back to pre-ring ranks
+        return sorted({p if p < host_rank else p + 1 for p, _ in notifs})
+
+    def affected_by_join(self) -> List[int]:
+        """Ranks alerted when a new host joins at the end of the ring."""
+        ring = self.ring()
+        new_addr = int(ring.addrs[-1]) + (A.mask_of(D_BITS) - int(ring.addrs[-1])) // 2
+        after, new_idx = ring.join(new_addr)
+        notifs = N.notify_join(after, new_idx)
+        return sorted({p for p, _ in notifs})
+
+
+def remesh_plan(old_hosts: int, new_hosts: int, dp: int, tp: int) -> Dict:
+    """Recompute the (data, model) mesh after churn.
+
+    Keeps TP intact (model-parallel groups must be co-located) and shrinks/
+    grows the DP axis; returns the plan the trainer uses to rebuild meshes
+    and re-shard the checkpoint (ckpt.restore handles the data movement).
+    """
+    assert new_hosts * dp * tp > 0
+    new_dp = max(1, dp * new_hosts // max(old_hosts, 1))
+    return {
+        "old": {"hosts": old_hosts, "dp": dp, "tp": tp},
+        "new": {"hosts": new_hosts, "dp": new_dp, "tp": tp},
+        "recompile": True,
+        "reshard_via_checkpoint": True,
+    }

@@ -1,0 +1,77 @@
+"""Failure detection, restart policy, straggler mitigation.
+
+On a real pod this sits in the per-host agent; here the same logic is
+driven by the single-process trainer and validated with injected failures
+(tests + examples/elastic_failover.py). The pieces:
+
+  * HeartbeatMonitor — per-host last-seen timestamps over the control tree
+    (a host's heartbeat travels UP the paper's binary tree: O(log H) hops,
+    and a missing host is noticed by exactly its tree neighbors — Lemma 5
+    keeps the blast radius of a membership change at <= 5 re-wires).
+  * RestartPolicy — exponential backoff with a budget; decides
+    resume-from-checkpoint vs abort.
+  * StragglerTracker — per-host step-time EWMA; hosts slower than
+    `ratio` x median are flagged. With threshold_sync the flagged host
+    simply misses the vote window (the paper's "we prefer wasting those
+    messages") instead of stalling the barrier; with plain DP the trainer
+    excludes it at the next re-mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 30.0
+    last_seen: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, host: int, now: Optional[float] = None):
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return [h for h, s in self.last_seen.items() if t - s > self.timeout_s]
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 5
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+    restarts: int = 0
+
+    def next_delay(self) -> Optional[float]:
+        """None => give up."""
+        if self.restarts >= self.max_restarts:
+            return None
+        d = self.backoff_s * (self.backoff_mult ** self.restarts)
+        self.restarts += 1
+        return d
+
+    def reset(self):
+        self.restarts = 0
+
+
+@dataclasses.dataclass
+class StragglerTracker:
+    alpha: float = 0.2
+    ratio: float = 1.8
+    ewma: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def record(self, host: int, step_time_s: float):
+        prev = self.ewma.get(host)
+        self.ewma[host] = (
+            step_time_s if prev is None
+            else (1 - self.alpha) * prev + self.alpha * step_time_s
+        )
+
+    def stragglers(self) -> List[int]:
+        if len(self.ewma) < 2:
+            return []
+        med = float(np.median(list(self.ewma.values())))
+        return [h for h, t in self.ewma.items() if t > self.ratio * med]

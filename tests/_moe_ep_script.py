@@ -1,0 +1,36 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.simplefilter("ignore")
+import dataclasses
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs.registry import get_smoke_config
+from repro.models.layers import init_moe, moe
+from repro.distributed.moe_ep import set_moe_mesh
+
+cfg0 = get_smoke_config("deepseek-v3-671b")
+# 8 experts over model axis 4 -> 2 experts/shard; generous capacity = no drop
+cfg_g = dataclasses.replace(cfg0, moe=dataclasses.replace(cfg0.moe, capacity_factor=8.0, impl="gather"))
+cfg_e = dataclasses.replace(cfg0, moe=dataclasses.replace(cfg0.moe, capacity_factor=8.0, impl="ep_a2a"))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+p = init_moe(jax.random.PRNGKey(1), cfg_g, jnp.float32)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((4, 16, cfg0.d_model)), jnp.float32)
+
+set_moe_mesh(mesh, ("data",), "model")
+with mesh:
+    xg = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+    y_g = jax.jit(lambda p, x: moe(p, x, cfg_g))(p, xg)
+    y_e = jax.jit(lambda p, x: moe(p, x, cfg_e))(p, xg)
+    err = float(jnp.max(jnp.abs(y_g - y_e)))
+    print("fwd err:", err, "scale:", float(jnp.max(jnp.abs(y_g))))
+    assert err < 1e-4 * (float(jnp.max(jnp.abs(y_g))) + 1)
+    g_g = jax.jit(jax.grad(lambda p, x: (moe(p, x, cfg_g)**2).sum()))(p, xg)
+    g_e = jax.jit(jax.grad(lambda p, x: (moe(p, x, cfg_e)**2).sum()))(p, xg)
+    for k in ("router", "w_gate", "w_up", "w_down"):
+        e = float(jnp.max(jnp.abs(g_g[k] - g_e[k])))
+        s = float(jnp.max(jnp.abs(g_g[k]))) + 1e-9
+        print(f"grad {k}: relerr {e/s:.2e}")
+        assert e / s < 1e-3, k
+print("MOE_EP_OK")

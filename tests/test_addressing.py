@@ -1,0 +1,149 @@
+"""Property tests for the paper's address algebra (paper §2, Appendix A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import addressing as A
+from repro.core.dht import Ring
+
+D = 16
+MASK = A.mask_of(D)
+
+addr = st.integers(min_value=1, max_value=MASK)
+
+
+@given(addr)
+@settings(max_examples=200, deadline=None)
+def test_up_inverts_children(a):
+    a = np.uint64(a)
+    if not bool(A.is_leaf(a)):
+        assert int(A.up(A.cw(a, D), D)) == int(a)
+        assert int(A.up(A.ccw(a, D), D)) == int(a)
+
+
+@given(addr)
+@settings(max_examples=200, deadline=None)
+def test_up_chain_reaches_root(a):
+    cur = np.uint64(a)
+    for _ in range(D + 1):
+        if int(cur) == 0:
+            return
+        nxt = A.up(cur, D)
+        # parent is strictly more aligned
+        assert int(A.lowbit(nxt)) > int(A.lowbit(cur)) or int(nxt) == 0
+        cur = nxt
+    assert int(cur) == 0
+
+
+@given(addr, addr)
+@settings(max_examples=300, deadline=None)
+def test_subtree_membership_vs_up_walk(x, y):
+    """in_subtree(x, y) iff repeatedly applying UP to y reaches x."""
+    xs, ys = np.uint64(x), np.uint64(y)
+    cur, reaches = ys, False
+    for _ in range(D + 2):
+        if int(cur) == int(xs):
+            reaches = True
+            break
+        if int(cur) == 0:
+            break
+        cur = A.up(cur, D)
+    if int(xs) == 0:
+        reaches = True  # root's subtree is everything
+    assert bool(A.in_subtree(xs, ys, D)) == reaches
+
+
+@given(addr, addr)
+@settings(max_examples=300, deadline=None)
+def test_cw_ccw_subtrees_partition(x, y):
+    xs, ys = np.uint64(x), np.uint64(y)
+    if int(xs) == int(ys):
+        return
+    inside = bool(A.in_subtree(xs, ys, D))
+    cw = bool(A.in_cw_subtree(xs, ys, D))
+    ccw = bool(A.in_ccw_subtree(xs, ys, D))
+    assert (cw + ccw) == (1 if inside else 0)
+
+
+@given(st.integers(0, MASK), st.integers(0, MASK))
+@settings(max_examples=300, deadline=None)
+def test_position_most_aligned_in_segment(prev, self_):
+    """Lemma: the position is the unique most-aligned address in (prev, self]."""
+    if prev == self_:
+        return
+    p = int(A.position_from_segment(np.uint64(prev), np.uint64(self_), D))
+    if prev >= self_:
+        assert p == 0  # wrapped segment owns address 0
+        return
+    assert prev < p <= self_
+    tz = int(A.trailing_zeros(np.uint64(p), D))
+    for cand in range(prev + 1, self_ + 1):
+        if cand != p:
+            assert int(A.trailing_zeros(np.uint64(cand), D)) <= tz
+
+
+def test_jax_matches_numpy():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    a32 = rng.integers(1, 2**20, 500, dtype=np.uint64).astype(np.uint32)
+    jj = jnp.asarray(a32)
+    d = 20
+    np.testing.assert_array_equal(np.asarray(A.up(jj, d)), A.up(a32, d))
+    np.testing.assert_array_equal(np.asarray(A.cw(jj, d)), A.cw(a32, d))
+    np.testing.assert_array_equal(np.asarray(A.ccw(jj, d)), A.ccw(a32, d))
+    np.testing.assert_array_equal(
+        np.asarray(A.lowbit(jj)), A.lowbit(a32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(A.in_subtree(jj, jj[::-1].copy(), d)),
+        A.in_subtree(a32, a32[::-1], d),
+    )
+
+
+def test_ring_positions_unique_and_in_segment():
+    ring = Ring.random(5000, 48, seed=3)
+    pos = ring.positions()
+    assert np.unique(pos).size == ring.n
+    prev = ring.prev
+    inseg = (pos <= ring.addrs) & (pos > prev)
+    inseg[np.argmin(ring.addrs)] = True  # wrapped root segment
+    assert inseg.all()
+
+
+def test_lemma1_subtree_segments_continuous():
+    """Lemma 1: peers in any subtree own a continuous address range."""
+    ring = Ring.random(400, 32, seed=1)
+    pos = ring.positions()
+    order = np.argsort(ring.addrs)
+    for i in range(0, ring.n, 37):
+        root = pos[i]
+        member = A.in_subtree(np.uint64(root), pos, 32)
+        idx = np.sort(np.nonzero(member)[0])
+        if idx.size > 1:
+            assert (np.diff(idx) == 1).all(), "subtree peers not contiguous"
+
+
+def test_tree_depth_bound():
+    """Paper §4.1: no peer deeper than log2(N) + 6 (we allow +7 slack)."""
+    ring = Ring.random(20_000, 64, seed=2)
+    up_n, _, _ = A.tree_neighbors_reference(ring.addrs, 64)
+    depth = np.zeros(ring.n, np.int64)
+    # BFS from root
+    from collections import defaultdict, deque
+
+    ch = defaultdict(list)
+    for i, u in enumerate(up_n):
+        if u >= 0:
+            ch[int(u)].append(i)
+    root = int(np.argmin(ring.addrs))
+    q = deque([root])
+    seen = 1
+    while q:
+        x = q.popleft()
+        for c in ch[x]:
+            depth[c] = depth[x] + 1
+            q.append(c)
+            seen += 1
+    assert seen == ring.n, "tree disconnected"
+    assert depth.max() <= np.log2(ring.n) + 7

@@ -1,0 +1,49 @@
+"""Fused Alg. 3 kernel: equality with the jnp oracle AND the numpy
+simulator state machine — three implementations, one semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.majority import MajorityState
+from repro.kernels.majority_step.ops import majority_step
+from repro.kernels.majority_step.ref import majority_step_reference
+
+
+@pytest.mark.parametrize("n", [8, 17, 1000, 5000])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_kernel_vs_ref_vs_simulator(n, seed):
+    rng = np.random.default_rng(seed)
+    io = jnp.asarray(rng.integers(0, 50, (n, 3)), jnp.int32)
+    it = io + jnp.asarray(rng.integers(0, 50, (n, 3)), jnp.int32)
+    oo = jnp.asarray(rng.integers(0, 50, (n, 3)), jnp.int32)
+    ot = oo + jnp.asarray(rng.integers(0, 50, (n, 3)), jnp.int32)
+    x = jnp.asarray(rng.integers(0, 2, (n,)), jnp.int32)
+    k = majority_step(io, it, oo, ot, x)
+    r = majority_step_reference(io, it, oo, ot, x)
+    for a, b in zip(k, r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    st = MajorityState(n, np.asarray(x, np.int64))
+    st.X_in[:, :, 0] = np.asarray(io)
+    st.X_in[:, :, 1] = np.asarray(it)
+    st.X_out[:, :, 0] = np.asarray(oo)
+    st.X_out[:, :, 1] = np.asarray(ot)
+    np.testing.assert_array_equal(np.asarray(k[0]), st.violations())
+    np.testing.assert_array_equal(np.asarray(k[1]), st.outputs())
+
+
+def test_send_payload_resolves_violation():
+    """After Send(v) (X_out <- K - X_in), the direction's violation clears."""
+    rng = np.random.default_rng(7)
+    n = 500
+    io = jnp.asarray(rng.integers(0, 20, (n, 3)), jnp.int32)
+    it = io + jnp.asarray(rng.integers(0, 20, (n, 3)), jnp.int32)
+    oo = jnp.asarray(rng.integers(0, 20, (n, 3)), jnp.int32)
+    ot = oo + jnp.asarray(rng.integers(0, 20, (n, 3)), jnp.int32)
+    x = jnp.asarray(rng.integers(0, 2, (n,)), jnp.int32)
+    viol, out, po, pt = majority_step(io, it, oo, ot, x)
+    # apply Send on violated directions
+    oo2 = jnp.where(viol, po, oo)
+    ot2 = jnp.where(viol, pt, ot)
+    viol2, *_ = majority_step(io, it, oo2, ot2, x)
+    assert not bool((viol & viol2).any()), "Send did not resolve violation"

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests: one forward/train step on CPU, output
+shapes, finiteness; decode==teacher-forced-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import shapes_for, sub_quadratic
+from repro.models.model import (
+    decode_step, forward, init_params, lm_loss, make_cache,
+)
+
+
+def _inputs(cfg, b, s, rng):
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    fe = None
+    if cfg.frontend:
+        fe = jnp.asarray(
+            rng.standard_normal((b, cfg.n_frontend_tokens, cfg.frontend_dim)),
+            jnp.float32,
+        )
+    return toks, fe
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    rng = np.random.default_rng(0)
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks, fe = _inputs(cfg, 2, 16, rng)
+    logits = forward(params, cfg, toks, fe, mode="train")
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, toks, toks, fe)
+    gn = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(float(loss)) and np.isfinite(gn), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_forward(arch):
+    rng = np.random.default_rng(1)
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        # capacity dropping is batch-size dependent; disable drops for the
+        # consistency check (the drop path is covered by test_moe_* below)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks, fe = _inputs(cfg, 2, 12, rng)
+    _, cache = forward(params, cfg, toks, fe, mode="prefill", cache_len=24)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 1)), jnp.int32)
+    dec, _ = decode_step(params, cfg, nxt, cache)
+    full = forward(params, cfg, jnp.concatenate([toks, nxt], 1), fe,
+                   mode="train")
+    scale = float(jnp.max(jnp.abs(full[:, -1]))) + 1e-9
+    err = float(jnp.max(jnp.abs(dec[:, 0] - full[:, -1]))) / scale
+    assert err < 5e-4, f"{arch}: decode diverges from forward ({err})"
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-350m"])
+def test_loss_decreases(arch):
+    from repro.launch.steps import make_train_step
+    from repro.optim.adamw import AdamWConfig, init_state
+
+    rng = np.random.default_rng(2)
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    opt_state = init_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), "cosine", 50))
+    toks, fe = _inputs(cfg, 4, 32, rng)
+    losses = []
+    for _ in range(8):
+        params, opt_state, m = step(params, opt_state, toks, toks)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_multi_step_decode_consistency():
+    """Five decode steps == teacher-forced forward on the concatenation."""
+    rng = np.random.default_rng(3)
+    cfg = get_smoke_config("recurrentgemma-9b")  # hybrid: hardest cache mix
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks, _ = _inputs(cfg, 1, 8, rng)
+    _, cache = forward(params, cfg, toks, mode="prefill", cache_len=32)
+    seq = [toks]
+    outs = []
+    cur = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 1)), jnp.int32)
+    for _ in range(5):
+        lg, cache = decode_step(params, cfg, cur, cache)
+        outs.append(lg[:, 0])
+        seq.append(cur)
+        cur = jnp.argmax(lg[:, 0:1, :], axis=-1).astype(jnp.int32)
+    full = forward(params, cfg, jnp.concatenate(seq, 1), mode="train")
+    for t, o in enumerate(outs):
+        ref = full[:, toks.shape[1] + t - 1 + 1]
+        err = float(jnp.max(jnp.abs(o - ref)))
+        assert err < 5e-4 * (float(jnp.max(jnp.abs(ref))) + 1), t
+
+
+def test_shapes_for_honours_subquadratic_rule():
+    assert len(shapes_for(get_config("recurrentgemma-9b"))) == 4
+    assert len(shapes_for(get_config("xlstm-350m"))) == 4
+    for a in ARCH_IDS:
+        if a in ("recurrentgemma-9b", "xlstm-350m"):
+            continue
+        assert len(shapes_for(get_config(a))) == 3, a
+        assert not sub_quadratic(get_config(a))
+
+
+def test_full_configs_param_counts():
+    """Full configs hit their advertised scale (abstract, no allocation)."""
+    import math
+    from repro.models.model import abstract_params
+
+    expected = {  # rough total-param targets (weights incl. embeddings)
+        "smollm-135m": (0.10e9, 0.2e9),
+        "gemma-7b": (7e9, 10e9),
+        "command-r-35b": (30e9, 40e9),
+        "deepseek-v3-671b": (6.3e11, 7.2e11),
+        "arctic-480b": (4.2e11, 5.2e11),
+        "xlstm-350m": (0.25e9, 0.55e9),  # qkv internals unspecified in pool
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "recurrentgemma-9b": (8e9, 11e9),
+        "minicpm-2b": (2.2e9, 3.3e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        n = sum(
+            math.prod(l.shape) for l in jax.tree.leaves(abstract_params(cfg))
+        )
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.25 and balanced-ish routing, most tokens survive."""
+    from repro.models.layers import init_moe, moe
+
+    rng = np.random.default_rng(4)
+    cfg = get_smoke_config("deepseek-v3-671b")
+    p = init_moe(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 64, cfg.d_model)), jnp.float32)
+    y = moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # shared expert guarantees non-zero output even for dropped tokens
+    assert float(jnp.abs(y).mean()) > 0

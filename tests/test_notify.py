@@ -1,0 +1,71 @@
+"""Alg. 2 change notification: Lemma-5 coverage under churn."""
+import numpy as np
+import pytest
+
+from repro.core import addressing as A
+from repro.core.dht import Ring
+from repro.core import notify as N
+
+
+def _neighbor_map(ring):
+    up, cw, ccw = A.tree_neighbors_reference(ring.addrs, ring.d)
+    g = lambda arr, i: (int(ring.addrs[arr[i]]) if arr[i] >= 0 else None)
+    return {int(ring.addrs[i]): (g(up, i), g(cw, i), g(ccw, i))
+            for i in range(ring.n)}
+
+
+@pytest.mark.parametrize("trial", range(12))
+def test_join_and_leave_coverage(trial):
+    rng = np.random.default_rng(trial)
+    n = int(rng.integers(6, 300))
+    ring = Ring.random(n, 32, seed=trial)
+    before = _neighbor_map(ring)
+
+    # ---- join ----
+    while True:
+        addr = int(rng.integers(0, 2**32 - 1))
+        if addr not in ring.addrs:
+            break
+    after_ring, new_idx = ring.join(addr)
+    after = _neighbor_map(after_ring)
+    notifs = N.notify_join(after_ring, new_idx)
+    alerted = {int(after_ring.addrs[p]) for p, _ in notifs}
+    changed = {a for a in before if before[a] != after[a] and a != addr}
+    succ = int(after_ring.addrs[(new_idx + 1) % after_ring.n])
+    assert len(changed) <= 6  # Lemma 5's five + the successor itself
+    assert not (changed - alerted - {succ, addr}), "un-notified affected peer"
+    assert len(notifs) <= 6  # at most six tree-routed ALERT messages
+
+    # ---- leave ----
+    li = int(rng.integers(0, ring.n))
+    ring_after = ring.leave(li)
+    left = int(ring.addrs[li])
+    after2 = _neighbor_map(ring_after)
+    notifs = N.notify_leave(ring_after, ring, li)
+    alerted = {int(ring_after.addrs[p]) for p, _ in notifs}
+    changed = {a for a in before if a != left and before[a] != after2.get(a)}
+    succ = int(ring.addrs[(li + 1) % ring.n])
+    assert len(changed) <= 6
+    assert not (changed - alerted - {succ}), "un-notified affected peer"
+
+
+def test_alert_direction_classification():
+    """ACCEPT upcall maps the alert position to the right local direction."""
+    ring = Ring.random(100, 32, seed=4)
+    pos = ring.positions()
+    up_n, cw_n, ccw_n = A.tree_neighbors_reference(ring.addrs, ring.d)
+    for i in range(ring.n):
+        p = int(pos[i])
+        if up_n[i] >= 0:
+            # my parent's position is my fore-parent -> direction UP
+            d = N.alert_direction(int(pos[up_n[i]]), p, ring.d,
+                                  ring.addrs.dtype.type)
+            assert d == A.UP
+        if cw_n[i] >= 0:
+            d = N.alert_direction(int(pos[cw_n[i]]), p, ring.d,
+                                  ring.addrs.dtype.type)
+            assert d == A.CW
+        if ccw_n[i] >= 0:
+            d = N.alert_direction(int(pos[ccw_n[i]]), p, ring.d,
+                                  ring.addrs.dtype.type)
+            assert d == A.CCW

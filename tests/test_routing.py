@@ -1,0 +1,83 @@
+"""Alg. 1 routing: exactness against Lemma-2 reference neighbors."""
+import numpy as np
+import pytest
+
+from repro.core import addressing as A
+from repro.core.dht import Ring, finger_tables, lookup_hops
+from repro.core import routing as R
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n", [2, 3, 9, 250])
+def test_route_reaches_reference_neighbor(seed, n):
+    ring = Ring.random(n, 24, seed=seed)
+    pos = ring.positions()
+    up_n, cw_n, ccw_n = A.tree_neighbors_reference(ring.addrs, ring.d)
+    ref = {A.UP: up_n, A.CW: cw_n, A.CCW: ccw_n}
+    for i in range(n):
+        for dr in (A.UP, A.CW, A.CCW):
+            got, trace = R.route(ring, i, dr, pos=pos)
+            want = ref[dr][i]
+            want = None if want < 0 else int(want)
+            assert got == want, (seed, n, i, dr)
+
+
+def test_batch_router_matches_reference_router():
+    ring = Ring.random(300, 32, seed=5)
+    pos = ring.positions()
+    peers = np.repeat(np.arange(300), 3)
+    dirs = np.tile(np.array([A.UP, A.CW, A.CCW]), 300)
+    valid, origin, dest, edge, has_edge = R.send_batch(ring, peers, dirs, pos=pos)
+    acc_peer = np.full(peers.shape, -1)
+    hops = np.zeros(peers.shape, np.int64)
+    o, de, e, he = origin.copy(), dest.copy(), edge.copy(), has_edge.copy()
+    live = valid.copy()
+    while live.any():
+        li = np.nonzero(live)[0]
+        st, owner, nd, ne, nhe = R.step_batch(ring, o[li], de[li], e[li], he[li], pos=pos)
+        hops[li] += 1
+        acc_peer[li[st == R.ACCEPT]] = owner[st == R.ACCEPT]
+        live[li[st != R.FORWARD]] = False
+        de[li], e[li], he[li] = nd, ne, nhe
+    for q in range(peers.shape[0]):
+        want, trace = R.route(ring, int(peers[q]), int(dirs[q]), pos=pos)
+        got = int(acc_peer[q]) if acc_peer[q] >= 0 else None
+        assert got == want
+        if want is not None:
+            assert hops[q] == len(trace)
+
+
+def test_stretch_small_constant():
+    """Paper Lemma 4 / Fig 4.1b: expected tree-hops is a small constant."""
+    ring = Ring.random(3000, 48, seed=7)
+    pos = ring.positions()
+    hops = []
+    for i in range(0, ring.n, 7):
+        for dr in (A.UP, A.CW, A.CCW):
+            got, trace = R.route(ring, i, dr, pos=pos)
+            if got is not None:
+                hops.append(len(trace))
+    hops = np.asarray(hops)
+    assert hops.mean() < 2.0  # paper: "not much greater than three" DHT sends
+    assert (hops <= 2).mean() > 0.8  # 85%-within-2 in Fig 4.1b
+
+
+def test_symmetric_chord_lookup_beats_chord():
+    """Fig 4.1b: symmetric fingers cut hop distance to tree neighbors."""
+    ring = Ring.random(1500, 32, seed=9)
+    pos = ring.positions()
+    up_n, cw_n, ccw_n = A.tree_neighbors_reference(ring.addrs, ring.d)
+    srcs, tgts = [], []
+    for i in range(ring.n):
+        for nb in (up_n[i], cw_n[i], ccw_n[i]):
+            if nb >= 0:
+                srcs.append(i)
+                tgts.append(int(pos[nb]))
+    srcs = np.asarray(srcs)
+    tgts = np.asarray(tgts, dtype=ring.addrs.dtype)
+    f_sym = finger_tables(ring, symmetric=True)
+    f_reg = finger_tables(ring, symmetric=False)
+    h_sym = lookup_hops(ring, f_sym, srcs, tgts, symmetric=True)
+    h_reg = lookup_hops(ring, f_reg, srcs, tgts, symmetric=False)
+    assert h_sym.mean() < h_reg.mean()
+    assert (h_sym <= 2).mean() > 0.6  # most neighbors within 1-2 hops
