@@ -1,0 +1,89 @@
+"""Engine throughput: numpy vs device backend cycles/sec at growing peer
+counts, recorded to ``results/BENCH_engine.json`` so the perf trajectory
+is tracked PR over PR.
+
+Methodology: start a fresh engine (initialization storm in flight),
+warm up a few cycles (includes jit compile for the device backend),
+then time `cycles` steady active-phase cycles. The device backend's
+kernel mode is "auto": the fused Pallas `majority_step` where a TPU is
+present, the jnp oracle elsewhere — so the recorded numbers reflect the
+fast path of whatever hardware ran the benchmark. The >=10x
+device-vs-numpy target (ISSUE 1 / DESIGN.md §Engine) applies where an
+accelerator is available; on CPU-only hosts the JSON still records both
+engines to anchor the trend.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+DEFAULT_SIZES = (1_000, 10_000, 100_000)
+OUT_PATH = os.path.join("results", "BENCH_engine.json")
+
+
+def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
+                  seed: int = 0) -> dict:
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+
+    rng = np.random.default_rng(seed)
+    ring = Ring.random(n, 32, seed=seed)
+    votes = np.zeros(n, np.int64)
+    votes[rng.choice(n, int(n * 0.4), replace=False)] = 1
+
+    t0 = time.time()
+    eng = make_engine(backend, ring, votes, seed=seed + 1)
+    eng.step(warmup)
+    eng.block_until_ready()
+    t_setup = time.time() - t0
+
+    t0 = time.time()
+    eng.step(cycles)
+    eng.block_until_ready()
+    dt = time.time() - t0
+    rec = {
+        "backend": backend,
+        "n": n,
+        "cycles": cycles,
+        "cycles_per_sec": round(cycles / dt, 2),
+        "setup_s": round(t_setup, 2),
+        "messages": eng.messages_sent,
+    }
+    if backend == "jax":
+        rec["dropped"] = eng.dropped
+        rec["deferred"] = eng.deferred
+    return rec
+
+
+def run(csv, sizes=DEFAULT_SIZES, cycles: int = 20, out_path: str = OUT_PATH):
+    import jax
+
+    results = {
+        "bench": "engine_cycles_per_sec",
+        "device": jax.default_backend(),
+        "sizes": list(sizes),
+        "rows": [],
+    }
+    for n in sizes:
+        row = {"n": n}
+        for backend in ("numpy", "jax"):
+            rec = bench_backend(backend, n, cycles=cycles)
+            row[backend] = rec
+            csv(f"engine,n={n},backend={backend},"
+                f"cycles/sec={rec['cycles_per_sec']},"
+                f"msgs={rec['messages']},setup_s={rec['setup_s']}")
+        row["jax_over_numpy"] = round(
+            row["jax"]["cycles_per_sec"] / max(row["numpy"]["cycles_per_sec"],
+                                               1e-9), 3
+        )
+        csv(f"engine_speedup,n={n},jax_over_numpy={row['jax_over_numpy']}x,"
+            f"device={results['device']}")
+        results["rows"].append(row)
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    csv(f"engine_bench_written,path={out_path}")

@@ -6,10 +6,15 @@ systems layer. Prints ``name,key=value,...`` CSV lines.
   stationary         Fig 4.3  (accuracy/cost under churn; budget sweep)
   kernel_bench       Pallas-kernel oracles microbench (CPU-indicative)
   sync_comparison    trainer-level sync families (paper mode vs baselines)
+  engine             numpy-vs-device engine cycles/sec -> BENCH_engine.json
   roofline           summary of the dry-run roofline table (if present)
+
+The majority-voting sections run on the engine backend selected with
+``--backend {numpy,jax}`` (default numpy — the reference simulator).
 
 Run everything:   PYTHONPATH=src python -m benchmarks.run
 One section:      PYTHONPATH=src python -m benchmarks.run --only stationary
+Device engine:    PYTHONPATH=src python -m benchmarks.run --backend jax
 """
 from __future__ import annotations
 
@@ -28,19 +33,23 @@ def section(name):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
+                    help="engine backend for the majority-voting sections")
     args = ap.parse_args()
 
     from benchmarks import (
-        kernel_bench, static_convergence, stationary, sync_comparison,
-        tree_properties,
+        engine_bench, kernel_bench, static_convergence, stationary,
+        sync_comparison, tree_properties,
     )
 
+    b = args.backend
     sections = [
-        ("tree_properties", tree_properties.run),
-        ("static_convergence", static_convergence.run),
-        ("stationary", stationary.run),
-        ("kernel_bench", kernel_bench.run),
-        ("sync_comparison", sync_comparison.run),
+        ("tree_properties", lambda c: tree_properties.run(c)),
+        ("static_convergence", lambda c: static_convergence.run(c, backend=b)),
+        ("stationary", lambda c: stationary.run(c, backend=b)),
+        ("kernel_bench", lambda c: kernel_bench.run(c)),
+        ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
+        ("engine", lambda c: engine_bench.run(c)),
     ]
     for name, fn in sections:
         if args.only and args.only != name:

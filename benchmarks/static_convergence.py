@@ -1,5 +1,9 @@
 """Paper Fig 4.2: messages/peer until all peers output the correct majority,
-local thresholding vs LiMoSense, over scale and signal strength."""
+local thresholding vs LiMoSense, over scale and signal strength.
+
+Local thresholding runs through the engine API (`repro.engine`):
+``--backend numpy`` is the reference simulator, ``--backend jax`` the
+device-resident engine (same protocol, DESIGN.md §Engine)."""
 from __future__ import annotations
 
 import time
@@ -8,7 +12,7 @@ import numpy as np
 
 from repro.core.dht import Ring
 from repro.core.limosense import LiMoSenseSimulator
-from repro.core.majority import MajoritySimulator
+from repro.engine import make_engine
 
 
 def make_votes(n, mu, rng):
@@ -18,17 +22,19 @@ def make_votes(n, mu, rng):
     return v
 
 
-def one_case(n: int, mu_pre: float, mu_post: float, seed: int = 0):
+def one_case(n: int, mu_pre: float, mu_post: float, seed: int = 0,
+             backend: str = "numpy"):
     rng = np.random.default_rng(seed)
-    ring = Ring.random(n, 64, seed=seed)
+    # the device engine routes on uint32 addresses (d <= 32)
+    ring = Ring.random(n, 64 if backend == "numpy" else 32, seed=seed)
     votes = make_votes(n, mu_pre, rng)
     truth_pre = int(mu_pre >= 0.5)
     truth_post = int(mu_post >= 0.5)
 
-    loc = MajoritySimulator(ring, votes, seed=seed + 1)
+    loc = make_engine(backend, ring, votes, seed=seed + 1)
     r1 = loc.run_until_converged(truth=truth_pre)
     new = make_votes(n, mu_post, rng)
-    chg = np.nonzero(new != loc.state.x)[0]
+    chg = np.nonzero(new != loc.votes())[0]
     loc.set_votes(chg, new[chg])
     r2 = loc.run_until_converged(truth=truth_post)
 
@@ -49,10 +55,10 @@ def one_case(n: int, mu_pre: float, mu_post: float, seed: int = 0):
     }
 
 
-def run(csv):
+def run(csv, backend: str = "numpy"):
     # case 1: mu_pre < 1/2 < mu_post (paper Fig 4.2a), signal sweep
     for (pre, post) in [(0.1, 0.9), (0.2, 0.8), (0.3, 0.7), (0.4, 0.6)]:
-        r = one_case(4000, pre, post, seed=1)
+        r = one_case(4000, pre, post, seed=1, backend=backend)
         csv(f"static_flip,n=4000,mu={pre:.1f}->{post:.1f},"
             f"local={r['local_msgs_per_peer']:.2f},"
             f"gossip={r['gossip_msgs_per_peer']:.2f},"
@@ -61,14 +67,14 @@ def run(csv):
         assert r["all_converged"]
         assert r["local_msgs_per_peer"] < r["gossip_msgs_per_peer"]
     # case 2: mu_pre < mu_post < 1/2 (no sign flip)
-    r = one_case(4000, 0.2, 0.4, seed=2)
+    r = one_case(4000, 0.2, 0.4, seed=2, backend=backend)
     csv(f"static_noflip,n=4000,mu=0.2->0.4,"
         f"local={r['local_msgs_per_peer']:.2f},"
         f"gossip={r['gossip_msgs_per_peer']:.2f},ok={r['all_converged']}")
     # scale sweep at fixed signal (paper: 10k..160k; we run 1k..16k + spot)
     for n in (1000, 4000, 16_000):
         t0 = time.time()
-        r = one_case(n, 0.3, 0.7, seed=3)
+        r = one_case(n, 0.3, 0.7, seed=3, backend=backend)
         csv(f"static_scale,n={n},local={r['local_msgs_per_peer']:.2f},"
             f"gossip={r['gossip_msgs_per_peer']:.2f},"
             f"sec={time.time()-t0:.0f},ok={r['all_converged']}")

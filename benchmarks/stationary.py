@@ -1,12 +1,15 @@
 """Paper Fig 4.3: stationary vote churn — accuracy and message cost vs
-noise rate and scale; LiMoSense comparison at matched message budgets."""
+noise rate and scale; LiMoSense comparison at matched message budgets.
+
+Local thresholding runs through the engine API (`repro.engine`);
+``--backend jax`` uses the device-resident engine (DESIGN.md §Engine)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.dht import Ring
 from repro.core.limosense import GossipParams, LiMoSenseSimulator
-from repro.core.majority import MajoritySimulator
+from repro.engine import make_engine
 
 
 def _votes(n, mu, rng):
@@ -17,14 +20,15 @@ def _votes(n, mu, rng):
 
 
 def stationary_local(n: int, noise_ppm_per_cycle: float, mu: float = 0.4,
-                     cycles: int = 1500, seed: int = 0):
+                     cycles: int = 1500, seed: int = 0,
+                     backend: str = "numpy"):
     """Flip votes in balanced pairs at the given rate; measure steady-state
     accuracy and msgs/peer/cycle (paper: ppm/c at 5-cycle message delay)."""
     rng = np.random.default_rng(seed)
-    ring = Ring.random(n, 64, seed=seed)
+    ring = Ring.random(n, 64 if backend == "numpy" else 32, seed=seed)
     votes = _votes(n, mu, rng)
     truth = int(mu >= 0.5)
-    sim = MajoritySimulator(ring, votes, seed=seed + 1)
+    sim = make_engine(backend, ring, votes, seed=seed + 1)
     warm = cycles // 3
     acc, msgs0 = [], None
     per_cycle = noise_ppm_per_cycle * 1e-6 * n
@@ -34,19 +38,20 @@ def stationary_local(n: int, noise_ppm_per_cycle: float, mu: float = 0.4,
         k = int(carry)
         carry -= k
         if k:
-            ones = np.nonzero(sim.state.x == 1)[0]
-            zeros = np.nonzero(sim.state.x == 0)[0]
+            x = sim.votes()
+            ones = np.nonzero(x == 1)[0]
+            zeros = np.nonzero(x == 0)[0]
             k2 = min(k, ones.size, zeros.size)
             if k2:
                 flip1 = rng.choice(ones, k2, replace=False)
                 flip0 = rng.choice(zeros, k2, replace=False)
                 idx = np.concatenate([flip1, flip0])
-                sim.set_votes(idx, 1 - sim.state.x[idx])
+                sim.set_votes(idx, 1 - x[idx])
         sim.step()
         if t == warm:
             msgs0 = sim.messages_sent
         if t >= warm:
-            acc.append(float((sim.state.outputs() == truth).mean()))
+            acc.append(float((sim.outputs() == truth).mean()))
     msgs_per_peer_cycle = (sim.messages_sent - msgs0) / (n * (cycles - warm))
     return {"accuracy": float(np.mean(acc)), "msgs": msgs_per_peer_cycle}
 
@@ -81,16 +86,16 @@ def stationary_gossip(n: int, noise_ppm_per_cycle: float, budget: float,
     return {"accuracy": float(np.mean(acc))}
 
 
-def run(csv):
+def run(csv, backend: str = "numpy"):
     # Fig 4.3a/b: local majority across scale and noise
     for n in (4000, 16_000):
         for noise in (100, 1000, 4000):  # ppm/cycle
-            r = stationary_local(n, noise)
+            r = stationary_local(n, noise, backend=backend)
             csv(f"stationary_local,n={n},noise_ppm={noise},"
                 f"accuracy={r['accuracy']:.3f},msgs/peer/cycle={r['msgs']:.4f}")
     # Fig 4.3c: gossip at multiples of the local budget
     n, noise = 4000, 1000
-    base = stationary_local(n, noise)
+    base = stationary_local(n, noise, backend=backend)
     csv(f"stationary_ref,n={n},noise_ppm={noise},"
         f"local_acc={base['accuracy']:.3f},local_msgs={base['msgs']:.4f}")
     for mult in (1, 8, 64):

@@ -25,6 +25,20 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+def xla_cost(compiled) -> Dict[str, float]:
+    """Normalized `compiled.cost_analysis()` as a plain dict.
+
+    jaxlib has flip-flopped between returning a dict and a one-element
+    list of dicts (one per executable); this repo's jaxlib returns the
+    list form. Every consumer (the dry-run recorder, the scan-FLOPs
+    tests) goes through this accessor instead of indexing the raw result.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _TRIP_RE = re.compile(r'body=%?([\w\.\-]+).*?known_trip_count\\?":?\{\\?"?n\\?"?[:=]\\?"?(\d+)')
 _WHILE_BODY_RE = re.compile(r"=.*?\bwhile\(.*?body=%?([\w\.\-]+)")

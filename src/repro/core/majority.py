@@ -35,6 +35,9 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.engine import protocol as P
+from repro.engine.protocol import thr2  # noqa: F401  (re-export, public API)
+
 from . import addressing as A
 from .addressing import UP, CW, CCW
 from .dht import Ring
@@ -42,11 +45,6 @@ from . import routing as R
 from .simulator import MessageTable, random_delays
 
 NDIR = 3
-
-
-def thr2(ones: np.ndarray, total: np.ndarray) -> np.ndarray:
-    """2 * thr(X): integer-exact sign of ones - total/2."""
-    return 2 * ones - total
 
 
 @dataclass
@@ -79,20 +77,25 @@ class MajorityState:
         k[:, 1] += 1
         return k
 
+    def _rules(self, idx: Optional[np.ndarray] = None):
+        """The shared Alg. 3 test (engine.protocol) on (a subset of) peers."""
+        xin = self.X_in if idx is None else self.X_in[idx]
+        xout = self.X_out if idx is None else self.X_out[idx]
+        x = self.x if idx is None else self.x[idx]
+        return P.majority_rules(
+            xin[..., 0], xin[..., 1], xout[..., 0], xout[..., 1], x
+        )
+
     def outputs(self) -> np.ndarray:
+        # only the output column is needed here (hot convergence check);
+        # the full rule set (violations/payloads) runs in _rules()
         k = self.knowledge()
         return (thr2(k[:, 0], k[:, 1]) >= 0).astype(np.int64)
 
     def violations(self, idx: Optional[np.ndarray] = None) -> np.ndarray:
         """(n|len(idx), 3) bool — the paper's test() per peer and direction."""
-        k = self.knowledge(idx)[:, None, :]  # (.,1,2)
-        xin = self.X_in if idx is None else self.X_in[idx]
-        xout = self.X_out if idx is None else self.X_out[idx]
-        a = xin + xout  # (.,3,2)
-        ka = k - a
-        ta = thr2(a[..., 0], a[..., 1])
-        tka = thr2(ka[..., 0], ka[..., 1])
-        return ((ta >= 0) & (tka < 0)) | ((ta < 0) & (tka > 0))
+        viol, _, _, _ = self._rules(idx)
+        return viol
 
 
 class MajoritySimulator:
@@ -111,13 +114,20 @@ class MajoritySimulator:
         self._trigger_all_initial()
 
     # -- sending ------------------------------------------------------------
-    def _send(self, peers: np.ndarray, dirs: np.ndarray):
-        """Alg. 3 Send(v) for (peer, dir) pairs: update X_out, seq, enqueue."""
+    def _send(self, peers: np.ndarray, dirs: np.ndarray,
+              pay: Optional[np.ndarray] = None):
+        """Alg. 3 Send(v) for (peer, dir) pairs: update X_out, seq, enqueue.
+
+        `pay` is the (len(peers), 2) Send payload K - X_in when the caller
+        already ran the full test (`_rules` returns it); recomputed here
+        only for the unconditional-alert path.
+        """
         if peers.size == 0:
             return
         st = self.state
-        k = st.knowledge(peers)
-        pay = k - st.X_in[peers, dirs]  # X_{i,v} = K_i - X_{v,i}
+        if pay is None:
+            k = st.knowledge(peers)
+            pay = k - st.X_in[peers, dirs]  # X_{i,v} = K_i - X_{v,i}
         st.X_out[peers, dirs] = pay
         st.seq[peers] += 1
         seqs = st.seq[peers]
@@ -134,19 +144,22 @@ class MajoritySimulator:
             random_delays(self.rng, v.size, self.t),
         )
 
+    def _react(self, idx: Optional[np.ndarray] = None):
+        """test() on (a subset of) peers; Send with the payloads the same
+        rule evaluation already produced."""
+        viol, _, po, pt = self.state._rules(idx)
+        p, dd = np.nonzero(viol)
+        peers = p if idx is None else idx[p]
+        self._send(peers, dd, pay=np.stack([po[p, dd], pt[p, dd]], axis=1))
+
     def _trigger_all_initial(self):
-        viol = self.state.violations()
-        peers, dirs = np.nonzero(viol)
-        self._send(peers, dirs)
+        self._react()
 
     # -- external events ----------------------------------------------------
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray):
         """Input change upcall: set X_self and re-run test() on those peers."""
-        st = self.state
-        st.x[idx] = new_votes
-        viol = st.violations(idx)
-        p, dd = np.nonzero(viol)
-        self._send(idx[p], dd)
+        self.state.x[idx] = new_votes
+        self._react(idx)
 
     def alert(self, peers: np.ndarray, dirs: np.ndarray):
         """Alg. 2 ALERT upcall: zero X_in[v] and send unconditionally."""
@@ -168,6 +181,8 @@ class MajoritySimulator:
             self.messages_sent += due.size  # each delivery = one network msg
             fwd = status == R.FORWARD
             acc = status == R.ACCEPT
+            # dropped messages free their table slot immediately
+            self.msgs.release(due[status == R.DROP])
             # forwarded messages re-enter the network with a fresh delay
             fi = due[fwd]
             m.dest[fi] = nd[fwd]
@@ -192,10 +207,7 @@ class MajoritySimulator:
                 st.last[recv[oo], vdir[oo]] = seqs[oo]
                 self.msgs.release(ai)
                 # react: test() on affected peers
-                touched = np.unique(recv)
-                viol = st.violations(touched)
-                p, dd = np.nonzero(viol)
-                self._send(touched[p], dd)
+                self._react(np.unique(recv))
         self.t += 1
 
     # -- experiment helpers ---------------------------------------------------

@@ -20,6 +20,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.engine import protocol as P
+
 from . import addressing as A
 from .addressing import UP, CW, CCW
 from .dht import Ring
@@ -70,21 +72,16 @@ def route_alert(ring: Ring, alert: Alert, pos: Optional[np.ndarray] = None) -> O
         pos = ring.positions()
     p = int(alert.from_pos)
     owner = int(ring.owner(np.asarray([p], dt))[0])
-    pnp = np.asarray(p, dt)
-    if alert.direction == UP:
-        if p == 0:
-            return None
-        dest, edge = int(A.up(pnp, d)), None
-    elif alert.direction == CW:
-        if bool(A.is_leaf(pnp)):
-            return None
-        dest, edge = int(A.cw(pnp, d)), int(ring.addrs[owner])
-    else:
-        if bool(A.is_leaf(pnp)) or p == 0:
-            return None
-        dest, edge = int(A.ccw(pnp, d)), int(ring.prev[owner])
-
-    cur_dest, cur_edge = dest, edge
+    # emulated SEND from `p` with the owning peer's segment edges — the
+    # same pure rule (engine.protocol) ordinary Alg. 3 sends go through
+    valid, _, dest, edge, has_edge = P.send_fields(
+        np, np.asarray([p], dt), np.asarray([alert.direction]),
+        ring.addrs[[owner]], ring.prev[[owner]], d,
+    )
+    if not bool(valid[0]):
+        return None
+    cur_dest = int(dest[0])
+    cur_edge = int(edge[0]) if bool(has_edge[0]) else None
     for _ in range(10_000):
         peer = int(ring.owner(np.asarray([cur_dest], dt))[0])
         status, nd, ne = R.process_at_peer(ring, peer, p, cur_dest, cur_edge, pos=pos)

@@ -1,10 +1,12 @@
 """Alg. 1 — Local Binary Tree Routing (paper §2).
 
-Two implementations share the same rules:
+Two implementations share the same rules, which live once as pure
+backend-agnostic functions in `repro.engine.protocol` (the device engine
+consumes the identical functions on jnp arrays):
   * `route` — single-message reference (plain Python), returns the full hop
     trace; used by tests, the stretch benchmark and the notify protocol.
   * `send_batch` / `step_batch` — vectorized (numpy) message-table versions
-    used by the cycle simulator for the majority-voting experiments.
+    used by the numpy cycle engine for the majority-voting experiments.
 
 Protocol recap. A message carries ``(origin, dest, edge, M)`` where
 ``origin`` is the sender's tree position (never rewritten), ``dest`` the
@@ -48,6 +50,8 @@ from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
+
+from repro.engine import protocol as P
 
 from . import addressing as A
 from .addressing import UP, CW, CCW
@@ -100,44 +104,35 @@ def process_at_peer(
     dt = ring.addrs.dtype
     if pos is None:
         pos = ring.positions()
-    pos_i = int(pos[peer])
-    a_prev = int(ring.prev[peer])
-    a_self = int(ring.addrs[peer])
-    max_addr = int(ring.addrs[-1])
+    pos_i = np.asarray(pos[peer], dt)
+    a_prev = np.asarray(ring.prev[peer], dt)
+    a_self = np.asarray(ring.addrs[peer], dt)
+    max_addr = np.asarray(ring.addrs[-1], dt)
     network_entry = True
     # "Self" in Alg. 1's bounce rule means the message bounced off the peer
     # whose segment contains the origin position. For ordinary traffic this
     # is exactly `origin == pos_i`; testing segment ownership additionally
     # covers Alg. 2 ALERTs emulated from positions the sender does not
     # occupy (see notify.py).
-    self_seg = int(ring.owner(np.asarray([origin], dt))[0]) == peer
+    self_seg = np.asarray(int(ring.owner(np.asarray([origin], dt))[0]) == peer)
 
     while True:
-        if dest == pos_i:
-            if origin == pos_i:
-                return DROP, 0, None  # degenerate self-send (root UP)
+        dlv = P.deliver_rules(
+            np,
+            origin=np.asarray(origin, dt),
+            dest=np.asarray(dest, dt),
+            edge=np.asarray(0 if edge is None else edge, dt),
+            has_edge=np.asarray(edge is not None),
+            network_entry=np.asarray(network_entry),
+            pos_i=pos_i, a_prev=a_prev, a_self=a_self, self_seg=self_seg,
+            max_addr=max_addr, d=d, repair=repair,
+        )
+        if bool(dlv.accept):
             return ACCEPT, dest, None
-
-        o = np.asarray(origin, dt)
-        de = np.asarray(dest, dt)
-        if bool(A.is_foreparent(de, o, d)):
-            nd, ne = int(A.up(de, d)), None
-        else:
-            in_cw = bool(A.in_cw_subtree(o, de, d))
-            kill_edge = a_prev if in_cw else a_self
-            if network_entry and edge is not None and edge == kill_edge:
-                return DROP, 0, None
-            if bool(A.is_leaf(de)):
-                return DROP, 0, None  # address space exhausted
-            if repair and pos_i == 0 and dest > max_addr:
-                # R2: wrapped upper region — all occupied positions are CCW.
-                nd, ne = int(A.ccw(de, d)), a_prev
-            elif self_seg:
-                nd = int(A.cw(de, d)) if in_cw else int(A.ccw(de, d))
-                ne = a_self if in_cw else a_prev
-            else:
-                nd = int(A.ccw(de, d)) if in_cw else int(A.cw(de, d))
-                ne = a_prev if in_cw else a_self
+        if bool(dlv.drop):
+            return DROP, 0, None
+        nd = int(dlv.new_dest)
+        ne = int(dlv.new_edge) if bool(dlv.new_has_edge) else None
         if not repair:
             return FORWARD, nd, ne
         # R1: keep descending locally while we still own the new destination.
@@ -198,22 +193,9 @@ def send_batch(
     d = ring.d
     if pos is None:
         pos = ring.positions()
-    p = pos[peers]
-    leaf = A.is_leaf(p)
-    root = p == 0
-    dest = np.where(
-        directions == UP, A.up(p, d), np.where(directions == CW, A.cw(p, d), A.ccw(p, d))
-    ).astype(ring.addrs.dtype)
-    edge = np.where(
-        directions == CW, ring.addrs[peers], ring.prev[peers]
-    ).astype(ring.addrs.dtype)
-    has_edge = directions != UP
-    valid = np.where(
-        directions == UP,
-        ~root,
-        np.where(directions == CW, ~leaf, ~leaf & ~root),
+    return P.send_fields(
+        np, pos[peers], directions, ring.addrs[peers], ring.prev[peers], d
     )
-    return valid, p.astype(ring.addrs.dtype), dest, edge, has_edge
 
 
 def step_batch(
@@ -253,65 +235,34 @@ def step_batch(
         if not live.any():
             break
         li = np.nonzero(live)[0]
-        de = cur_dest[li]
-        og = origin[li]
         pe = owner0[li]
-        pos_i = pos[pe]
-        a_prev = ring.prev[pe]
-        a_self = ring.addrs[pe]
-
-        at_pos = de == pos_i
-        self_send = og == pos_i
-        self_seg = ring.owner(og) == pe  # see process_at_peer: covers alerts
-        acc = at_pos & ~self_send
-        drop_self = at_pos & self_send
-
-        going_up = A.is_foreparent(de, og, d)
-        in_cw = A.in_cw_subtree(og, de, d)
-        kill_edge = np.where(in_cw, a_prev, a_self)
-        edge_kill = (
-            network_entry[li]
-            & cur_has_edge[li]
-            & (cur_edge[li] == kill_edge)
-            & ~going_up
-            & ~at_pos
+        dlv = P.deliver_rules(
+            np,
+            origin=origin[li], dest=cur_dest[li], edge=cur_edge[li],
+            has_edge=cur_has_edge[li], network_entry=network_entry[li],
+            pos_i=pos[pe], a_prev=ring.prev[pe], a_self=ring.addrs[pe],
+            # see process_at_peer: segment ownership covers emulated alerts
+            self_seg=ring.owner(origin[li]) == pe,
+            max_addr=max_addr, d=d, repair=repair,
         )
-        leaf = A.is_leaf(de) & ~going_up & ~at_pos
-        dead = drop_self | edge_kill | leaf
+        now_acc = dlv.accept
+        now_drop = dlv.drop & ~dlv.accept
+        # internal descent (R1): still our own address space?
+        stay = repair & (ring.owner(dlv.new_dest) == pe) & ~now_acc & ~now_drop
 
-        root_wrap = repair & (pos_i == 0) & (de > max_addr)
-        step_cw = np.where(
-            root_wrap, False, np.where(self_seg, in_cw, ~in_cw)
-        )
-        nd = np.where(
-            going_up,
-            A.up(de, d),
-            np.where(step_cw, A.cw(de, d), A.ccw(de, d)),
-        ).astype(dt)
-        ne = np.where(going_up, 0, np.where(step_cw, a_self, a_prev)).astype(dt)
-        nhe = ~going_up
-
-        # classify
-        now_acc = acc
-        now_drop = dead & ~acc
-        # internal descent: still our own address space?
-        new_owner = ring.owner(nd)
-        stay = repair & (new_owner == pe) & ~now_acc & ~now_drop
-
-        gi = li
-        status[gi[now_acc]] = ACCEPT
-        status[gi[now_drop]] = DROP
+        status[li[now_acc]] = ACCEPT
+        status[li[now_drop]] = DROP
         fwd = ~now_acc & ~now_drop & ~stay
-        out_dest[gi[fwd]] = nd[fwd]
-        out_edge[gi[fwd]] = ne[fwd]
-        out_has_edge[gi[fwd]] = nhe[fwd]
-        status[gi[fwd]] = FORWARD
+        out_dest[li[fwd]] = dlv.new_dest[fwd]
+        out_edge[li[fwd]] = dlv.new_edge[fwd]
+        out_has_edge[li[fwd]] = dlv.new_has_edge[fwd]
+        status[li[fwd]] = FORWARD
 
-        live[gi[~stay]] = False
-        cur_dest[gi[stay]] = nd[stay]
-        cur_edge[gi[stay]] = ne[stay]
-        cur_has_edge[gi[stay]] = nhe[stay]
-        network_entry[gi[stay]] = False
+        live[li[~stay]] = False
+        cur_dest[li[stay]] = dlv.new_dest[stay]
+        cur_edge[li[stay]] = dlv.new_edge[stay]
+        cur_has_edge[li[stay]] = dlv.new_has_edge[stay]
+        network_entry[li[stay]] = False
         if not repair:
             live[:] = False
     return status, owner0, out_dest, out_edge, out_has_edge

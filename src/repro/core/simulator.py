@@ -5,6 +5,12 @@ delivery* (one DHT routing) costs a uniformly random delay of 1..10 cycles —
 the paper uses the same range, "not to approximate wall time but rather to
 decouple the peers and avoid locked-step behavior". Message counting is per
 network delivery, which puts tree routing and gossip on equal footing.
+
+This is the *host* (numpy) message fabric, used by the reference engine.
+The device engine (`repro.engine.jax_backend`) keeps the same SoA layout
+in fixed-capacity device arrays (free slot <=> deliver_t < 0) and shares
+`MIN_DELAY`/`MAX_DELAY` from here; DESIGN.md §Engine states the
+table-mechanics differences (growth vs overflow counting).
 """
 from __future__ import annotations
 

@@ -1,0 +1,47 @@
+"""Backend-pluggable cycle engine for the paper's simulations.
+
+One protocol, two engines:
+
+  * ``numpy`` — the reference cycle simulator (`repro.core.majority`),
+    kept as ground truth; dynamic message table, host RNG.
+  * ``jax``  — device-resident: one jitted program executes an entire
+    cycle (vectorized Alg. 1 delivery on the jnp address algebra, a
+    fixed-capacity device message table, and the fused Pallas
+    ``majority_step`` kernel for the violation/test/Send phase).
+
+Both consume the same pure protocol rules (`repro.engine.protocol`);
+see DESIGN.md §Engine for the architecture and the cross-backend
+equivalence contract.
+
+    from repro.engine import make_engine
+    eng = make_engine("jax", ring, votes, seed=0)
+    res = eng.run_until_converged(truth=1)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .base import EngineResult, MajorityEngine
+
+BACKENDS = ("numpy", "jax")
+
+
+def make_engine(backend: str, ring, votes: np.ndarray, seed: int = 0,
+                **kwargs) -> MajorityEngine:
+    """Construct a majority-voting engine over `ring` with initial `votes`.
+
+    `backend` is one of `BACKENDS`. Extra keyword arguments are
+    backend-specific (e.g. ``capacity_per_peer`` / ``kernel`` for jax).
+    """
+    if backend == "numpy":
+        from .numpy_backend import NumpyEngine
+
+        return NumpyEngine(ring, votes, seed=seed, **kwargs)
+    if backend == "jax":
+        from .jax_backend import JaxEngine
+
+        return JaxEngine(ring, votes, seed=seed, **kwargs)
+    raise ValueError(f"unknown engine backend {backend!r}; want one of {BACKENDS}")
+
+
+__all__ = ["BACKENDS", "EngineResult", "MajorityEngine", "make_engine"]

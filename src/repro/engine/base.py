@@ -1,0 +1,46 @@
+"""Engine API: what a majority-voting cycle engine must provide.
+
+The contract is deliberately small — everything the benchmarks, the
+examples and the elastic runtime need, and nothing tied to where the
+state lives (host numpy vs device arrays). Methods take and return host
+numpy values; backends move data as required.
+"""
+from __future__ import annotations
+
+from typing import Dict, Protocol, runtime_checkable
+
+import numpy as np
+
+EngineResult = Dict[str, float]  # {"cycles", "messages", "converged"}
+
+
+@runtime_checkable
+class MajorityEngine(Protocol):
+    """Cycle-driven Alg. 1 + Alg. 3 co-simulation over a static ring."""
+
+    backend: str  # "numpy" | "jax"
+
+    @property
+    def t(self) -> int:
+        """Current simulation cycle."""
+
+    @property
+    def messages_sent(self) -> int:
+        """Network deliveries consumed so far (the paper's message unit)."""
+
+    def outputs(self) -> np.ndarray:
+        """(n,) current 0/1 output of every peer."""
+
+    def votes(self) -> np.ndarray:
+        """(n,) current input vote of every peer."""
+
+    def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
+        """Input-change upcall: set X_self and re-run test() on `idx`."""
+
+    def step(self, cycles: int = 1) -> None:
+        """Advance the simulation by `cycles` cycles."""
+
+    def run_until_converged(self, truth: int, max_cycles: int = 200_000,
+                            stable_for: int = 1) -> EngineResult:
+        """Run until every peer outputs `truth` (checked each cycle,
+        before stepping — the paper's 'first such cycle')."""

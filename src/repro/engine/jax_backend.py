@@ -1,0 +1,471 @@
+"""Device-resident majority-voting engine (one jitted program per cycle).
+
+Everything the numpy reference does per cycle — due-message delivery
+through the Alg. 1 router, X_in acceptance with sequence dedup, the
+Alg. 3 violation test, and the Send fan-out — runs as a single jitted
+XLA program over fixed-shape device arrays:
+
+  * routing uses the jnp path of `core.addressing`'s bit algebra through
+    the same `engine.protocol.deliver_rules` the numpy backend consumes;
+    the R1 internal-descent loop is a `lax.while_loop` over live masks;
+  * the message table is one fixed-capacity (C, 8) uint32 row matrix
+    (columns: origin, dest, edge, has_edge, pay_ones, pay_tot, seq,
+    deliver_t; free slot <=> deliver_t == NO_MSG) plus a circular
+    free-list, so every table mutation is a single row scatter;
+  * per-cycle work is *budgeted*: due slots are compacted by a
+    gather-only cumsum+searchsorted (no large scatter) into a
+    `work_budget`-row buffer; sends come from the compacted acceptor
+    set, so scatter rows scale with the budget, not with n or C. Budget
+    overflow defers the excess deliveries by one cycle (counted in
+    `deferred`) — the protocol tolerates arbitrary delays by design;
+  * the violation/test/Send phase is the fused Pallas ``majority_step``
+    kernel (interpret mode off-TPU, or the jnp oracle with
+    ``kernel="ref"`` — the fast CPU path);
+  * message delays are a counter-hashed uniform 1..10 (splitmix-style
+    integer finalizer), not a threefry stream — the delay only has to
+    decorrelate peers (paper §4), and hashing is orders of magnitude
+    cheaper than threefry on CPU. Seeds still make runs reproducible.
+
+Addresses are uint32 on device (JAX default config has no uint64), so
+rings must use d <= 32 bits. Counters are int32. Cross-backend
+equivalence and the seeded-RNG tolerance are specified in DESIGN.md
+§Engine.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import addressing as A
+from repro.core.dht import Ring
+from repro.core.simulator import MAX_DELAY, MIN_DELAY
+from repro.engine import protocol as P
+from repro.engine.base import EngineResult
+from repro.kernels.majority_step.ops import _on_tpu, majority_step
+
+NDIR = 3
+_I32 = jnp.int32
+_U32 = jnp.uint32
+
+# message-table columns (all uint32; ints bit-fit, bools are 0/1)
+ORIGIN, DEST, EDGE, HAS_EDGE, PAY_ONES, PAY_TOT, SEQ, DELIVER_T = range(8)
+NO_MSG = np.uint32(0xFFFFFFFF)  # deliver_t sentinel: slot is free
+
+
+def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Uniform 1..10 delay from (row, cycle, seed) via an integer mix."""
+    h = idx.astype(_U32) * _U32(0x9E3779B1)
+    h = h + t.astype(_U32) * _U32(0x85EBCA77) + _U32(salt)
+    h = h ^ (h >> _U32(16))
+    h = h * _U32(0x7FEB352D)
+    h = h ^ (h >> _U32(15))
+    h = h * _U32(0x846CA68B)
+    h = h ^ (h >> _U32(16))
+    span = _U32(MAX_DELAY - MIN_DELAY + 1)
+    return (MIN_DELAY + (h % span).astype(_I32)).astype(_I32)
+
+
+def deliver_network_step(*, origin, dest, edge, has_edge, live, pos_i,
+                         a_prev, a_self, self_seg, max_addr, d: int):
+    """One *network* delivery for a batch of messages, R1 loop included.
+
+    All inputs are equal-length arrays; `live` masks the rows to process
+    (each costs exactly one network delivery). The R1 internal descent
+    runs as a `lax.while_loop` over live masks: a peer keeps descending
+    while the recalculated destination stays inside its own segment.
+    Returns (accept, drop, fwd_dest, fwd_edge, fwd_has_edge) — rows that
+    neither accept nor drop re-enter the network with the fwd_* fields.
+
+    This is THE delivery semantics of the device engine; the parity
+    tests drive this exact function against `routing.step_batch`.
+    """
+    def cond(c):
+        return c[0].any()
+
+    def body(c):
+        (lv, entry, cur_dest, cur_edge, cur_he,
+         acc, drop, o_dest, o_edge, o_he) = c
+        dlv = P.deliver_rules(
+            jnp, origin=origin, dest=cur_dest, edge=cur_edge,
+            has_edge=cur_he, network_entry=entry, pos_i=pos_i,
+            a_prev=a_prev, a_self=a_self, self_seg=self_seg,
+            max_addr=max_addr, d=d, repair=True,
+        )
+        now_acc = lv & dlv.accept
+        now_drop = lv & dlv.drop & ~dlv.accept
+        moving = lv & ~dlv.accept & ~dlv.drop
+        # R1: keep descending while the new destination is still ours
+        stay = moving & JaxEngine._in_segment(dlv.new_dest, a_prev, a_self)
+        fwd = moving & ~stay
+        return (
+            stay, entry & ~stay,
+            jnp.where(stay, dlv.new_dest, cur_dest),
+            jnp.where(stay, dlv.new_edge, cur_edge),
+            jnp.where(stay, dlv.new_has_edge, cur_he),
+            acc | now_acc, drop | now_drop,
+            jnp.where(fwd, dlv.new_dest, o_dest),
+            jnp.where(fwd, dlv.new_edge, o_edge),
+            jnp.where(fwd, dlv.new_has_edge, o_he),
+        )
+
+    false_b = jnp.zeros(live.shape, bool)
+    init = (live, jnp.ones(live.shape, bool), dest, edge, has_edge,
+            false_b, false_b, dest, edge, has_edge)
+    (_, _, _, _, _, acc, drop, o_dest, o_edge, o_he) = jax.lax.while_loop(
+        cond, body, init
+    )
+    return acc, drop, o_dest, o_edge, o_he
+
+
+class DeviceState(NamedTuple):
+    """Complete simulation state; every leaf is a device array."""
+
+    # Alg. 3 peer state
+    x: jnp.ndarray         # (n,)    int32 votes
+    inbox: jnp.ndarray     # (n,3,3) int32 [X_in.ones, X_in.total, last_seq]
+    out_ones: jnp.ndarray  # (n,3)   int32
+    out_tot: jnp.ndarray   # (n,3)   int32
+    seq: jnp.ndarray       # (n,)    int32
+    # message table + circular free-list of slots
+    table: jnp.ndarray       # (C,8) uint32, see column constants
+    free_list: jnp.ndarray   # (C,)  int32 slot ids
+    free_head: jnp.ndarray   # ()    int32 next slot to allocate
+    free_count: jnp.ndarray  # ()    int32 number of free slots
+    # counters
+    t: jnp.ndarray              # () int32
+    messages_sent: jnp.ndarray  # () int32 network deliveries consumed
+    dropped: jnp.ndarray        # () int32 enqueue overflow (should stay 0)
+    deferred: jnp.ndarray       # () int32 deliveries pushed past the budget
+
+
+class JaxEngine:
+    """Device-backed `MajorityEngine` (see `repro.engine.base`)."""
+
+    backend = "jax"
+
+    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
+                 capacity_per_peer: int = 6, work_budget: int = 0,
+                 kernel: str = "auto"):
+        if ring.d > 32:
+            raise ValueError(
+                f"jax engine needs d <= 32 (uint32 addresses), got d={ring.d}"
+            )
+        assert votes.shape == (ring.n,)
+        if kernel not in ("auto", "pallas", "ref"):
+            raise ValueError(f"kernel must be auto|pallas|ref, got {kernel!r}")
+        self.ring = ring
+        self.n = int(ring.n)
+        self.d = int(ring.d)
+        self.capacity = max(64, capacity_per_peer * self.n)
+        # per-cycle delivery budget; with 1..10-cycle delays the steady
+        # active-phase due rate is well under n/4 per cycle, and overflow
+        # only defers deliveries (see `deferred`)
+        self.work_budget = min(
+            self.capacity, int(work_budget) or max(256, self.n // 4)
+        )
+        # "auto" uses the Pallas kernel only where it compiles natively;
+        # off-TPU it falls back to the jnp oracle (interpret mode is for
+        # parity tests, not throughput).
+        self._use_kernel = kernel == "pallas" or (kernel == "auto" and _on_tpu())
+        salt_rng = np.random.default_rng(seed)
+        self._salt_fwd = int(salt_rng.integers(0, 2**32, dtype=np.uint64))
+        self._salt_enq = int(salt_rng.integers(0, 2**32, dtype=np.uint64))
+
+        self._addrs = jnp.asarray(ring.addrs.astype(np.uint32))
+        self._prev = jnp.roll(self._addrs, 1)
+        self._pos = jnp.asarray(ring.positions().astype(np.uint32))
+
+        self._cycle = jax.jit(self._cycle_impl, donate_argnums=(0,))
+        self._react = jax.jit(self._react_impl, donate_argnums=(0,))
+        self._conv = jax.jit(self._converged_impl)
+
+        n, C = self.n, self.capacity
+        table = jnp.zeros((C, 8), _U32).at[:, DELIVER_T].set(NO_MSG)
+        st = DeviceState(
+            x=jnp.asarray(votes.astype(np.int32)),
+            inbox=jnp.zeros((n, NDIR, 3), _I32),
+            out_ones=jnp.zeros((n, NDIR), _I32),
+            out_tot=jnp.zeros((n, NDIR), _I32),
+            seq=jnp.zeros(n, _I32),
+            table=table,
+            free_list=jnp.arange(C, dtype=_I32),
+            free_head=jnp.zeros((), _I32),
+            free_count=jnp.asarray(C, _I32),
+            t=jnp.zeros((), _I32), messages_sent=jnp.zeros((), _I32),
+            dropped=jnp.zeros((), _I32), deferred=jnp.zeros((), _I32),
+        )
+        # initialization event: every peer runs test() (paper's init upcall)
+        self._st = self._react(st, jnp.ones(n, bool))
+
+    # -- jitted bodies -------------------------------------------------------
+
+    def _owner(self, addr: jnp.ndarray) -> jnp.ndarray:
+        """Peer index owning each address (successor with wrap)."""
+        return (jnp.searchsorted(self._addrs, addr, side="left") % self.n
+                ).astype(_I32)
+
+    @staticmethod
+    def _in_segment(addr, a_prev, a_self):
+        """Does `addr` fall in the segment (a_prev, a_self]? O(1) ownership
+        test given the segment edges; the wrapped (root) segment has
+        a_prev >= a_self."""
+        wrapped = a_prev >= a_self
+        inside = (addr > a_prev) & (addr <= a_self)
+        inside_wrap = (addr > a_prev) | (addr <= a_self)
+        return jnp.where(wrapped, inside_wrap, inside)
+
+    @staticmethod
+    def _compact(mask: jnp.ndarray, budget: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Indices of the first `budget` set bits of `mask`, gather-only.
+
+        Returns (idx (budget,) int32 — len(mask) where exhausted — and the
+        per-element ordinal cumsum of `mask`). searchsorted on the cumsum
+        replaces the usual full-length scatter, which is ~10x slower on
+        CPU XLA than this gather-based form.
+        """
+        cum = jnp.cumsum(mask.astype(_I32))
+        idx = jnp.searchsorted(
+            cum, jnp.arange(1, budget + 1, dtype=_I32), side="left"
+        ).astype(_I32)
+        return idx, cum
+
+    def _test_phase(self, st: DeviceState):
+        return majority_step(
+            st.inbox[..., 0], st.inbox[..., 1], st.out_ones, st.out_tot, st.x,
+            use_kernel=self._use_kernel,
+        )
+
+    def _send_phase(self, st: DeviceState, viol, pay_ones, pay_tot,
+                    peers: jnp.ndarray) -> DeviceState:
+        """Alg. 3 Send(v) for the peers listed in `peers` (sentinel n =
+        empty row): update X_out/seq, allocate table slots, enqueue.
+
+        `viol`/`pay_*` are the full (n,3) test outputs. Scatter work is
+        proportional to len(peers), not n.
+        """
+        n, d, C = self.n, self.d, self.capacity
+        L = peers.shape[0]
+        pv = peers < n
+        pc = jnp.where(pv, peers, 0)
+        vrows = viol[pc] & pv[:, None]  # (L,3)
+
+        # X_out/seq update mirrors the reference: X_out for every violating
+        # direction (valid or not), one seq bump per peer per event
+        send_nf = jnp.zeros((n, NDIR), bool).at[
+            jnp.where(pv, peers, n)
+        ].set(vrows, mode="drop")
+        out_ones = jnp.where(send_nf, pay_ones, st.out_ones)
+        out_tot = jnp.where(send_nf, pay_tot, st.out_tot)
+        seq = st.seq + send_nf.any(1).astype(_I32)
+
+        dirs = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (L, NDIR))
+        bc = lambda a: jnp.broadcast_to(a[:, None], (L, NDIR))
+        valid, origin, dest, edge, has_edge = P.send_fields(
+            jnp, bc(self._pos[pc]), dirs, bc(self._addrs[pc]),
+            bc(self._prev[pc]), d
+        )
+        cand = (vrows & valid).reshape(-1)  # (3L,)
+
+        # pop one free slot per candidate from the circular free-list
+        rank = jnp.cumsum(cand) - 1
+        ok = cand & (rank < st.free_count)
+        slot = st.free_list[(st.free_head + rank) % C]
+        target = jnp.where(ok, slot, C)
+        used = ok.sum().astype(_I32)
+
+        delays = st.t + _hash_delay(
+            jnp.arange(3 * L, dtype=_I32), st.t + st.messages_sent,
+            self._salt_enq,
+        )
+        u = lambda a: a.reshape(-1).astype(_U32)
+        rows = jnp.stack(
+            [u(origin), u(dest), u(edge), u(has_edge),
+             u(pay_ones[pc]), u(pay_tot[pc]), u(bc(seq[pc])), u(delays)],
+            axis=1,
+        )  # (3L, 8)
+        return st._replace(
+            out_ones=out_ones, out_tot=out_tot, seq=seq,
+            table=st.table.at[target].set(rows, mode="drop"),
+            free_head=(st.free_head + used) % C,
+            free_count=st.free_count - used,
+            dropped=st.dropped + (cand & ~ok).sum().astype(_I32),
+        )
+
+    def _react_impl(self, st: DeviceState, touched: jnp.ndarray) -> DeviceState:
+        """Alg. 3 test() + Send(v) for all `touched` peers (full-width
+        event path: initialization and vote changes)."""
+        viol, _, pay_ones, pay_tot = self._test_phase(st)
+        peers = jnp.where(touched, jnp.arange(self.n, dtype=_I32), self.n)
+        return self._send_phase(st, viol, pay_ones, pay_tot, peers)
+
+    def _cycle_impl(self, st: DeviceState) -> DeviceState:
+        """One simulation cycle: deliver due messages, route, accept, react."""
+        n, d, C, B = self.n, self.d, self.capacity, self.work_budget
+
+        # ---- compact due slots into the (B,) work buffer (gather-only)
+        dt_col = st.table[:, DELIVER_T]
+        due = dt_col == st.t.astype(_U32)
+        row_of, cum_due = self._compact(due, B)
+        n_due = cum_due[-1]
+        row_ok = row_of < C
+        w = st.table[jnp.where(row_ok, row_of, 0)]  # (B,8)
+        w_origin, w_dest, w_edge = w[:, ORIGIN], w[:, DEST], w[:, EDGE]
+        w_has_edge = w[:, HAS_EDGE] != 0
+        w_seq = w[:, SEQ].astype(_I32)
+        # over-budget due rows slip one cycle (elementwise, counted)
+        slipped = due & (cum_due > B)
+        table = st.table.at[:, DELIVER_T].set(
+            jnp.where(slipped, st.t.astype(_U32) + _U32(1), dt_col)
+        )
+
+        owner = self._owner(w_dest)  # the one table-wide binary search
+        pos_i = self._pos[owner]
+        a_prev = self._prev[owner]
+        a_self = self._addrs[owner]
+        self_seg = self._in_segment(w_origin, a_prev, a_self)
+        max_addr = self._addrs[-1]
+
+        # ---- Alg. 1 delivery (shared semantics: deliver_network_step)
+        acc, drop, o_dest, o_edge, o_he = deliver_network_step(
+            origin=w_origin, dest=w_dest, edge=w_edge, has_edge=w_has_edge,
+            live=row_ok, pos_i=pos_i, a_prev=a_prev, a_self=a_self,
+            self_seg=self_seg, max_addr=max_addr, d=d,
+        )
+        fwd = row_ok & ~acc & ~drop
+
+        # ---- one row-scatter updates the whole table: forwards get their
+        # new dest/edge and a fresh delay, accepts/drops release the slot
+        fwd_delay = (st.t + _hash_delay(row_of, st.t, self._salt_fwd)).astype(_U32)
+        new_dt = jnp.where(fwd, fwd_delay, NO_MSG)  # acc|drop -> free
+        u = lambda a: a.astype(_U32)
+        upd = jnp.stack(
+            [w_origin, jnp.where(fwd, o_dest, w_dest),
+             jnp.where(fwd, o_edge, w_edge), u(jnp.where(fwd, o_he, w_has_edge)),
+             w[:, PAY_ONES], w[:, PAY_TOT], w[:, SEQ], new_dt],
+            axis=1,
+        )
+        rel = acc | drop  # released slots return to the free-list tail
+        rel_rank = jnp.cumsum(rel) - 1
+        tail = (st.free_head + st.free_count + rel_rank) % C
+        st = st._replace(
+            table=table.at[jnp.where(row_ok, row_of, C)].set(upd, mode="drop"),
+            free_list=st.free_list.at[jnp.where(rel, tail, C)].set(
+                row_of, mode="drop"
+            ),
+            free_count=st.free_count + rel.sum().astype(_I32),
+            messages_sent=st.messages_sent + jnp.minimum(n_due, B),
+            deferred=st.deferred + jnp.maximum(n_due - B, 0),
+        )
+
+        # ---- ACCEPT upcalls: X_in with per-(peer,dir) newest-seq dedup
+        recv = owner
+        vdir = jnp.asarray(
+            A.direction_of(w_origin, self._pos[recv], d), _I32
+        )
+        flat = recv * NDIR + vdir
+        best_seq = jnp.full(n * NDIR, -1, _I32).at[flat].max(
+            jnp.where(acc, w_seq, -1), mode="drop"
+        )
+        is_best = acc & (w_seq == best_seq[flat])
+        rowi = jnp.arange(B, dtype=_I32)
+        best_row = jnp.full(n * NDIR, -1, _I32).at[flat].max(
+            jnp.where(is_best, rowi, -1), mode="drop"
+        )
+        winner = is_best & (rowi == best_row[flat])
+        last = st.inbox[recv, vdir, 2]
+        fresh = winner & (w_seq > last)
+        r_idx = jnp.where(fresh, recv, n)  # out-of-bounds rows drop
+        newbox = jnp.stack(
+            [w[:, PAY_ONES].astype(_I32), w[:, PAY_TOT].astype(_I32), w_seq],
+            axis=1,
+        )  # (B,3)
+        touched = jnp.zeros(n, bool).at[jnp.where(acc, recv, n)].set(
+            True, mode="drop"
+        )
+        st = st._replace(
+            inbox=st.inbox.at[r_idx, vdir].set(newbox, mode="drop"),
+        )
+
+        # ---- react: test() on touched peers, Send via the compacted
+        # acceptor set (scatter work ∝ budget, not n)
+        peers_u, _ = self._compact(touched, B)
+        peers_u = jnp.where(peers_u < n, peers_u, n)
+        viol, _, pay_ones, pay_tot = self._test_phase(st)
+        st = self._send_phase(st, viol, pay_ones, pay_tot, peers_u)
+        return st._replace(t=st.t + 1)
+
+    def _converged_impl(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
+        _, out, _, _ = self._test_phase(st)
+        return (out == truth).all()
+
+    # -- engine API ----------------------------------------------------------
+
+    @property
+    def t(self) -> int:
+        return int(self._st.t)
+
+    @property
+    def messages_sent(self) -> int:
+        return int(self._st.messages_sent)
+
+    @property
+    def in_flight(self) -> int:
+        return int(self.capacity) - int(self._st.free_count)
+
+    @property
+    def dropped(self) -> int:
+        """Messages lost to table overflow; 0 unless capacity_per_peer is
+        set too low (the numpy table grows instead — see DESIGN.md)."""
+        return int(self._st.dropped)
+
+    @property
+    def deferred(self) -> int:
+        """Deliveries pushed one cycle past their due time because a cycle
+        had more due messages than `work_budget` rows."""
+        return int(self._st.deferred)
+
+    def outputs(self) -> np.ndarray:
+        _, out, _, _ = self._test_phase(self._st)
+        return np.asarray(out, dtype=np.int64)
+
+    def votes(self) -> np.ndarray:
+        return np.asarray(self._st.x, dtype=np.int64)
+
+    def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
+        idx = np.asarray(idx)
+        st = self._st
+        x = st.x.at[jnp.asarray(idx)].set(
+            jnp.asarray(np.asarray(new_votes, np.int32))
+        )
+        touched = jnp.zeros(self.n, bool).at[jnp.asarray(idx)].set(True)
+        self._st = self._react(st._replace(x=x), touched)
+
+    def step(self, cycles: int = 1) -> None:
+        for _ in range(cycles):
+            self._st = self._cycle(self._st)
+
+    def block_until_ready(self) -> None:
+        jax.block_until_ready(self._st)
+
+    def run_until_converged(self, truth: int, max_cycles: int = 200_000,
+                            stable_for: int = 1) -> EngineResult:
+        start_msgs = self.messages_sent
+        truth_dev = jnp.asarray(truth, _I32)
+        stable = 0
+        for _ in range(max_cycles):
+            if bool(self._conv(self._st, truth_dev)):
+                stable += 1
+                if stable >= stable_for:
+                    return {"cycles": self.t,
+                            "messages": self.messages_sent - start_msgs,
+                            "converged": 1.0}
+            else:
+                stable = 0
+            self.step()
+        return {"cycles": self.t,
+                "messages": self.messages_sent - start_msgs,
+                "converged": 0.0}

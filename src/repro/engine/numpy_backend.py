@@ -1,0 +1,64 @@
+"""Numpy reference engine — ground truth for the device backend.
+
+A thin adapter putting the cycle-exact reference simulator
+(`repro.core.majority.MajoritySimulator`, host numpy, growing message
+table, `np.random` delays) behind the `MajorityEngine` API. Protocol
+rules are the shared pure functions in `repro.engine.protocol`, so a
+divergence between this backend and the jax one can only come from the
+simulation harness (RNG, table mechanics), never from the rules.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dht import Ring
+from repro.core.majority import MajoritySimulator
+from repro.engine.base import EngineResult
+
+
+class NumpyEngine:
+    """Host-backed `MajorityEngine` (see `repro.engine.base`)."""
+
+    backend = "numpy"
+
+    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0):
+        self.ring = ring
+        self.sim = MajoritySimulator(ring, votes, seed=seed)
+
+    @property
+    def t(self) -> int:
+        return self.sim.t
+
+    @property
+    def messages_sent(self) -> int:
+        return self.sim.messages_sent
+
+    @property
+    def in_flight(self) -> int:
+        return self.sim.msgs.in_flight
+
+    def outputs(self) -> np.ndarray:
+        return self.sim.state.outputs()
+
+    def votes(self) -> np.ndarray:
+        return self.sim.state.x.copy()
+
+    def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
+        self.sim.set_votes(np.asarray(idx), np.asarray(new_votes))
+
+    def alert(self, peers: np.ndarray, dirs: np.ndarray) -> None:
+        """Alg. 2 ALERT upcall (numpy backend only for now)."""
+        self.sim.alert(peers, dirs)
+
+    def step(self, cycles: int = 1) -> None:
+        for _ in range(cycles):
+            self.sim.step()
+
+    def block_until_ready(self) -> None:  # API symmetry with JaxEngine
+        pass
+
+    def run_until_converged(self, truth: int, max_cycles: int = 200_000,
+                            stable_for: int = 1) -> EngineResult:
+        return self.sim.run_until_converged(
+            truth, max_cycles=max_cycles, stable_for=stable_for
+        )

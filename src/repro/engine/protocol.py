@@ -1,0 +1,158 @@
+"""Alg. 1 / Alg. 3 protocol rules as backend-agnostic pure functions.
+
+Every rule the paper states — the SEND construction, the DELIVER
+classification (with the R1/R2 repairs, DESIGN.md §Faithfulness) and the
+Alg. 3 threshold/violation algebra — lives here exactly once, written
+against an explicit array namespace `xp` (``numpy`` or ``jax.numpy``).
+The numpy reference simulator (`repro.core.routing` / `.majority`) and
+the device engine (`repro.engine.jax_backend`) both consume these
+functions, so the two backends cannot drift apart rule-by-rule; the
+Pallas ``majority_step`` kernel implements `majority_rules` and is
+checked against it in tests.
+
+All functions are shape-polymorphic (scalars or batches), jit-safe on
+the jnp path, and perform no data-dependent control flow. Ownership
+lookups (who owns an address) are the DHT's job, not the protocol's —
+callers pass the resolved `pos_i` / `a_prev` / `a_self` / `self_seg`
+of the receiving peer.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+from repro.core import addressing as A
+from repro.core.addressing import CCW, CW, UP
+
+Array = Any  # np.ndarray | jax.Array
+
+
+def _zero_like(xp, a: Array) -> Array:
+    return xp.zeros_like(a)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — SEND
+# ---------------------------------------------------------------------------
+
+def send_fields(xp, pos_p: Array, dirs: Array, a_self: Array, a_prev: Array,
+                d: int) -> Tuple[Array, Array, Array, Array, Array]:
+    """Downcall SEND for (position, direction) pairs, vectorized.
+
+    `pos_p` is the sender's tree position, `a_self`/`a_prev` the segment
+    edges of the peer performing the send (for ALERTs emulated from a
+    foreign position these are still the *sender peer's* edges). Returns
+    (valid, origin, dest, edge, has_edge); invalid sends are the
+    structurally-missing directions (root UP/CCW, leaf CW/CCW) — the
+    paper's "we prefer wasting those messages" stance.
+    """
+    leaf = A.is_leaf(pos_p)
+    root = pos_p == 0
+    dest = xp.where(
+        dirs == UP, A.up(pos_p, d),
+        xp.where(dirs == CW, A.cw(pos_p, d), A.ccw(pos_p, d)),
+    ).astype(a_self.dtype)
+    edge = xp.where(dirs == CW, a_self, a_prev).astype(a_self.dtype)
+    has_edge = dirs != UP
+    valid = xp.where(
+        dirs == UP, ~root, xp.where(dirs == CW, ~leaf, ~leaf & ~root)
+    )
+    return valid, pos_p.astype(a_self.dtype), dest, edge, has_edge
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — DELIVER (one local step at the owner peer)
+# ---------------------------------------------------------------------------
+
+class Delivery(NamedTuple):
+    """Classification of one local Alg. 1 step (all arrays, same batch)."""
+
+    accept: Array    # bool — dest == pos_i, foreign origin
+    drop: Array      # bool — self-send / edge kill / address space exhausted
+    new_dest: Array  # recalculated destination (meaningful where ~accept&~drop)
+    new_edge: Array  # segment edge attached to the forward
+    new_has_edge: Array  # bool — UP forwards carry no edge
+
+
+def deliver_rules(xp, *, origin: Array, dest: Array, edge: Array,
+                  has_edge: Array, network_entry: Array, pos_i: Array,
+                  a_prev: Array, a_self: Array, self_seg: Array,
+                  max_addr: Array, d: int, repair: bool = True) -> Delivery:
+    """Alg. 1 upcall DELIVER at the peer owning `dest` — one step.
+
+    `network_entry` is False while a peer keeps descending through its
+    own segment (R1): the edge-based kill applies only to messages
+    actually received from the network. `self_seg` marks messages whose
+    origin position falls in the receiving peer's own segment (the
+    paper's bounce-off-self rule; segment test so that emulated Alg. 2
+    ALERTs behave, see core.notify). `max_addr` is the maximum occupied
+    peer address — R2 root wrap (repair) descends CCW above it.
+
+    The caller decides what to do with the result: forward through the
+    DHT, keep descending locally (R1, when it still owns `new_dest`),
+    or finalize accept/drop.
+    """
+    at_pos = dest == pos_i
+    self_send = origin == pos_i
+    accept = at_pos & ~self_send
+
+    going_up = A.is_foreparent(dest, origin, d)
+    in_cw = A.in_cw_subtree(origin, dest, d)
+    kill_edge = xp.where(in_cw, a_prev, a_self)
+    edge_kill = (
+        network_entry & has_edge & (edge == kill_edge) & ~going_up & ~at_pos
+    )
+    leaf = A.is_leaf(dest) & ~going_up & ~at_pos
+    drop = (at_pos & self_send) | edge_kill | leaf
+
+    root_wrap = (
+        (pos_i == 0) & (dest > max_addr) if repair else xp.zeros_like(at_pos)
+    )
+    step_cw = xp.where(root_wrap, False, xp.where(self_seg, in_cw, ~in_cw))
+    new_dest = xp.where(
+        going_up, A.up(dest, d),
+        xp.where(step_cw, A.cw(dest, d), A.ccw(dest, d)),
+    ).astype(dest.dtype)
+    new_edge = xp.where(
+        going_up, _zero_like(xp, a_self), xp.where(step_cw, a_self, a_prev)
+    ).astype(dest.dtype)
+    new_has_edge = ~going_up
+    return Delivery(accept, drop, new_dest, new_edge, new_has_edge)
+
+
+def accept_direction(origin: Array, self_pos: Array, d: int) -> Array:
+    """ACCEPT upcall: direction (UP/CW/CCW) the message arrived from."""
+    return A.direction_of(origin, self_pos, d)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 — threshold algebra (knowledge / agreement / violation / Send)
+# ---------------------------------------------------------------------------
+
+def thr2(ones: Array, total: Array) -> Array:
+    """2 * thr(X): integer-exact sign of ones - total/2 (the paper's
+    (1,-1/2)^t X functional, kept in integers)."""
+    return 2 * ones - total
+
+
+def majority_rules(in_ones: Array, in_tot: Array, out_ones: Array,
+                   out_tot: Array, x: Array) -> Tuple[Array, Array, Array, Array]:
+    """The complete per-peer Alg. 3 test, vectorized over peers.
+
+    Inputs are the (N, 3) received/sent counter planes and the (N,) own
+    votes. Returns (viol (N,3) bool, output (N,), pay_ones (N,3),
+    pay_tot (N,3)) where pay = K - X_in is the Send(v) payload that
+    restores agreement A_{i,v} = K_i. Pure arithmetic — works unchanged
+    on numpy and jnp arrays; the Pallas `majority_step` kernel is the
+    fused device implementation of exactly this function.
+    """
+    k_ones = in_ones.sum(-1) + x  # (N,)
+    k_tot = in_tot.sum(-1) + 1
+    a_ones = in_ones + out_ones  # (N, 3)
+    a_tot = in_tot + out_tot
+    ta = thr2(a_ones, a_tot)
+    tka = thr2(k_ones[..., None] - a_ones, k_tot[..., None] - a_tot)
+    viol = ((ta >= 0) & (tka < 0)) | ((ta < 0) & (tka > 0))
+    output = (thr2(k_ones, k_tot) >= 0).astype(in_ones.dtype)
+    pay_ones = k_ones[..., None] - in_ones
+    pay_tot = k_tot[..., None] - in_tot
+    return viol, output, pay_ones, pay_tot

@@ -1,0 +1,13 @@
+"""Pallas TPU API compatibility aliases.
+
+The TPU-backend names were renamed upstream (``TPUCompilerParams`` ->
+``CompilerParams``, ``TPUMemorySpace`` -> ``MemorySpace``); the kernels
+import the spelling-stable aliases from here so they run on either side
+of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace

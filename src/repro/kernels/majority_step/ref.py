@@ -1,15 +1,19 @@
 """Pure-jnp oracle for the fused Alg. 3 test() over all peers.
 
-Mirrors `repro.core.majority.MajorityState.violations` exactly, plus the
-outputs and the Send(v) payloads, in one pass. Inputs are the unpacked
-counter planes (ones/total per direction) — the layout a TPU-resident
-peer-state array would use (peers on the 128-lane minor axis).
+Delegates to the backend-agnostic rule (`repro.engine.protocol.
+majority_rules`) the numpy simulator consumes too — one definition of
+the test, three executors (numpy state machine, jnp oracle, Pallas
+kernel). Inputs are the unpacked counter planes (ones/total per
+direction) — the layout a TPU-resident peer-state array would use
+(peers on the 128-lane minor axis).
 """
 from __future__ import annotations
 
 from typing import Tuple
 
 import jax.numpy as jnp
+
+from repro.engine.protocol import majority_rules
 
 
 def majority_step_reference(
@@ -21,14 +25,7 @@ def majority_step_reference(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (viol (N,3) bool, output (N,) int32,
                 pay_ones (N,3), pay_tot (N,3)) with pay = K - X_in."""
-    k_ones = in_ones.sum(-1) + x  # (N,)
-    k_tot = in_tot.sum(-1) + 1
-    a_ones = in_ones + out_ones  # (N,3)
-    a_tot = in_tot + out_tot
-    ta = 2 * a_ones - a_tot
-    tka = 2 * (k_ones[:, None] - a_ones) - (k_tot[:, None] - a_tot)
-    viol = ((ta >= 0) & (tka < 0)) | ((ta < 0) & (tka > 0))
-    output = (2 * k_ones - k_tot >= 0).astype(jnp.int32)
-    pay_ones = k_ones[:, None] - in_ones
-    pay_tot = k_tot[:, None] - in_tot
-    return viol, output, pay_ones, pay_tot
+    viol, output, pay_ones, pay_tot = majority_rules(
+        in_ones, in_tot, out_ones, out_tot, x
+    )
+    return viol, output.astype(jnp.int32), pay_ones, pay_tot

@@ -37,7 +37,7 @@ from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import abstract_params
 from repro.optim.adamw import AdamWConfig, abstract_state
-from repro.analysis.hlo import collective_bytes, flops_and_bytes
+from repro.analysis.hlo import collective_bytes, flops_and_bytes, xla_cost
 
 
 def _named(mesh, spec_tree):
@@ -138,7 +138,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost(compiled)
     hlo_txt = compiled.as_text()
     coll = collective_bytes(hlo_txt)
     fb = flops_and_bytes(hlo_txt)  # loop-scaled (cost_analysis counts scan

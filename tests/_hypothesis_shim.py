@@ -1,0 +1,48 @@
+"""Optional-hypothesis shim for the property tests.
+
+`hypothesis` is not part of the baked image and cannot be installed
+offline. Importing it at module scope used to *error* the whole test
+collection (pytest aborts on collection errors, taking every other test
+down with it). This shim keeps the property tests importable: when
+hypothesis is present it re-exports the real `given`/`settings`/
+`strategies`; when absent it substitutes decorators that turn each
+property test into an individual skip, leaving the non-property tests in
+the same module running normally.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*a, **k):
+                pytest.skip("hypothesis not installed")
+
+            # present a zero-arg signature so pytest does not mistake the
+            # strategy parameters (reachable via __wrapped__) for fixtures
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategy:
+        """Inert stand-in: every strategy constructor returns None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategy()

@@ -1,7 +1,8 @@
 """Property tests for the paper's address algebra (paper §2, Appendix A)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core import addressing as A
 from repro.core.dht import Ring

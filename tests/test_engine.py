@@ -1,0 +1,216 @@
+"""Engine layer: backend protocol parity (numpy reference vs device).
+
+Three levels of equivalence, strongest first:
+  1. rule level — `engine.protocol` functions produce bit-identical
+     results on numpy and jnp arrays (no RNG involved);
+  2. step level — one network delivery through `routing.step_batch`
+     (numpy) and through the jax engine's deliver loop classify every
+     message identically;
+  3. system level — full 1,024-peer majority-voting runs on both
+     backends converge to the same outputs with message counts inside
+     the seeded-RNG tolerance documented in DESIGN.md §Engine.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import addressing as A
+from repro.core import routing as R
+from repro.core.dht import Ring
+from repro.engine import BACKENDS, make_engine
+from repro.engine import protocol as P
+
+
+def _votes(n, mu, rng):
+    k = int(round(n * mu))
+    v = np.zeros(n, np.int64)
+    v[rng.choice(n, k, replace=False)] = 1
+    return v
+
+
+# ---------------------------------------------------------------------------
+# 1. rule level
+# ---------------------------------------------------------------------------
+
+def test_send_fields_numpy_vs_jnp():
+    ring = Ring.random(500, 32, seed=1)
+    pos = ring.positions()
+    rng = np.random.default_rng(2)
+    peers = rng.integers(0, ring.n, 3000)
+    dirs = rng.integers(0, 3, 3000)
+    out_np = P.send_fields(
+        np, pos[peers], dirs, ring.addrs[peers], ring.prev[peers], ring.d
+    )
+    out_j = P.send_fields(
+        jnp,
+        jnp.asarray(pos[peers].astype(np.uint32)), jnp.asarray(dirs),
+        jnp.asarray(ring.addrs[peers].astype(np.uint32)),
+        jnp.asarray(ring.prev[peers].astype(np.uint32)), ring.d,
+    )
+    for a, b in zip(out_np, out_j):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        )
+
+
+def test_majority_rules_numpy_vs_jnp():
+    rng = np.random.default_rng(3)
+    n = 4000
+    io = rng.integers(0, 40, (n, 3))
+    it = io + rng.integers(0, 40, (n, 3))
+    oo = rng.integers(0, 40, (n, 3))
+    ot = oo + rng.integers(0, 40, (n, 3))
+    x = rng.integers(0, 2, n)
+    out_np = P.majority_rules(io, it, oo, ot, x)
+    out_j = P.majority_rules(
+        jnp.asarray(io, jnp.int32), jnp.asarray(it, jnp.int32),
+        jnp.asarray(oo, jnp.int32), jnp.asarray(ot, jnp.int32),
+        jnp.asarray(x, jnp.int32),
+    )
+    for a, b in zip(out_np, out_j):
+        np.testing.assert_array_equal(np.asarray(a, np.int64),
+                                      np.asarray(b, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# 2. step level — numpy step_batch vs the jax engine's delivery loop
+# ---------------------------------------------------------------------------
+
+def _jax_network_step(ring, origin, dest, edge, has_edge):
+    """One network delivery through the device engine's own routing code
+    (`deliver_network_step` — the function `_cycle_impl` executes)."""
+    from repro.engine.jax_backend import JaxEngine, deliver_network_step
+
+    n, d = ring.n, ring.d
+    addrs = jnp.asarray(ring.addrs.astype(np.uint32))
+    prev = jnp.roll(addrs, 1)
+    pos = jnp.asarray(ring.positions().astype(np.uint32))
+    oj = jnp.asarray(origin.astype(np.uint32))
+    dj = jnp.asarray(dest.astype(np.uint32))
+    owner = jnp.searchsorted(addrs, dj, side="left") % n
+    pos_i, a_prev, a_self = pos[owner], prev[owner], addrs[owner]
+    acc, drop, od, oe, ohe = deliver_network_step(
+        origin=oj, dest=dj, edge=jnp.asarray(edge.astype(np.uint32)),
+        has_edge=jnp.asarray(has_edge),
+        live=jnp.ones(origin.shape[0], bool),
+        pos_i=pos_i, a_prev=a_prev, a_self=a_self,
+        self_seg=JaxEngine._in_segment(oj, a_prev, a_self),
+        max_addr=addrs[-1], d=d,
+    )
+    status = np.where(np.asarray(acc), R.ACCEPT,
+                      np.where(np.asarray(drop), R.DROP, R.FORWARD))
+    return status, np.asarray(owner), np.asarray(od), np.asarray(oe), np.asarray(ohe)
+
+
+@pytest.mark.slow
+def test_delivery_exact_parity_multihop():
+    """Every message classifies identically in both backends, hop by hop,
+    until the whole batch has been accepted or dropped (no RNG here)."""
+    ring = Ring.random(300, 32, seed=5)
+    pos = ring.positions()
+    rng = np.random.default_rng(7)
+    k = 2000
+    peers = rng.integers(0, ring.n, k)
+    dirs = rng.integers(0, 3, k)
+    valid, origin, dest, edge, has_edge = R.send_batch(ring, peers, dirs, pos=pos)
+    v = np.nonzero(valid)[0]
+    origin, dest, edge, has_edge = origin[v], dest[v], edge[v], has_edge[v]
+    hops = 0
+    while origin.size and hops < ring.d + 2:
+        status, owner, nd, ne, nhe = R.step_batch(
+            ring, origin, dest, edge, has_edge, pos=pos
+        )
+        status_j, owner_j, od, oe, ohe = _jax_network_step(
+            ring, origin, dest, edge, has_edge
+        )
+        np.testing.assert_array_equal(status_j, status)
+        np.testing.assert_array_equal(owner_j, owner)
+        f = status == R.FORWARD
+        np.testing.assert_array_equal(od[f], nd[f].astype(np.uint32))
+        np.testing.assert_array_equal(oe[f], ne[f].astype(np.uint32))
+        np.testing.assert_array_equal(ohe[f], nhe[f])
+        origin, dest, edge, has_edge = origin[f], nd[f], ne[f], nhe[f]
+        hops += 1
+    assert origin.size == 0, "messages did not terminate"
+
+
+# ---------------------------------------------------------------------------
+# 3. system level — the acceptance-criterion parity run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_parity_1024_peers():
+    """1,024-peer run: numpy and device backends (Pallas kernel in
+    interpret mode) converge to identical outputs; message counts agree
+    within the seeded-RNG tolerance (DESIGN.md §Engine documents 20%)."""
+    n = 1024
+    rng = np.random.default_rng(0)
+    ring = Ring.random(n, 32, seed=0)
+    votes = _votes(n, 0.3, rng)
+
+    jx = make_engine("jax", ring, votes, seed=1, kernel="pallas")
+    nu = make_engine("numpy", ring, votes, seed=1)
+    r_j = jx.run_until_converged(truth=0, max_cycles=20_000)
+    r_n = nu.run_until_converged(truth=0, max_cycles=20_000)
+    assert r_j["converged"] == 1.0 and r_n["converged"] == 1.0
+    np.testing.assert_array_equal(jx.outputs(), nu.outputs())
+    assert jx.dropped == 0
+    assert abs(r_j["messages"] - r_n["messages"]) <= 0.2 * r_n["messages"]
+
+    # vote flip (paper §4.2.1) reconverges identically too
+    new = _votes(n, 0.7, rng)
+    for eng in (jx, nu):
+        chg = np.nonzero(new != eng.votes())[0]
+        eng.set_votes(chg, new[chg])
+    r_j2 = jx.run_until_converged(truth=1, max_cycles=20_000)
+    r_n2 = nu.run_until_converged(truth=1, max_cycles=20_000)
+    assert r_j2["converged"] == 1.0 and r_n2["converged"] == 1.0
+    np.testing.assert_array_equal(jx.outputs(), nu.outputs())
+    assert abs(r_j2["messages"] - r_n2["messages"]) <= 0.2 * r_n2["messages"]
+
+
+def test_jax_engine_budget_overflow_defers_not_drops():
+    """A tiny work budget must slip deliveries (deferred counter), never
+    lose them; the run still converges."""
+    n = 300
+    rng = np.random.default_rng(1)
+    ring = Ring.random(n, 32, seed=1)
+    votes = _votes(n, 0.35, rng)
+    eng = make_engine("jax", ring, votes, seed=2, kernel="ref",
+                      work_budget=64)
+    res = eng.run_until_converged(truth=0, max_cycles=20_000)
+    assert res["converged"] == 1.0
+    assert eng.deferred > 0  # the budget did bind
+    assert eng.dropped == 0  # but nothing was lost
+
+
+def test_jax_engine_capacity_overflow_counts_drops():
+    """Exhausting the table records drops instead of corrupting state."""
+    n = 200
+    rng = np.random.default_rng(2)
+    ring = Ring.random(n, 32, seed=2)
+    votes = _votes(n, 0.4, rng)
+    eng = make_engine("jax", ring, votes, seed=3, kernel="ref",
+                      capacity_per_peer=1)
+    eng.step(30)
+    assert eng.dropped > 0
+    assert 0 <= eng.in_flight <= eng.capacity
+
+
+def test_engine_api_surface():
+    ring = Ring.random(64, 32, seed=3)
+    votes = np.zeros(64, np.int64)
+    with pytest.raises(ValueError):
+        make_engine("cuda", ring, votes)
+    with pytest.raises(ValueError):
+        make_engine("jax", Ring.random(64, 48, seed=3), votes)
+    with pytest.raises(ValueError):
+        make_engine("jax", ring, votes, kernel="warp")
+    for backend in BACKENDS:
+        eng = make_engine(backend, ring, votes, seed=0)
+        assert eng.backend == backend
+        assert eng.messages_sent == 0  # unanimity: init sends nothing
+        eng.step(5)
+        assert (eng.outputs() == 0).all()
+        assert eng.votes().shape == (64,)

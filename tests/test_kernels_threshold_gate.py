@@ -2,7 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels.threshold_gate.ops import threshold_gate
 from repro.kernels.threshold_gate.ref import threshold_gate_reference

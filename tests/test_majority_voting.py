@@ -14,6 +14,7 @@ def _votes(n, mu, rng):
     return v
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mu,truth", [(0.3, 0), (0.7, 1), (0.45, 0), (0.55, 1)])
 def test_local_majority_converges_to_truth(mu, truth):
     rng = np.random.default_rng(0)
@@ -23,6 +24,7 @@ def test_local_majority_converges_to_truth(mu, truth):
     assert res["converged"] == 1.0
 
 
+@pytest.mark.slow
 def test_vote_flip_reconverges():
     """Paper §4.2.1: mu_pre < 1/2 < mu_post transition."""
     rng = np.random.default_rng(1)
@@ -37,6 +39,7 @@ def test_vote_flip_reconverges():
     assert r2["converged"] == 1.0
 
 
+@pytest.mark.slow
 def test_local_beats_gossip_on_messages():
     """The paper's headline: local thresholding uses a fraction of the
     messages gossip needs for the same task."""

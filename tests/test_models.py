@@ -25,6 +25,7 @@ def _inputs(cfg, b, s, rng):
     return toks, fe
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
     rng = np.random.default_rng(0)
@@ -39,6 +40,7 @@ def test_smoke_train_step(arch):
     assert np.isfinite(float(loss)) and np.isfinite(gn), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_decode_matches_forward(arch):
     rng = np.random.default_rng(1)
@@ -61,6 +63,7 @@ def test_smoke_decode_matches_forward(arch):
     assert err < 5e-4, f"{arch}: decode diverges from forward ({err})"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-350m"])
 def test_loss_decreases(arch):
     from repro.launch.steps import make_train_step
@@ -79,6 +82,7 @@ def test_loss_decreases(arch):
     assert losses[-1] < losses[0] - 0.05, losses
 
 
+@pytest.mark.slow
 def test_multi_step_decode_consistency():
     """Five decode steps == teacher-forced forward on the concatenation."""
     rng = np.random.default_rng(3)

@@ -18,6 +18,7 @@ def _run(args, timeout=560):
                           text=True, env=env, timeout=timeout)
 
 
+@pytest.mark.slow
 def test_train_smoke_with_failure_recovery(tmp_path):
     r = _run([
         "repro.launch.train", "--arch", "smollm-135m", "--smoke",
@@ -30,6 +31,7 @@ def test_train_smoke_with_failure_recovery(tmp_path):
     assert "step=20" in r.stdout  # resumed past the failure
 
 
+@pytest.mark.slow
 def test_threshold_sync_trainer():
     r = _run([
         "repro.launch.train", "--arch", "smollm-135m", "--smoke",
@@ -44,6 +46,7 @@ def test_threshold_sync_trainer():
     assert syncs >= 1
 
 
+@pytest.mark.slow
 def test_serve_smoke():
     r = _run([
         "repro.launch.serve", "--arch", "smollm-135m", "--smoke",
