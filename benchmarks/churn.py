@@ -1,0 +1,140 @@
+"""Churn benchmark: majority voting under Poisson join/leave (Alg. 2).
+
+For each peer count, both engine backends run the same seeded schedule:
+converge, fire `events` interleaved join/leave upcalls (exponential
+inter-event gaps, i.e. a Poisson churn process), then re-converge to the
+true majority of the surviving vote set. Recorded per backend:
+
+  * reconverge_cycles / reconverge_messages — the paper's cost unit for
+    "tree change notification with similar efficiency";
+  * alert_overhead — network deliveries per event attributable to the
+    Alg. 2 machinery, measured against the `core.notify` reference
+    (synchronous routing of the same events on the same ring snapshots);
+  * cycles/sec *during* the churn phase — the device-vs-reference
+    throughput while membership is changing (join/leave upcalls
+    included), written to ``results/BENCH_churn.json`` so the perf
+    trajectory is tracked PR over PR.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only churn
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+DEFAULT_SIZES = (256, 1024)
+DEFAULT_EVENTS = 32
+OUT_PATH = os.path.join("results", "BENCH_churn.json")
+
+
+def _schedule(ring0, events: int, seed: int, mean_gap: float = 20.0):
+    """Poisson-gap churn schedule via the shared seeded generator
+    (`repro.core.churn`) — the same events the engines replay."""
+    from repro.core.churn import random_schedule
+
+    return random_schedule(ring0, events, seed, mean_gap=mean_gap)
+
+
+def _reference_alert_cost(snaps) -> int:
+    """Total network deliveries the scalar `core.notify` reference
+    spends routing the same events' ALERTs (the paper's <= 6 tree
+    messages per change)."""
+    from repro.core import notify as N
+
+    total = 0
+    for ring_after, a_im2, a_im1, a_i in snaps:
+        pos = ring_after.positions()
+        for alert in N.alerts_for_change(a_im2, a_im1, a_i, ring_after.d,
+                                         ring_after.addrs.dtype):
+            _, trace = N.route_alert_trace(ring_after, alert, pos=pos)
+            if trace is not None:
+                total += len(trace)
+    return total
+
+
+def bench_backend(backend: str, n: int, events: int, seed: int = 0) -> dict:
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+
+    rng = np.random.default_rng(seed)
+    ring = Ring.random(n, 32, seed=seed)
+    votes = np.zeros(n, np.int64)
+    votes[rng.choice(n, int(n * 0.4), replace=False)] = 1
+    sched = _schedule(ring, events, seed + 1)
+
+    eng = make_engine(backend, ring, votes, seed=seed + 2)
+    r0 = eng.run_until_converged(truth=0, max_cycles=100_000)
+    eng.block_until_ready()
+
+    m_start, t_start = eng.messages_sent, eng.t
+    wall = time.time()
+    sched.apply(eng)
+    eng.block_until_ready()
+    churn_wall = time.time() - wall
+    churn_cycles = eng.t - t_start
+
+    v = eng.votes()
+    truth = int(2 * v.sum() >= v.size)
+    t1, m1 = eng.t, eng.messages_sent
+    res = eng.run_until_converged(truth=truth, max_cycles=100_000)
+    return {
+        "backend": backend,
+        "n_start": n, "n_end": int(eng.ring.n), "events": events,
+        "initial_convergence_cycles": int(r0["cycles"]),
+        "churn_cycles_per_sec": round(churn_cycles / max(churn_wall, 1e-9), 2),
+        "churn_messages": int(m1 - m_start),
+        "reconverge_cycles": int(res["cycles"] - t1),
+        "reconverge_messages": int(eng.messages_sent - m1),
+        "converged": res["converged"],
+        "dropped": getattr(eng, "dropped", 0),
+        "invalid": res.get("invalid", 0.0),
+    }
+
+
+def run(csv, sizes=DEFAULT_SIZES, events: int = DEFAULT_EVENTS,
+        out_path: str = OUT_PATH):
+    import jax
+
+    from repro.core.dht import Ring
+
+    results = {
+        "bench": "churn_reconvergence",
+        "device": jax.default_backend(),
+        "sizes": list(sizes),
+        "events": events,
+        "rows": [],
+    }
+    for n in sizes:
+        snaps = _schedule(Ring.random(n, 32, seed=0), events, 1).snaps
+        ref_alert_msgs = _reference_alert_cost(snaps)
+        row = {"n": n, "reference_alert_messages": ref_alert_msgs,
+               "reference_alert_msgs_per_event": round(
+                   ref_alert_msgs / events, 2)}
+        csv(f"churn,n={n},reference_alert_msgs_per_event="
+            f"{row['reference_alert_msgs_per_event']}")
+        for backend in ("numpy", "jax"):
+            rec = bench_backend(backend, n, events)
+            row[backend] = rec
+            csv(f"churn,n={n},backend={backend},"
+                f"churn_cycles/sec={rec['churn_cycles_per_sec']},"
+                f"reconverge_cycles={rec['reconverge_cycles']},"
+                f"reconverge_msgs={rec['reconverge_messages']},"
+                f"converged={rec['converged']:.0f},dropped={rec['dropped']}")
+        row["jax_over_numpy"] = round(
+            row["jax"]["churn_cycles_per_sec"]
+            / max(row["numpy"]["churn_cycles_per_sec"], 1e-9), 3)
+        csv(f"churn_speedup,n={n},jax_over_numpy={row['jax_over_numpy']}x,"
+            f"device={results['device']}")
+        results["rows"].append(row)
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    csv(f"churn_bench_written,path={out_path}")
+
+
+if __name__ == "__main__":
+    run(print)

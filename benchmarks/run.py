@@ -7,6 +7,7 @@ systems layer. Prints ``name,key=value,...`` CSV lines.
   kernel_bench       Pallas-kernel oracles microbench (CPU-indicative)
   sync_comparison    trainer-level sync families (paper mode vs baselines)
   engine             numpy-vs-device engine cycles/sec -> BENCH_engine.json
+  churn              Alg. 2 join/leave reconvergence    -> BENCH_churn.json
   roofline           summary of the dry-run roofline table (if present)
 
 The majority-voting sections run on the engine backend selected with
@@ -38,7 +39,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        engine_bench, kernel_bench, static_convergence, stationary,
+        churn, engine_bench, kernel_bench, static_convergence, stationary,
         sync_comparison, tree_properties,
     )
 
@@ -50,6 +51,7 @@ def main() -> None:
         ("kernel_bench", lambda c: kernel_bench.run(c)),
         ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
         ("engine", lambda c: engine_bench.run(c)),
+        ("churn", lambda c: churn.run(c)),
     ]
     for name, fn in sections:
         if args.only and args.only != name:

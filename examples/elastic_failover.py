@@ -1,7 +1,9 @@
 """Fault tolerance + elastic membership demo:
   1. train with periodic checkpoints, inject a failure, auto-resume;
   2. show the paper's Lemma-5 blast radius for cluster membership changes;
-  3. re-shard the checkpoint onto a smaller 'cluster'.
+  3. run a *live* churn drill: the majority-voting engine keeps
+     converging while hosts join and leave mid-run (Alg. 2 upcalls);
+  4. re-shard the checkpoint onto a smaller 'cluster'.
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
@@ -17,7 +19,7 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.steps import make_train_step
 from repro.models.model import init_params
 from repro.optim.adamw import AdamWConfig, init_state
-from repro.runtime.elastic import Membership, remesh_plan
+from repro.runtime.elastic import Membership, churn_drill, remesh_plan
 
 
 def main():
@@ -61,6 +63,14 @@ def main():
           m.affected_by_leave(13))
     print("a host joins   -> alerted hosts:", m.affected_by_join())
     print("re-mesh plan 32->31 hosts:", remesh_plan(32, 31, dp=8, tp=4)["new"])
+
+    print("\n== live churn drill (engine under Alg. 2 join/leave) ==")
+    drill = churn_drill(hosts=32, events=6, backend="numpy", seed=0)
+    print(f"{drill['joins']} joins + {drill['leaves']} leaves -> "
+          f"{drill['hosts_end']} hosts; reconverged in "
+          f"{drill['reconverge_cycles']} cycles "
+          f"({drill['reconverge_messages']} messages, "
+          f"converged={drill['converged']:.0f})")
 
     print("\n== elastic re-shard via checkpoint ==")
     got = mgr.restore_latest({"params": params, "opt": opt_state})

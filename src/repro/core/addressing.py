@@ -113,7 +113,7 @@ def highbit(a: Array, d: int) -> Array:
     a = _arr(a)
     x = a
     shift = 1
-    nbits = 64 if np.asarray(a).dtype.itemsize == 8 else 32
+    nbits = 64 if np.dtype(a.dtype).itemsize == 8 else 32
     while shift < nbits:
         x = x | (x >> _const(a, shift))
         shift <<= 1

@@ -1,0 +1,85 @@
+"""Seeded churn schedules (join/leave event streams) for experiments.
+
+One generator shared by the parity tests, `benchmarks/churn.py` and
+`runtime.elastic.churn_drill`, so the schedule an engine replays is
+always the schedule the reference costs were priced from: the shadow
+ring here evolves through exactly the ops the caller will apply, and
+each event's post-change snapshot carries the Alg. 2 (a_im2, a_im1,
+a_i) triple for `core.notify` / the classification harness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple, Union
+
+import numpy as np
+
+from . import addressing as A
+from .dht import Ring
+
+JoinOp = Tuple[str, int, int]  # ("join", addr, vote)
+LeaveOp = Tuple[str, int]      # ("leave", idx)
+Snap = Tuple[Ring, int, int, int]  # (ring_after, a_im2, a_im1, a_i)
+
+
+@dataclass(frozen=True)
+class ChurnSchedule:
+    ops: List[Union[JoinOp, LeaveOp]]
+    gaps: np.ndarray  # (events,) cycles to run after each op
+    snaps: List[Snap]
+
+    def apply(self, eng, step: bool = True) -> None:
+        """Replay the schedule on a `MajorityEngine` (out-of-range
+        indices fail loudly — the engine ring must match the shadow
+        ring this schedule was generated against)."""
+        for op, gap in zip(self.ops, self.gaps):
+            if op[0] == "join":
+                eng.join(op[1], vote=op[2])
+            else:
+                eng.leave(op[1])
+            if step:
+                eng.step(int(gap))
+
+
+def random_schedule(ring0: Ring, events: int, seed: int, *,
+                    p_leave: float = 0.5, n_min: int = 8,
+                    spacing: int = 25, mean_gap: float = 0.0) -> ChurnSchedule:
+    """Interleaved join/leave events against a shadow copy of `ring0`.
+
+    Joins draw fresh d-bit addresses; leaves pick a uniform live index
+    but are suppressed below `n_min` peers. Gaps are the constant
+    `spacing` unless `mean_gap` > 0, which draws exponential
+    (Poisson-process) inter-event gaps instead.
+    """
+    rng = np.random.default_rng(seed)
+    occupied = set(int(a) for a in ring0.addrs)
+    r = ring0
+    ops: List[Union[JoinOp, LeaveOp]] = []
+    snaps: List[Snap] = []
+    if mean_gap > 0:
+        gaps = np.maximum(1, rng.exponential(mean_gap, size=events).astype(int))
+    else:
+        gaps = np.full(events, spacing, dtype=int)
+    for _ in range(events):
+        if rng.random() < p_leave and r.n > n_min:
+            li = int(rng.integers(0, r.n))
+            before = r
+            r = r.leave(li)
+            nb = before.n
+            snaps.append((r, int(before.addrs[(li - 1) % nb]),
+                          int(before.addrs[li]),
+                          int(before.addrs[(li + 1) % nb])))
+            occupied.discard(int(before.addrs[li]))
+            ops.append(("leave", li))
+        else:
+            while True:
+                a = int(rng.integers(0, A.mask_of(ring0.d)))
+                if a not in occupied:
+                    break
+            occupied.add(a)
+            r, k = r.join(a)
+            n2 = r.n
+            snaps.append((r, int(r.addrs[(k - 1) % n2]), a,
+                          int(r.addrs[(k + 1) % n2])))
+            ops.append(("join", a, int(rng.integers(0, 2))))
+    return ChurnSchedule(ops, gaps, snaps)

@@ -41,6 +41,7 @@ from repro.engine.protocol import thr2  # noqa: F401  (re-export, public API)
 from . import addressing as A
 from .addressing import UP, CW, CCW
 from .dht import Ring
+from . import notify as N
 from . import routing as R
 from .simulator import MessageTable, random_delays
 
@@ -99,7 +100,9 @@ class MajorityState:
 
 
 class MajoritySimulator:
-    """Cycle-driven co-simulation of Alg. 1 + Alg. 3 on a static ring."""
+    """Cycle-driven co-simulation of Alg. 1 + Alg. 3, with Alg. 2 churn
+    (`join` / `leave` re-route in-flight traffic against the changed ring
+    and fire the notification upcalls)."""
 
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0):
         assert votes.shape == (ring.n,)
@@ -162,10 +165,98 @@ class MajoritySimulator:
         self._react(idx)
 
     def alert(self, peers: np.ndarray, dirs: np.ndarray):
-        """Alg. 2 ALERT upcall: zero X_in[v] and send unconditionally."""
+        """Alg. 2 ALERT upcall: zero X_in[v], send unconditionally, then
+        test() — zeroing changes K, which can open violations in the
+        *other* directions (an ALERT is an Alg. 3 event source like any
+        receive; skipping the test wedges quiescence)."""
         self.state.X_in[peers, dirs] = 0
         self.state.last[peers, dirs] = 0
         self._send(peers, dirs)
+        self._react(np.unique(np.asarray(peers)))
+
+    # -- churn (Alg. 2 tree change notification) ----------------------------
+    def join(self, addr: int, vote: int = 0) -> int:
+        """A peer joins at `addr`: grow the ring and state, route the
+        Alg. 2 ALERTs on the post-change ring, fire the upcalls.
+
+        In-flight messages carry addresses, not peer indices, so the next
+        delivery re-resolves ownership against the changed ring (the
+        paper's DHT does the same); only traffic originating from the two
+        changed tree positions is fenced (see `_apply_change`). Returns
+        the new peer's ring index.
+        """
+        ring_before = self.ring
+        ring_after, new_idx = ring_before.join(int(addr))
+        st = self.state
+        st.x = np.insert(st.x, new_idx, np.int64(vote))
+        st.X_in = np.insert(st.X_in, new_idx, 0, axis=0)
+        st.X_out = np.insert(st.X_out, new_idx, 0, axis=0)
+        st.seq = np.insert(st.seq, new_idx, 0)
+        st.last = np.insert(st.last, new_idx, 0, axis=0)
+        st.n += 1
+        self.ring = ring_after
+        self.pos = ring_after.positions()
+        self._apply_change(N.join_event(ring_after, new_idx))
+        return new_idx
+
+    def leave(self, idx: int):
+        """Peer `idx` departs: shrink the ring and state, route the Alg. 2
+        ALERTs on the post-change ring, fire the upcalls. Its in-flight
+        messages are fenced out of the network (`_apply_change`)."""
+        if self.state.n <= 1:
+            raise ValueError("cannot leave the last peer")
+        if not 0 <= idx < self.state.n:  # match the jax backend's guard
+            raise IndexError(f"peer index {idx} out of range [0, {self.state.n})")
+        ring_before = self.ring
+        ring_after = ring_before.leave(idx)
+        st = self.state
+        st.x = np.delete(st.x, idx)
+        st.X_in = np.delete(st.X_in, idx, axis=0)
+        st.X_out = np.delete(st.X_out, idx, axis=0)
+        st.seq = np.delete(st.seq, idx)
+        st.last = np.delete(st.last, idx, axis=0)
+        st.n -= 1
+        self.ring = ring_after
+        self.pos = ring_after.positions()
+        self._apply_change(N.leave_event(ring_after, ring_before, idx))
+
+    def _apply_change(self, ev: "N.ChurnEvent"):
+        """Common tail of join/leave, keeping every changed tree link
+        *bilaterally* refreshed (DESIGN.md §Churn):
+
+        1. charge the synchronous alert routing to the message counter;
+        2. fence (repair R3) — drop in-flight messages originating from
+           the two change positions: their occupant is new, moved or
+           gone, and a stale pre-change message arriving after the alert
+           reset would wedge the per-(peer,dir) seq dedup against the
+           new sender. Every fenced message is superseded by the
+           unconditional re-sends of step 3;
+        3. the *movers* — post-change peers whose tree position IS
+           pos_fix / pos_var — zero all their X_in and send
+           unconditionally in every direction. Each of their incident
+           links has the routed ALERT of step 4 accepting at exactly
+           its far endpoint (Lemma 2), so both ends of every changed
+           link reset: the no-violation-implies-correct quiescence
+           argument needs X_in_i = X_out_j per link, and a unilateral
+           zero would silently break it;
+        4. the routed notifications fire the paper's ALERT upcall (zero
+           X_in[v], Send(v)) at the far endpoints.
+        """
+        self.messages_sent += ev.deliveries
+        dt = self.ring.addrs.dtype
+        fence = np.asarray([ev.pos_fix, ev.pos_var], dt)
+        m = self.msgs
+        stale = (m.deliver_t >= 0) & np.isin(m.origin, fence)
+        m.release(np.nonzero(stale)[0])
+        owners = self.ring.owner(fence)
+        for p, o in zip(fence, owners):
+            if int(self.pos[o]) == int(p):  # position occupied -> a mover
+                self.alert(np.full(NDIR, o, np.int64),
+                           np.arange(NDIR, dtype=np.int64))
+        if ev.notifs:
+            peers = np.asarray([p for p, _ in ev.notifs], np.int64)
+            dirs = np.asarray([v for _, v in ev.notifs], np.int64)
+            self.alert(peers, dirs)
 
     # -- cycle --------------------------------------------------------------
     def step(self):
@@ -225,6 +316,7 @@ class MajoritySimulator:
                         "cycles": self.t,
                         "messages": self.messages_sent - start_msgs,
                         "converged": 1.0,
+                        "invalid": 0.0,  # the host table grows, never drops
                     }
             else:
                 stable = 0
@@ -233,4 +325,5 @@ class MajoritySimulator:
             "cycles": self.t,
             "messages": self.messages_sent - start_msgs,
             "converged": 0.0,
+            "invalid": 0.0,
         }

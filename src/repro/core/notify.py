@@ -36,35 +36,53 @@ class Alert:
     direction: int
 
 
+@dataclass(frozen=True)
+class ChurnEvent:
+    """Everything one join/leave produced at the notification layer.
+
+    `notifs` are the application-level upcalls [(peer_index, direction)]
+    on the post-change ring; `deliveries` the network messages the alert
+    routing consumed (the paper's message unit); `traces` one hop list
+    per planned alert (None where the direction is structurally absent)
+    — consumed by the cross-backend parity harness. `pos_fix`/`pos_var`
+    are Alg. 2's two change positions; engines use them as the stale-
+    message fence (DESIGN.md §Churn, repair R3).
+    """
+
+    notifs: List[Tuple[int, int]]
+    deliveries: int
+    traces: List[Optional[List[R.Hop]]]
+    alerts: List[Alert]
+    pos_fix: int
+    pos_var: int
+
+
 def change_positions(a_im2: int, a_im1: int, a_i: int, d: int, dtype=np.uint64) -> Tuple[int, int]:
-    """(pos_fix, pos_var) per Alg. 2."""
+    """(pos_fix, pos_var) per Alg. 2 — the shared pure rule
+    (`engine.protocol.change_positions`) on host scalars."""
     dt = np.dtype(dtype).type
-    pos = lambda lo, hi: int(A.position_from_segment(dt(lo), dt(hi), d))
-    pos_fix = pos(a_im2, a_i)
-    if pos(a_im2, a_im1) == pos_fix:
-        pos_var = pos(a_im1, a_i)
-    else:
-        pos_var = pos(a_im2, a_im1)
-    return pos_fix, pos_var
+    pos_fix, pos_var = P.change_positions(np, dt(a_im2), dt(a_im1), dt(a_i), d)
+    return int(pos_fix), int(pos_var)
 
 
 def alerts_for_change(a_im2: int, a_im1: int, a_i: int, d: int, dtype=np.uint64) -> List[Alert]:
     """The <= 6 ALERT sends for one predecessor change (join or leave)."""
     pos_fix, pos_var = change_positions(a_im2, a_im1, a_i, d, dtype)
-    out: List[Alert] = []
-    for p in (pos_fix, pos_var):
-        for direction in (UP, CW, CCW):
-            out.append(Alert(p, direction))
-    return out
+    pos, dirs = P.alert_plan(np, np.dtype(dtype).type(pos_fix),
+                             np.dtype(dtype).type(pos_var))
+    return [Alert(int(p), int(v)) for p, v in zip(pos, dirs)]
 
 
-def route_alert(ring: Ring, alert: Alert, pos: Optional[np.ndarray] = None) -> Optional[int]:
-    """Deliver one ALERT on the *post-change* ring.
+def route_alert_trace(
+    ring: Ring, alert: Alert, pos: Optional[np.ndarray] = None
+) -> Tuple[Optional[int], Optional[List[R.Hop]]]:
+    """Deliver one ALERT on the *post-change* ring, with its hop trace.
 
     The alert is routed from `alert.from_pos` by the peer occupying the
     segment that contains it (the notifying successor emulates sends for
     positions it does not occupy itself — it knows both segments' edges).
-    Returns the accepting peer index, or None (dropped — direction absent).
+    Returns (accepting peer index or None, hop trace or None when the
+    direction is structurally absent and nothing was sent).
     """
     d = ring.d
     dt = ring.addrs.dtype
@@ -79,18 +97,26 @@ def route_alert(ring: Ring, alert: Alert, pos: Optional[np.ndarray] = None) -> O
         ring.addrs[[owner]], ring.prev[[owner]], d,
     )
     if not bool(valid[0]):
-        return None
+        return None, None
     cur_dest = int(dest[0])
     cur_edge = int(edge[0]) if bool(has_edge[0]) else None
+    trace: List[R.Hop] = []
     for _ in range(10_000):
         peer = int(ring.owner(np.asarray([cur_dest], dt))[0])
+        trace.append(R.Hop(cur_dest, peer))
         status, nd, ne = R.process_at_peer(ring, peer, p, cur_dest, cur_edge, pos=pos)
         if status == R.ACCEPT:
-            return peer
+            return peer, trace
         if status == R.DROP:
-            return None
+            return None, trace
         cur_dest, cur_edge = nd, ne
     raise RuntimeError("alert routing did not terminate")
+
+
+def route_alert(ring: Ring, alert: Alert, pos: Optional[np.ndarray] = None) -> Optional[int]:
+    """Deliver one ALERT on the post-change ring; accepting peer or None."""
+    peer, _ = route_alert_trace(ring, alert, pos=pos)
+    return peer
 
 
 def alert_direction(alert_pos: int, self_pos: int, d: int, dtype=np.uint64) -> int:
@@ -99,12 +125,11 @@ def alert_direction(alert_pos: int, self_pos: int, d: int, dtype=np.uint64) -> i
     return int(A.direction_of(dt(alert_pos), dt(self_pos), d))
 
 
-def notify_join(ring_after: Ring, new_idx: int) -> List[Tuple[int, int]]:
-    """All (peer, direction) notifications triggered by a join.
+def join_event(ring_after: Ring, new_idx: int) -> ChurnEvent:
+    """Full Alg. 2 outcome of a join (notifications, cost, hop traces).
 
     `ring_after` contains the new peer at `new_idx`; its successor is
-    new_idx+1 (cyclically). Returns the application-level notifications
-    [(peer_index, direction), ...] delivered by the alert protocol.
+    new_idx+1 (cyclically).
     """
     n = ring_after.n
     succ = (new_idx + 1) % n
@@ -114,8 +139,8 @@ def notify_join(ring_after: Ring, new_idx: int) -> List[Tuple[int, int]]:
     return _deliver(ring_after, a_im2, a_im1, a_i)
 
 
-def notify_leave(ring_after: Ring, ring_before: Ring, left_idx_before: int) -> List[Tuple[int, int]]:
-    """All (peer, direction) notifications triggered by a leave.
+def leave_event(ring_after: Ring, ring_before: Ring, left_idx_before: int) -> ChurnEvent:
+    """Full Alg. 2 outcome of a leave (notifications, cost, hop traces).
 
     `left_idx_before` indexes the departed peer in `ring_before`; the
     successor observes its predecessor change from the departed address
@@ -128,12 +153,32 @@ def notify_leave(ring_after: Ring, ring_before: Ring, left_idx_before: int) -> L
     return _deliver(ring_after, a_im2, a_im1, a_i)
 
 
-def _deliver(ring: Ring, a_im2: int, a_im1: int, a_i: int) -> List[Tuple[int, int]]:
+def notify_join(ring_after: Ring, new_idx: int) -> List[Tuple[int, int]]:
+    """All (peer, direction) notifications triggered by a join."""
+    return join_event(ring_after, new_idx).notifs
+
+
+def notify_leave(ring_after: Ring, ring_before: Ring, left_idx_before: int) -> List[Tuple[int, int]]:
+    """All (peer, direction) notifications triggered by a leave."""
+    return leave_event(ring_after, ring_before, left_idx_before).notifs
+
+
+def _deliver(ring: Ring, a_im2: int, a_im1: int, a_i: int) -> ChurnEvent:
     pos = ring.positions()
-    out: List[Tuple[int, int]] = []
-    for alert in alerts_for_change(a_im2, a_im1, a_i, ring.d, ring.addrs.dtype):
-        peer = route_alert(ring, alert, pos=pos)
+    pos_fix, pos_var = change_positions(a_im2, a_im1, a_i, ring.d,
+                                        ring.addrs.dtype)
+    p_fix, p_var = (np.dtype(ring.addrs.dtype).type(p) for p in (pos_fix, pos_var))
+    plan_pos, plan_dirs = P.alert_plan(np, p_fix, p_var)
+    alerts = [Alert(int(p), int(v)) for p, v in zip(plan_pos, plan_dirs)]
+    notifs: List[Tuple[int, int]] = []
+    traces: List[Optional[List[R.Hop]]] = []
+    deliveries = 0
+    for alert in alerts:
+        peer, trace = route_alert_trace(ring, alert, pos=pos)
+        traces.append(trace)
+        if trace is not None:
+            deliveries += len(trace)
         if peer is not None:
-            out.append((peer, alert_direction(alert.from_pos, int(pos[peer]), ring.d,
-                                              ring.addrs.dtype.type)))
-    return out
+            notifs.append((peer, alert_direction(alert.from_pos, int(pos[peer]),
+                                                 ring.d, ring.addrs.dtype.type)))
+    return ChurnEvent(notifs, deliveries, traces, alerts, pos_fix, pos_var)

@@ -9,9 +9,10 @@ One protocol, two engines:
     fixed-capacity device message table, and the fused Pallas
     ``majority_step`` kernel for the violation/test/Send phase).
 
-Both consume the same pure protocol rules (`repro.engine.protocol`);
-see DESIGN.md §Engine for the architecture and the cross-backend
-equivalence contract.
+Both consume the same pure protocol rules (`repro.engine.protocol`) and
+implement dynamic membership (`join`/`leave` — Alg. 2 tree change
+notification); see DESIGN.md §Engine for the architecture, §Churn for
+the upcall semantics, and the cross-backend equivalence contract.
 
     from repro.engine import make_engine
     eng = make_engine("jax", ring, votes, seed=0)

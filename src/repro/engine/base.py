@@ -4,6 +4,20 @@ The contract is deliberately small — everything the benchmarks, the
 examples and the elastic runtime need, and nothing tied to where the
 state lives (host numpy vs device arrays). Methods take and return host
 numpy values; backends move data as required.
+
+Since PR 2 the contract includes *dynamic membership* (Alg. 2): `join`
+and `leave` change the ring mid-run. Both backends implement the same
+upcall semantics (shared rules in `engine.protocol`, mechanics in
+DESIGN.md §Churn):
+
+  * the <= 6 tree-routed ALERTs of one change event are constructed
+    from `protocol.change_positions` / `protocol.alert_plan` and
+    delivered through the ordinary Alg. 1 router; an accepted ALERT
+    zeroes X_in[v], sends unconditionally and re-runs test();
+  * peers whose own tree position changed reset all their links the
+    same way (bilateral reset — see DESIGN.md §Churn);
+  * in-flight messages re-route against the changed ring; traffic
+    originating from the two change positions is fenced (repair R3).
 """
 from __future__ import annotations
 
@@ -11,12 +25,17 @@ from typing import Dict, Protocol, runtime_checkable
 
 import numpy as np
 
-EngineResult = Dict[str, float]  # {"cycles", "messages", "converged"}
+EngineResult = Dict[str, float]
+# {"cycles", "messages", "converged", "invalid"} — `invalid` is 1.0 when
+# the run lost messages to table overflow (device backend only; the host
+# table grows instead). An invalid run's other numbers are meaningless:
+# rerun with a larger capacity_per_peer.
 
 
 @runtime_checkable
 class MajorityEngine(Protocol):
-    """Cycle-driven Alg. 1 + Alg. 3 co-simulation over a static ring."""
+    """Cycle-driven Alg. 1 + Alg. 2 + Alg. 3 co-simulation over a
+    dynamic ring."""
 
     backend: str  # "numpy" | "jax"
 
@@ -26,16 +45,36 @@ class MajorityEngine(Protocol):
 
     @property
     def messages_sent(self) -> int:
-        """Network deliveries consumed so far (the paper's message unit)."""
+        """Network deliveries consumed so far (the paper's message unit),
+        Alg. 2 ALERT routing included."""
+
+    @property
+    def dropped(self) -> int:
+        """Messages lost to table overflow. Always 0 for the numpy
+        backend (its table grows); a device run with dropped > 0 is
+        invalid and `run_until_converged` flags it."""
 
     def outputs(self) -> np.ndarray:
-        """(n,) current 0/1 output of every peer."""
+        """(n,) current 0/1 output of every peer (n tracks churn)."""
 
     def votes(self) -> np.ndarray:
         """(n,) current input vote of every peer."""
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
         """Input-change upcall: set X_self and re-run test() on `idx`."""
+
+    def join(self, addr: int, vote: int = 0) -> int:
+        """Membership upcall: a peer with `vote` joins at address `addr`
+        (must be unoccupied). Emits the Alg. 2 ALERTs, re-routes
+        in-flight traffic against the grown ring, and re-runs the
+        Alg. 3 test on every affected peer. Returns the new peer's ring
+        index (existing indices at or above it shift up by one)."""
+
+    def leave(self, idx: int) -> None:
+        """Membership upcall: peer `idx` departs. Emits the Alg. 2
+        ALERTs on the shrunken ring; the departed peer's in-flight
+        traffic is fenced. Indices above `idx` shift down by one.
+        Raises ValueError on the last peer."""
 
     def step(self, cycles: int = 1) -> None:
         """Advance the simulation by `cycles` cycles."""

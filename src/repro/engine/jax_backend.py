@@ -9,7 +9,7 @@ XLA program over fixed-shape device arrays:
     the same `engine.protocol.deliver_rules` the numpy backend consumes;
     the R1 internal-descent loop is a `lax.while_loop` over live masks;
   * the message table is one fixed-capacity (C, 8) uint32 row matrix
-    (columns: origin, dest, edge, has_edge, pay_ones, pay_tot, seq,
+    (columns: origin, dest, edge, has_edge|kind, pay_ones, pay_tot, seq,
     deliver_t; free slot <=> deliver_t == NO_MSG) plus a circular
     free-list, so every table mutation is a single row scatter;
   * per-cycle work is *budgeted*: due slots are compacted by a
@@ -24,7 +24,20 @@ XLA program over fixed-shape device arrays:
   * message delays are a counter-hashed uniform 1..10 (splitmix-style
     integer finalizer), not a threefry stream — the delay only has to
     decorrelate peers (paper §4), and hashing is orders of magnitude
-    cheaper than threefry on CPU. Seeds still make runs reproducible.
+    cheaper than threefry on CPU. Seeds still make runs reproducible and
+    independent of numpy's global RNG state.
+
+Dynamic membership (Alg. 2, DESIGN.md §Churn): the ring lives *inside*
+`DeviceState` as padded sorted-prefix tables — rows [0, n_live) hold the
+occupied addresses ascending, rows above are 0xFFFFFFFF sentinels (the
+occupancy mask is the prefix predicate `arange < n_live`) — so `join` /
+`leave` are jitted gather-shifts plus one row scatter, and the owner
+lookup stays a single padded binary search. ALERT messages ride the
+existing (C, 8) table with kind tag 1 packed into the has_edge column's
+second bit; accepting one zeroes X_in[v] and forces Send(v), exactly the
+upcall `core.majority.MajoritySimulator.alert` implements. Re-jit
+(recompilation) happens only when a join outgrows the padded capacity
+and the tables are rebuilt one size up.
 
 Addresses are uint32 on device (JAX default config has no uint64), so
 rings must use d <= 32 bits. Counters are int32. Cross-backend
@@ -54,6 +67,16 @@ _U32 = jnp.uint32
 # message-table columns (all uint32; ints bit-fit, bools are 0/1)
 ORIGIN, DEST, EDGE, HAS_EDGE, PAY_ONES, PAY_TOT, SEQ, DELIVER_T = range(8)
 NO_MSG = np.uint32(0xFFFFFFFF)  # deliver_t sentinel: slot is free
+NO_ADDR = np.uint32(0xFFFFFFFF)  # padded-ring sentinel: row is vacant
+# the has_edge column packs the message kind in bit 1 (bit 0: has_edge)
+KIND_DATA, KIND_ALERT = 0, 1
+
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p <<= 1
+    return p
 
 
 def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: int) -> jnp.ndarray:
@@ -81,7 +104,9 @@ def deliver_network_step(*, origin, dest, edge, has_edge, live, pos_i,
     neither accept nor drop re-enter the network with the fwd_* fields.
 
     This is THE delivery semantics of the device engine; the parity
-    tests drive this exact function against `routing.step_batch`.
+    tests drive this exact function against `routing.step_batch`, for
+    ordinary traffic and for Alg. 2 ALERTs alike (an ALERT differs only
+    in its kind tag, never in routing).
     """
     def cond(c):
         return c[0].any()
@@ -122,14 +147,23 @@ def deliver_network_step(*, origin, dest, edge, has_edge, live, pos_i,
 
 
 class DeviceState(NamedTuple):
-    """Complete simulation state; every leaf is a device array."""
+    """Complete simulation state; every leaf is a device array.
 
-    # Alg. 3 peer state
-    x: jnp.ndarray         # (n,)    int32 votes
-    inbox: jnp.ndarray     # (n,3,3) int32 [X_in.ones, X_in.total, last_seq]
-    out_ones: jnp.ndarray  # (n,3)   int32
-    out_tot: jnp.ndarray   # (n,3)   int32
-    seq: jnp.ndarray       # (n,)    int32
+    Peer rows are padded to `pad` entries; the occupied rows are the
+    sorted prefix [0, n_live) (vacant address rows hold NO_ADDR).
+    """
+
+    # Alg. 3 peer state (pad rows)
+    x: jnp.ndarray         # (pad,)    int32 votes
+    inbox: jnp.ndarray     # (pad,3,3) int32 [X_in.ones, X_in.total, last_seq]
+    out_ones: jnp.ndarray  # (pad,3)   int32
+    out_tot: jnp.ndarray   # (pad,3)   int32
+    seq: jnp.ndarray       # (pad,)    int32
+    # ring membership (sorted-prefix padded tables)
+    addrs: jnp.ndarray     # (pad,) uint32, ascending prefix then NO_ADDR
+    prev: jnp.ndarray      # (pad,) uint32 predecessor addresses (cyclic)
+    pos: jnp.ndarray       # (pad,) uint32 tree positions
+    n_live: jnp.ndarray    # ()     int32 occupied row count
     # message table + circular free-list of slots
     table: jnp.ndarray       # (C,8) uint32, see column constants
     free_list: jnp.ndarray   # (C,)  int32 slot ids
@@ -149,7 +183,7 @@ class JaxEngine:
 
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
                  capacity_per_peer: int = 6, work_budget: int = 0,
-                 kernel: str = "auto"):
+                 kernel: str = "auto", pad_to: int = 0):
         if ring.d > 32:
             raise ValueError(
                 f"jax engine needs d <= 32 (uint32 addresses), got d={ring.d}"
@@ -160,13 +194,8 @@ class JaxEngine:
         self.ring = ring
         self.n = int(ring.n)
         self.d = int(ring.d)
-        self.capacity = max(64, capacity_per_peer * self.n)
-        # per-cycle delivery budget; with 1..10-cycle delays the steady
-        # active-phase due rate is well under n/4 per cycle, and overflow
-        # only defers deliveries (see `deferred`)
-        self.work_budget = min(
-            self.capacity, int(work_budget) or max(256, self.n // 4)
-        )
+        self._cpp = int(capacity_per_peer)
+        self._wb_req = int(work_budget)
         # "auto" uses the Pallas kernel only where it compiles natively;
         # off-TPU it falls back to the jnp oracle (interpret mode is for
         # parity tests, not throughput).
@@ -175,22 +204,32 @@ class JaxEngine:
         self._salt_fwd = int(salt_rng.integers(0, 2**32, dtype=np.uint64))
         self._salt_enq = int(salt_rng.integers(0, 2**32, dtype=np.uint64))
 
-        self._addrs = jnp.asarray(ring.addrs.astype(np.uint32))
-        self._prev = jnp.roll(self._addrs, 1)
-        self._pos = jnp.asarray(ring.positions().astype(np.uint32))
+        self.pad = int(pad_to) or _next_pow2(max(self.n + max(8, self.n // 8), 64))
+        if self.pad < self.n:
+            raise ValueError(f"pad_to={pad_to} below ring size {self.n}")
+        self._size_tables()
 
         self._cycle = jax.jit(self._cycle_impl, donate_argnums=(0,))
         self._react = jax.jit(self._react_impl, donate_argnums=(0,))
+        self._join = jax.jit(self._join_impl, donate_argnums=(0,))
+        self._leave = jax.jit(self._leave_impl, donate_argnums=(0,))
         self._conv = jax.jit(self._converged_impl)
 
-        n, C = self.n, self.capacity
+        pd, C = self.pad, self.capacity
+        addrs = np.full(pd, NO_ADDR, np.uint32)
+        addrs[: self.n] = ring.addrs.astype(np.uint32)
+        x = np.zeros(pd, np.int32)
+        x[: self.n] = votes.astype(np.int32)
         table = jnp.zeros((C, 8), _U32).at[:, DELIVER_T].set(NO_MSG)
         st = DeviceState(
-            x=jnp.asarray(votes.astype(np.int32)),
-            inbox=jnp.zeros((n, NDIR, 3), _I32),
-            out_ones=jnp.zeros((n, NDIR), _I32),
-            out_tot=jnp.zeros((n, NDIR), _I32),
-            seq=jnp.zeros(n, _I32),
+            x=jnp.asarray(x),
+            inbox=jnp.zeros((pd, NDIR, 3), _I32),
+            out_ones=jnp.zeros((pd, NDIR), _I32),
+            out_tot=jnp.zeros((pd, NDIR), _I32),
+            seq=jnp.zeros(pd, _I32),
+            addrs=jnp.asarray(addrs),
+            prev=jnp.zeros(pd, _U32), pos=jnp.zeros(pd, _U32),
+            n_live=jnp.asarray(self.n, _I32),
             table=table,
             free_list=jnp.arange(C, dtype=_I32),
             free_head=jnp.zeros((), _I32),
@@ -198,15 +237,39 @@ class JaxEngine:
             t=jnp.zeros((), _I32), messages_sent=jnp.zeros((), _I32),
             dropped=jnp.zeros((), _I32), deferred=jnp.zeros((), _I32),
         )
+        st = st._replace(**self._ring_views(st.addrs, st.n_live))
         # initialization event: every peer runs test() (paper's init upcall)
-        self._st = self._react(st, jnp.ones(n, bool))
+        occ = jnp.arange(pd) < st.n_live
+        self._st = self._react(st, occ)
+
+    def _size_tables(self):
+        self.capacity = max(64, self._cpp * self.pad)
+        # per-cycle delivery budget; with 1..10-cycle delays the steady
+        # active-phase due rate is well under n/4 per cycle, and overflow
+        # only defers deliveries (see `deferred`)
+        self.work_budget = min(
+            self.capacity, self._wb_req or max(256, self.pad // 4)
+        )
 
     # -- jitted bodies -------------------------------------------------------
 
-    def _owner(self, addr: jnp.ndarray) -> jnp.ndarray:
-        """Peer index owning each address (successor with wrap)."""
-        return (jnp.searchsorted(self._addrs, addr, side="left") % self.n
-                ).astype(_I32)
+    @staticmethod
+    def _owner_of(addrs: jnp.ndarray, n_live: jnp.ndarray,
+                  q: jnp.ndarray) -> jnp.ndarray:
+        """Peer row owning each address (successor with wrap) — one
+        binary search over the padded sorted-prefix table (the NO_ADDR
+        sentinels sort above every query)."""
+        return (jnp.searchsorted(addrs, q, side="left").astype(_I32)
+                % n_live.astype(_I32))
+
+    def _ring_views(self, addrs: jnp.ndarray, n_live: jnp.ndarray) -> dict:
+        """Recompute prev/pos from the padded address table (vacant rows
+        hold garbage; they are never dereferenced — owner lookups return
+        occupied rows only)."""
+        idx = jnp.arange(addrs.shape[0], dtype=_I32)
+        prev = addrs[(idx - 1) % n_live.astype(_I32)]
+        pos = A.position_from_segment(prev, addrs, self.d)
+        return {"prev": prev, "pos": pos}
 
     @staticmethod
     def _in_segment(addr, a_prev, a_self):
@@ -239,24 +302,67 @@ class JaxEngine:
             use_kernel=self._use_kernel,
         )
 
-    def _send_phase(self, st: DeviceState, viol, pay_ones, pay_tot,
+    def _enqueue(self, st: DeviceState, cand, origin, dest, edge, has_edge,
+                 pay_ones, pay_tot, seq, kind: int,
+                 immediate: bool = False) -> DeviceState:
+        """Allocate table slots for the `cand` rows off the circular
+        free-list and write them (one row scatter). `kind` tags the rows
+        (data vs Alg. 2 ALERT); overflow counts into `dropped`.
+
+        `immediate` rows are due at the current cycle — ALERTs ride the
+        control plane at one cycle per hop, so along the identical route
+        they strictly precede any data the same event re-sent (the
+        numpy reference gets this ordering for free by routing alerts
+        synchronously at event time).
+        """
+        C = st.table.shape[0]
+        m = cand.shape[0]
+        rank = jnp.cumsum(cand) - 1
+        ok = cand & (rank < st.free_count)
+        slot = st.free_list[(st.free_head + rank) % C]
+        target = jnp.where(ok, slot, C)
+        used = ok.sum().astype(_I32)
+        if immediate:
+            delays = jnp.broadcast_to(st.t, (m,))
+        else:
+            delays = st.t + _hash_delay(
+                jnp.arange(m, dtype=_I32), st.t + st.messages_sent,
+                self._salt_enq,
+            )
+        u = lambda a: a.reshape(-1).astype(_U32)
+        he = u(has_edge) | _U32(kind << 1)
+        rows = jnp.stack(
+            [u(origin), u(dest), u(edge), he,
+             u(pay_ones), u(pay_tot), u(seq), u(delays)],
+            axis=1,
+        )  # (m, 8)
+        return st._replace(
+            table=st.table.at[target].set(rows, mode="drop"),
+            free_head=(st.free_head + used) % C,
+            free_count=st.free_count - used,
+            dropped=st.dropped + (cand & ~ok).sum().astype(_I32),
+        )
+
+    def _send_phase(self, st: DeviceState, send_mask, pay_ones, pay_tot,
                     peers: jnp.ndarray) -> DeviceState:
-        """Alg. 3 Send(v) for the peers listed in `peers` (sentinel n =
+        """Alg. 3 Send(v) for the peers listed in `peers` (sentinel pad =
         empty row): update X_out/seq, allocate table slots, enqueue.
 
-        `viol`/`pay_*` are the full (n,3) test outputs. Scatter work is
-        proportional to len(peers), not n.
+        `send_mask` is the full (pad,3) bool plane of directions to send
+        — the violation test output, OR-ed with any forced (ALERT)
+        directions by the caller; `pay_*` the matching (pad,3) payload
+        planes. Scatter work is proportional to len(peers), not pad.
         """
-        n, d, C = self.n, self.d, self.capacity
+        pd, d = st.x.shape[0], self.d
         L = peers.shape[0]
-        pv = peers < n
+        pv = peers < pd
         pc = jnp.where(pv, peers, 0)
-        vrows = viol[pc] & pv[:, None]  # (L,3)
+        vrows = send_mask[pc] & pv[:, None]  # (L,3)
 
-        # X_out/seq update mirrors the reference: X_out for every violating
+        # X_out/seq update mirrors the reference: X_out for every sending
         # direction (valid or not), one seq bump per peer per event
-        send_nf = jnp.zeros((n, NDIR), bool).at[
-            jnp.where(pv, peers, n)
+        send_nf = jnp.zeros((pd, NDIR), bool).at[
+            jnp.where(pv, peers, pd)
         ].set(vrows, mode="drop")
         out_ones = jnp.where(send_nf, pay_ones, st.out_ones)
         out_tot = jnp.where(send_nf, pay_tot, st.out_tot)
@@ -265,69 +371,62 @@ class JaxEngine:
         dirs = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (L, NDIR))
         bc = lambda a: jnp.broadcast_to(a[:, None], (L, NDIR))
         valid, origin, dest, edge, has_edge = P.send_fields(
-            jnp, bc(self._pos[pc]), dirs, bc(self._addrs[pc]),
-            bc(self._prev[pc]), d
+            jnp, bc(st.pos[pc]), dirs, bc(st.addrs[pc]), bc(st.prev[pc]), d
         )
         cand = (vrows & valid).reshape(-1)  # (3L,)
-
-        # pop one free slot per candidate from the circular free-list
-        rank = jnp.cumsum(cand) - 1
-        ok = cand & (rank < st.free_count)
-        slot = st.free_list[(st.free_head + rank) % C]
-        target = jnp.where(ok, slot, C)
-        used = ok.sum().astype(_I32)
-
-        delays = st.t + _hash_delay(
-            jnp.arange(3 * L, dtype=_I32), st.t + st.messages_sent,
-            self._salt_enq,
-        )
-        u = lambda a: a.reshape(-1).astype(_U32)
-        rows = jnp.stack(
-            [u(origin), u(dest), u(edge), u(has_edge),
-             u(pay_ones[pc]), u(pay_tot[pc]), u(bc(seq[pc])), u(delays)],
-            axis=1,
-        )  # (3L, 8)
-        return st._replace(
-            out_ones=out_ones, out_tot=out_tot, seq=seq,
-            table=st.table.at[target].set(rows, mode="drop"),
-            free_head=(st.free_head + used) % C,
-            free_count=st.free_count - used,
-            dropped=st.dropped + (cand & ~ok).sum().astype(_I32),
+        st = st._replace(out_ones=out_ones, out_tot=out_tot, seq=seq)
+        return self._enqueue(
+            st, cand, origin, dest, edge, has_edge,
+            pay_ones[pc], pay_tot[pc], bc(seq[pc]), KIND_DATA,
         )
 
     def _react_impl(self, st: DeviceState, touched: jnp.ndarray) -> DeviceState:
         """Alg. 3 test() + Send(v) for all `touched` peers (full-width
         event path: initialization and vote changes)."""
+        pd = st.x.shape[0]
         viol, _, pay_ones, pay_tot = self._test_phase(st)
-        peers = jnp.where(touched, jnp.arange(self.n, dtype=_I32), self.n)
-        return self._send_phase(st, viol, pay_ones, pay_tot, peers)
+        eff = viol & touched[:, None]
+        peers = jnp.where(touched, jnp.arange(pd, dtype=_I32), pd)
+        return self._send_phase(st, eff, pay_ones, pay_tot, peers)
 
     def _cycle_impl(self, st: DeviceState) -> DeviceState:
         """One simulation cycle: deliver due messages, route, accept, react."""
-        n, d, C, B = self.n, self.d, self.capacity, self.work_budget
+        pd, d, B = st.x.shape[0], self.d, self.work_budget
+        C = st.table.shape[0]
 
-        # ---- compact due slots into the (B,) work buffer (gather-only)
+        # ---- compact due slots into the (B,) work buffer (gather-only).
+        # ALERT rows fill the buffer first: a slipped ALERT would let the
+        # mover's same-route data re-send overtake it and be zeroed
+        # retroactively — the ordering wedge DESIGN.md §Churn rules out.
         dt_col = st.table[:, DELIVER_T]
         due = dt_col == st.t.astype(_U32)
-        row_of, cum_due = self._compact(due, B)
-        n_due = cum_due[-1]
+        due_alert = due & ((st.table[:, HAS_EDGE] >> _U32(1)) != 0)
+        due_data = due & ~due_alert
+        row_a, cum_a = self._compact(due_alert, B)
+        row_d, cum_d = self._compact(due_data, B)
+        n_alert = jnp.minimum(cum_a[-1], B)
+        n_due = cum_a[-1] + cum_d[-1]
+        bi = jnp.arange(B, dtype=_I32)
+        row_of = jnp.where(bi < n_alert, row_a,
+                           row_d[jnp.maximum(bi - n_alert, 0)])
         row_ok = row_of < C
         w = st.table[jnp.where(row_ok, row_of, 0)]  # (B,8)
         w_origin, w_dest, w_edge = w[:, ORIGIN], w[:, DEST], w[:, EDGE]
-        w_has_edge = w[:, HAS_EDGE] != 0
+        w_has_edge = (w[:, HAS_EDGE] & _U32(1)) != 0
+        w_kind = (w[:, HAS_EDGE] >> _U32(1)).astype(_I32)
         w_seq = w[:, SEQ].astype(_I32)
         # over-budget due rows slip one cycle (elementwise, counted)
-        slipped = due & (cum_due > B)
+        slipped = (due_alert & (cum_a > B)) | (due_data & (cum_d > B - n_alert))
         table = st.table.at[:, DELIVER_T].set(
             jnp.where(slipped, st.t.astype(_U32) + _U32(1), dt_col)
         )
 
-        owner = self._owner(w_dest)  # the one table-wide binary search
-        pos_i = self._pos[owner]
-        a_prev = self._prev[owner]
-        a_self = self._addrs[owner]
+        owner = self._owner_of(st.addrs, st.n_live, w_dest)
+        pos_i = st.pos[owner]
+        a_prev = st.prev[owner]
+        a_self = st.addrs[owner]
         self_seg = self._in_segment(w_origin, a_prev, a_self)
-        max_addr = self._addrs[-1]
+        max_addr = st.addrs[st.n_live - 1]
 
         # ---- Alg. 1 delivery (shared semantics: deliver_network_step)
         acc, drop, o_dest, o_edge, o_he = deliver_network_step(
@@ -339,12 +438,17 @@ class JaxEngine:
 
         # ---- one row-scatter updates the whole table: forwards get their
         # new dest/edge and a fresh delay, accepts/drops release the slot
-        fwd_delay = (st.t + _hash_delay(row_of, st.t, self._salt_fwd)).astype(_U32)
+        # (ALERT forwards take exactly one cycle per hop — control plane)
+        fwd_delay = jnp.where(
+            w_kind == KIND_ALERT, st.t + 1,
+            st.t + _hash_delay(row_of, st.t, self._salt_fwd),
+        ).astype(_U32)
         new_dt = jnp.where(fwd, fwd_delay, NO_MSG)  # acc|drop -> free
-        u = lambda a: a.astype(_U32)
+        he_col = (jnp.where(fwd, o_he, w_has_edge).astype(_U32)
+                  | (w_kind.astype(_U32) << _U32(1)))  # kind survives forwards
         upd = jnp.stack(
             [w_origin, jnp.where(fwd, o_dest, w_dest),
-             jnp.where(fwd, o_edge, w_edge), u(jnp.where(fwd, o_he, w_has_edge)),
+             jnp.where(fwd, o_edge, w_edge), he_col,
              w[:, PAY_ONES], w[:, PAY_TOT], w[:, SEQ], new_dt],
             axis=1,
         )
@@ -361,46 +465,169 @@ class JaxEngine:
             deferred=st.deferred + jnp.maximum(n_due - B, 0),
         )
 
-        # ---- ACCEPT upcalls: X_in with per-(peer,dir) newest-seq dedup
+        # ---- ACCEPT upcalls. ALERT messages zero X_in[v] and force
+        # Send(v) (Alg. 2's receiver upcall) *first*; data messages then
+        # update X_in with per-(peer,dir) newest-seq dedup against the
+        # post-zero sequence floor — a same-cycle data delivery is
+        # logically newer than the alert that reset the link.
         recv = owner
         vdir = jnp.asarray(
-            A.direction_of(w_origin, self._pos[recv], d), _I32
+            A.direction_of(w_origin, st.pos[recv], d), _I32
+        )
+        is_alert = w_kind == KIND_ALERT
+        acc_d = acc & ~is_alert
+        acc_a = acc & is_alert
+        a_idx = jnp.where(acc_a, recv, pd)  # out-of-bounds rows drop
+        inbox = st.inbox.at[a_idx, vdir].set(0, mode="drop")
+        force = jnp.zeros((pd, NDIR), bool).at[a_idx, vdir].set(
+            True, mode="drop"
         )
         flat = recv * NDIR + vdir
-        best_seq = jnp.full(n * NDIR, -1, _I32).at[flat].max(
-            jnp.where(acc, w_seq, -1), mode="drop"
+        best_seq = jnp.full(pd * NDIR, -1, _I32).at[flat].max(
+            jnp.where(acc_d, w_seq, -1), mode="drop"
         )
-        is_best = acc & (w_seq == best_seq[flat])
+        is_best = acc_d & (w_seq == best_seq[flat])
         rowi = jnp.arange(B, dtype=_I32)
-        best_row = jnp.full(n * NDIR, -1, _I32).at[flat].max(
+        best_row = jnp.full(pd * NDIR, -1, _I32).at[flat].max(
             jnp.where(is_best, rowi, -1), mode="drop"
         )
         winner = is_best & (rowi == best_row[flat])
-        last = st.inbox[recv, vdir, 2]
+        last = inbox[recv, vdir, 2]
         fresh = winner & (w_seq > last)
-        r_idx = jnp.where(fresh, recv, n)  # out-of-bounds rows drop
+        r_idx = jnp.where(fresh, recv, pd)
         newbox = jnp.stack(
             [w[:, PAY_ONES].astype(_I32), w[:, PAY_TOT].astype(_I32), w_seq],
             axis=1,
         )  # (B,3)
-        touched = jnp.zeros(n, bool).at[jnp.where(acc, recv, n)].set(
+        inbox = inbox.at[r_idx, vdir].set(newbox, mode="drop")
+        touched = jnp.zeros(pd, bool).at[jnp.where(acc, recv, pd)].set(
             True, mode="drop"
         )
-        st = st._replace(
-            inbox=st.inbox.at[r_idx, vdir].set(newbox, mode="drop"),
-        )
+        st = st._replace(inbox=inbox)
 
         # ---- react: test() on touched peers, Send via the compacted
-        # acceptor set (scatter work ∝ budget, not n)
+        # acceptor set (scatter work ∝ budget, not pad); ALERT-forced
+        # directions send unconditionally
         peers_u, _ = self._compact(touched, B)
-        peers_u = jnp.where(peers_u < n, peers_u, n)
+        peers_u = jnp.where(peers_u < pd, peers_u, pd)
         viol, _, pay_ones, pay_tot = self._test_phase(st)
-        st = self._send_phase(st, viol, pay_ones, pay_tot, peers_u)
+        eff = (viol & touched[:, None]) | force
+        st = self._send_phase(st, eff, pay_ones, pay_tot, peers_u)
         return st._replace(t=st.t + 1)
+
+    # -- churn (Alg. 2) ------------------------------------------------------
+
+    def _join_impl(self, st: DeviceState, addr: jnp.ndarray,
+                   vote: jnp.ndarray, k: jnp.ndarray) -> DeviceState:
+        """Insert a peer row at `k` (gather-shift of the sorted prefix +
+        one row write), then run the shared churn tail."""
+        pd = st.x.shape[0]
+        idx = jnp.arange(pd, dtype=_I32)
+        src = jnp.where(idx <= k, idx, idx - 1)
+        g = lambda a: a[src]
+        n_live = st.n_live + 1
+        st = st._replace(
+            addrs=g(st.addrs).at[k].set(addr),
+            x=g(st.x).at[k].set(vote),
+            inbox=g(st.inbox).at[k].set(0),
+            out_ones=g(st.out_ones).at[k].set(0),
+            out_tot=g(st.out_tot).at[k].set(0),
+            seq=g(st.seq).at[k].set(0),
+            n_live=n_live,
+        )
+        st = st._replace(**self._ring_views(st.addrs, n_live))
+        a_im2 = st.addrs[(k - 1) % n_live]
+        a_i = st.addrs[(k + 1) % n_live]
+        return self._churn_tail(st, a_im2, addr, a_i)
+
+    def _leave_impl(self, st: DeviceState, k: jnp.ndarray) -> DeviceState:
+        """Delete peer row `k` (gather-shift left + sentinel the vacated
+        row), then run the shared churn tail."""
+        pd = st.x.shape[0]
+        nb = st.n_live
+        a_im1 = st.addrs[k]
+        a_im2 = st.addrs[(k - 1) % nb]
+        a_i = st.addrs[(k + 1) % nb]
+        idx = jnp.arange(pd, dtype=_I32)
+        src = jnp.minimum(jnp.where(idx < k, idx, idx + 1), pd - 1)
+        last = nb - 1  # vacated row after the shift
+        g = lambda a: a[src]
+        st = st._replace(
+            addrs=g(st.addrs).at[last].set(NO_ADDR),
+            x=g(st.x).at[last].set(0),
+            inbox=g(st.inbox).at[last].set(0),
+            out_ones=g(st.out_ones).at[last].set(0),
+            out_tot=g(st.out_tot).at[last].set(0),
+            seq=g(st.seq).at[last].set(0),
+            n_live=last,
+        )
+        st = st._replace(**self._ring_views(st.addrs, st.n_live))
+        return self._churn_tail(st, a_im2, a_im1, a_i)
+
+    def _churn_tail(self, st: DeviceState, a_im2, a_im1, a_i) -> DeviceState:
+        """Alg. 2 on device, mirroring `MajoritySimulator._apply_change`:
+
+        1. fence (R3) — free every in-flight DATA row whose origin is one
+           of the two change positions (stale pre-change senders);
+        2. movers — peers whose post-change position IS pos_fix/pos_var —
+           zero their whole X_in and send unconditionally everywhere;
+        3. enqueue the <= 6 routed ALERT rows (kind tag 1) into the
+           message table; the cycle loop delivers them through the same
+           Alg. 1 router as data and fires the zero+Send upcall on
+           accept.
+        """
+        pd, d = st.x.shape[0], self.d
+        C = st.table.shape[0]
+        pos_fix, pos_var = P.change_positions(jnp, a_im2, a_im1, a_i, d)
+
+        tab = st.table
+        live_row = tab[:, DELIVER_T] != NO_MSG
+        kind = (tab[:, HAS_EDGE] >> _U32(1)).astype(_I32)
+        stale = live_row & (kind == KIND_DATA) & (
+            (tab[:, ORIGIN] == pos_fix) | (tab[:, ORIGIN] == pos_var)
+        )
+        rel_rank = jnp.cumsum(stale) - 1
+        tail = (st.free_head + st.free_count + rel_rank) % C
+        rows_idx = jnp.arange(C, dtype=_I32)
+        st = st._replace(
+            table=tab.at[:, DELIVER_T].set(
+                jnp.where(stale, NO_MSG, tab[:, DELIVER_T])
+            ),
+            free_list=st.free_list.at[jnp.where(stale, tail, C)].set(
+                rows_idx, mode="drop"
+            ),
+            free_count=st.free_count + stale.sum().astype(_I32),
+        )
+
+        cp = jnp.stack([pos_fix, pos_var])  # (2,)
+        own = self._owner_of(st.addrs, st.n_live, cp)
+        mover_rows = jnp.where(st.pos[own] == cp, own, pd)
+        st = st._replace(inbox=st.inbox.at[mover_rows].set(0, mode="drop"))
+        force = jnp.zeros((pd, NDIR), bool).at[mover_rows].set(
+            True, mode="drop"
+        )
+        touched = force.any(1)
+        viol, _, pay_ones, pay_tot = self._test_phase(st)
+        eff = (viol & touched[:, None]) | force
+        peers, _ = self._compact(touched, 4)
+        st = self._send_phase(st, eff, pay_ones, pay_tot,
+                              jnp.where(peers < pd, peers, pd))
+
+        ap, adirs = P.alert_plan(jnp, pos_fix, pos_var)  # (6,), (6,)
+        aown = self._owner_of(st.addrs, st.n_live, ap)
+        valid, origin, dest, edge, has_edge = P.send_fields(
+            jnp, ap, adirs, st.addrs[aown], st.prev[aown], d
+        )
+        zero6 = jnp.zeros(6, _U32)
+        return self._enqueue(
+            st, valid, origin, dest, edge, has_edge,
+            zero6, zero6, zero6, KIND_ALERT, immediate=True,
+        )
 
     def _converged_impl(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
         _, out, _, _ = self._test_phase(st)
-        return (out == truth).all()
+        occ = jnp.arange(st.x.shape[0]) < st.n_live
+        return ((out == truth) | ~occ).all()
 
     # -- engine API ----------------------------------------------------------
 
@@ -419,7 +646,9 @@ class JaxEngine:
     @property
     def dropped(self) -> int:
         """Messages lost to table overflow; 0 unless capacity_per_peer is
-        set too low (the numpy table grows instead — see DESIGN.md)."""
+        set too low (the numpy table grows instead — see DESIGN.md). A
+        run with dropped > 0 is invalid (`run_until_converged` flags
+        it)."""
         return int(self._st.dropped)
 
     @property
@@ -430,10 +659,10 @@ class JaxEngine:
 
     def outputs(self) -> np.ndarray:
         _, out, _, _ = self._test_phase(self._st)
-        return np.asarray(out, dtype=np.int64)
+        return np.asarray(out, dtype=np.int64)[: self.n]
 
     def votes(self) -> np.ndarray:
-        return np.asarray(self._st.x, dtype=np.int64)
+        return np.asarray(self._st.x, dtype=np.int64)[: self.n]
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
         idx = np.asarray(idx)
@@ -441,8 +670,77 @@ class JaxEngine:
         x = st.x.at[jnp.asarray(idx)].set(
             jnp.asarray(np.asarray(new_votes, np.int32))
         )
-        touched = jnp.zeros(self.n, bool).at[jnp.asarray(idx)].set(True)
+        touched = jnp.zeros(self.pad, bool).at[jnp.asarray(idx)].set(True)
         self._st = self._react(st._replace(x=x), touched)
+
+    def join(self, addr: int, vote: int = 0) -> int:
+        """Membership upcall: a peer joins at `addr` (Alg. 2). The padded
+        tables absorb the row without recompilation; only outgrowing
+        them triggers the (host-side) grow + re-jit path."""
+        ring_after, k = self.ring.join(int(addr))
+        if ring_after.n > self.pad:
+            self._grow(ring_after.n)
+        self._st = self._join(
+            self._st, jnp.asarray(np.uint32(addr)),
+            jnp.asarray(int(vote), _I32), jnp.asarray(k, _I32),
+        )
+        self.ring = ring_after
+        self.n += 1
+        return k
+
+    def leave(self, idx: int) -> None:
+        """Membership upcall: peer `idx` departs (Alg. 2)."""
+        if self.n <= 1:
+            raise ValueError("cannot leave the last peer")
+        if not 0 <= idx < self.n:
+            raise IndexError(f"peer index {idx} out of range [0, {self.n})")
+        self._st = self._leave(self._st, jnp.asarray(idx, _I32))
+        self.ring = self.ring.leave(idx)
+        self.n -= 1
+
+    def _grow(self, need_n: int) -> None:
+        """Re-pad every device table one size up (re-jit point: shapes
+        change, so the jitted programs recompile on next use). The
+        circular free-list is rebuilt flat: live slots keep their ids,
+        the new capacity extends the free pool."""
+        host = jax.device_get(self._st)
+        old_pad, old_C = self.pad, self.capacity
+        self.pad = _next_pow2(need_n + max(8, need_n // 8))
+        self._size_tables()
+        pr = self.pad - old_pad
+
+        def pad_rows(a, fill=0):
+            extra = np.full((pr,) + a.shape[1:], fill, a.dtype)
+            return np.concatenate([a, extra])
+
+        extra_C = self.capacity - old_C
+        empty = np.zeros((extra_C, 8), np.uint32)
+        empty[:, DELIVER_T] = NO_MSG
+        fl = np.asarray(host.free_list)
+        fh, fc = int(host.free_head), int(host.free_count)
+        cur_free = fl[(fh + np.arange(fc)) % old_C]
+        free_list = np.zeros(self.capacity, np.int32)
+        free_list[:fc] = cur_free
+        free_list[fc: fc + extra_C] = old_C + np.arange(extra_C)
+        self._st = DeviceState(
+            x=jnp.asarray(pad_rows(np.asarray(host.x))),
+            inbox=jnp.asarray(pad_rows(np.asarray(host.inbox))),
+            out_ones=jnp.asarray(pad_rows(np.asarray(host.out_ones))),
+            out_tot=jnp.asarray(pad_rows(np.asarray(host.out_tot))),
+            seq=jnp.asarray(pad_rows(np.asarray(host.seq))),
+            addrs=jnp.asarray(pad_rows(np.asarray(host.addrs), NO_ADDR)),
+            prev=jnp.asarray(pad_rows(np.asarray(host.prev))),
+            pos=jnp.asarray(pad_rows(np.asarray(host.pos))),
+            n_live=jnp.asarray(int(host.n_live), _I32),
+            table=jnp.asarray(np.concatenate([np.asarray(host.table), empty])),
+            free_list=jnp.asarray(free_list),
+            free_head=jnp.zeros((), _I32),
+            free_count=jnp.asarray(fc + extra_C, _I32),
+            t=jnp.asarray(int(host.t), _I32),
+            messages_sent=jnp.asarray(int(host.messages_sent), _I32),
+            dropped=jnp.asarray(int(host.dropped), _I32),
+            deferred=jnp.asarray(int(host.deferred), _I32),
+        )
 
     def step(self, cycles: int = 1) -> None:
         for _ in range(cycles):
@@ -462,10 +760,12 @@ class JaxEngine:
                 if stable >= stable_for:
                     return {"cycles": self.t,
                             "messages": self.messages_sent - start_msgs,
-                            "converged": 1.0}
+                            "converged": 1.0,
+                            "invalid": float(self.dropped > 0)}
             else:
                 stable = 0
             self.step()
         return {"cycles": self.t,
                 "messages": self.messages_sent - start_msgs,
-                "converged": 0.0}
+                "converged": 0.0,
+                "invalid": float(self.dropped > 0)}

@@ -37,6 +37,12 @@ class NumpyEngine:
     def in_flight(self) -> int:
         return self.sim.msgs.in_flight
 
+    @property
+    def dropped(self) -> int:
+        """Messages lost to table overflow — always 0 here: the host
+        table grows on demand (API symmetry with JaxEngine)."""
+        return 0
+
     def outputs(self) -> np.ndarray:
         return self.sim.state.outputs()
 
@@ -47,8 +53,19 @@ class NumpyEngine:
         self.sim.set_votes(np.asarray(idx), np.asarray(new_votes))
 
     def alert(self, peers: np.ndarray, dirs: np.ndarray) -> None:
-        """Alg. 2 ALERT upcall (numpy backend only for now)."""
+        """Raw Alg. 2 ALERT upcall (join/leave call this internally)."""
         self.sim.alert(peers, dirs)
+
+    def join(self, addr: int, vote: int = 0) -> int:
+        """Membership upcall: a peer joins at `addr` (Alg. 2)."""
+        new_idx = self.sim.join(addr, vote=vote)
+        self.ring = self.sim.ring
+        return new_idx
+
+    def leave(self, idx: int) -> None:
+        """Membership upcall: peer `idx` departs (Alg. 2)."""
+        self.sim.leave(idx)
+        self.ring = self.sim.ring
 
     def step(self, cycles: int = 1) -> None:
         for _ in range(cycles):

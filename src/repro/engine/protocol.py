@@ -1,8 +1,10 @@
-"""Alg. 1 / Alg. 3 protocol rules as backend-agnostic pure functions.
+"""Alg. 1 / Alg. 2 / Alg. 3 protocol rules as backend-agnostic pure functions.
 
 Every rule the paper states — the SEND construction, the DELIVER
-classification (with the R1/R2 repairs, DESIGN.md §Faithfulness) and the
-Alg. 3 threshold/violation algebra — lives here exactly once, written
+classification (with the R1/R2 repairs, DESIGN.md §Faithfulness), the
+Alg. 2 change-notification ALERT construction (`change_positions` /
+`alert_plan`) and the Alg. 3 threshold/violation algebra — lives here
+exactly once, written
 against an explicit array namespace `xp` (``numpy`` or ``jax.numpy``).
 The numpy reference simulator (`repro.core.routing` / `.majority`) and
 the device engine (`repro.engine.jax_backend`) both consume these
@@ -122,6 +124,45 @@ def deliver_rules(xp, *, origin: Array, dest: Array, edge: Array,
 def accept_direction(origin: Array, self_pos: Array, d: int) -> Array:
     """ACCEPT upcall: direction (UP/CW/CCW) the message arrived from."""
     return A.direction_of(origin, self_pos, d)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 — tree change notification (ALERT construction)
+# ---------------------------------------------------------------------------
+
+def change_positions(xp, a_im2: Array, a_im1: Array, a_i: Array,
+                     d: int) -> Tuple[Array, Array]:
+    """(pos_fix, pos_var) of one predecessor change, Alg. 2 verbatim.
+
+    The successor p_i observes its predecessor edge change between
+    `a_im2` and `a_im1` (join: a_im1 appeared; leave: a_im1 departed).
+    The two tree positions whose occupancy may have changed are
+
+        pos_fix = Pos(a_im2, a_i)                   (the merged segment)
+        pos_var = Pos(a_im1, a_i)   if Pos(a_im2, a_im1) == pos_fix
+                  Pos(a_im2, a_im1) otherwise
+
+    Vectorizes over events; shared by `core.notify` (numpy) and the
+    device engine's jitted churn path (jnp).
+    """
+    pos_fix = A.position_from_segment(a_im2, a_i, d)
+    pos_mid = A.position_from_segment(a_im2, a_im1, d)
+    pos_new = A.position_from_segment(a_im1, a_i, d)
+    pos_var = xp.where(pos_mid == pos_fix, pos_new, pos_mid)
+    return pos_fix, pos_var
+
+
+def alert_plan(xp, pos_fix: Array, pos_var: Array) -> Tuple[Array, Array]:
+    """The <= 6 ALERT (position, direction) sends for one change event.
+
+    Each of the two change positions is alerted in all three directions;
+    structurally-missing directions (root UP/CCW, leaf CW/CCW) are culled
+    later by `send_fields`' valid mask — the same wasting stance ordinary
+    sends take. Returns (pos (6,), dirs (6,)).
+    """
+    pos = xp.stack([pos_fix, pos_fix, pos_fix, pos_var, pos_var, pos_var])
+    dirs = xp.asarray([UP, CW, CCW, UP, CW, CCW])
+    return pos, dirs
 
 
 # ---------------------------------------------------------------------------

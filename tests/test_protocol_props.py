@@ -1,0 +1,210 @@
+"""Property-based tests for the pure protocol rules (`engine.protocol`).
+
+Three structural properties over random rings (d <= 32, n <= 512):
+
+  1. parent/child position algebra is mutually inverse;
+  2. the Lemma-2 neighbor graph is a tree: single root, no cycles,
+     exactly n-1 down edges, and every UP edge has a reciprocal down
+     edge (the symmetry the Alg. 3 aggregation relies on);
+  3. every structurally-valid CW/CCW/UP send routed by the shared
+     deliver rules lands on the Lemma-2 neighbor — including the R1/R2
+     edge cases (root wrap, N=2 rings) the example-based tests in
+     test_routing.py miss.
+
+The checkers run twice: under hypothesis when it is installed (random
+rings, shrinking) via tests/_hypothesis_shim.py, and over a fixed seed
+grid so the properties are exercised in environments without hypothesis.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import addressing as A
+from repro.core.dht import Ring
+from repro.core import routing as R
+from repro.engine import protocol as P
+
+
+# ---------------------------------------------------------------------------
+# checkers (shared by the hypothesis and the seeded paths)
+# ---------------------------------------------------------------------------
+
+def check_parent_child_inverse(ring: Ring):
+    pos = ring.positions()
+    d = ring.d
+    p = pos[pos != 0]
+    if p.size == 0:
+        return
+    nonleaf = p[~A.is_leaf(p)]
+    if nonleaf.size:
+        np.testing.assert_array_equal(A.up(A.cw(nonleaf, d), d), nonleaf)
+        np.testing.assert_array_equal(A.up(A.ccw(nonleaf, d), d), nonleaf)
+    parents = A.up(p, d)
+    is_child = (A.cw(parents, d) == p) | (A.ccw(parents, d) == p)
+    assert bool(is_child.all()), "position not a descendant of its parent"
+
+
+def check_tree_structure(ring: Ring):
+    up_n, cw_n, ccw_n = A.tree_neighbors_reference(ring.addrs, ring.d)
+    pos = ring.positions()
+    n = ring.n
+    roots = np.nonzero(pos == 0)[0]
+    assert roots.size == 1, "exactly one root"
+    root = int(roots[0])
+    for i in range(n):
+        seen = set()
+        j = i
+        while j != root:
+            assert j not in seen, "cycle in UP chains"
+            seen.add(j)
+            assert up_n[j] >= 0, "non-root peer without UP neighbor"
+            j = int(up_n[j])
+        if i != root:
+            u = int(up_n[i])
+            assert i in (cw_n[u], ccw_n[u]), "UP edge without reciprocal"
+    down = [int(x) for x in list(cw_n) + list(ccw_n) if x >= 0]
+    assert len(down) == n - 1, "tree must have n-1 down edges"
+    assert len(set(down)) == n - 1, "two down edges reach the same peer"
+
+
+def check_delivery_lands_on_lemma2(ring: Ring):
+    pos = ring.positions()
+    up_n, cw_n, ccw_n = A.tree_neighbors_reference(ring.addrs, ring.d)
+    ref = {A.UP: up_n, A.CW: cw_n, A.CCW: ccw_n}
+    for i in range(ring.n):
+        for dr in (A.UP, A.CW, A.CCW):
+            got, _ = R.route(ring, i, dr, pos=pos)
+            want = ref[dr][i]
+            want = None if want < 0 else int(want)
+            assert got == want, (ring.n, ring.d, i, dr)
+
+
+def check_change_positions_cover(ring_after: Ring, ring_before: Ring,
+                                 a_im2: int, a_im1: int, a_i: int):
+    """Alg. 2's two positions contain every position whose occupancy
+    changed between the two ring snapshots."""
+    d = ring_after.d
+    pos_fix, pos_var = P.change_positions(
+        np, np.uint64(a_im2), np.uint64(a_im1), np.uint64(a_i), d
+    )
+    before = set(int(p) for p in ring_before.positions())
+    after = set(int(p) for p in ring_after.positions())
+    changed = before ^ after
+    assert changed <= {int(pos_fix), int(pos_var)}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis path (skips cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+def _ring(n: int, d: int, seed: int) -> Ring:
+    return Ring.random(min(n, A.mask_of(d)), d, seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 512) if HAVE_HYPOTHESIS else None,
+       st.integers(4, 32) if HAVE_HYPOTHESIS else None,
+       st.integers(0, 2**16) if HAVE_HYPOTHESIS else None)
+def test_prop_parent_child_inverse(n, d, seed):
+    check_parent_child_inverse(_ring(n, d, seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 256) if HAVE_HYPOTHESIS else None,
+       st.integers(4, 32) if HAVE_HYPOTHESIS else None,
+       st.integers(0, 2**16) if HAVE_HYPOTHESIS else None)
+def test_prop_tree_structure(n, d, seed):
+    check_tree_structure(_ring(n, d, seed))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 128) if HAVE_HYPOTHESIS else None,
+       st.integers(4, 32) if HAVE_HYPOTHESIS else None,
+       st.integers(0, 2**16) if HAVE_HYPOTHESIS else None)
+def test_prop_delivery_lands_on_lemma2(n, d, seed):
+    check_delivery_lands_on_lemma2(_ring(n, d, seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 128) if HAVE_HYPOTHESIS else None,
+       st.integers(4, 32) if HAVE_HYPOTHESIS else None,
+       st.integers(0, 2**16) if HAVE_HYPOTHESIS else None)
+def test_prop_change_positions_cover(n, d, seed):
+    ring = _ring(n, d, seed)
+    li = seed % ring.n
+    after = ring.leave(li)
+    nb = ring.n
+    check_change_positions_cover(
+        after, ring,
+        int(ring.addrs[(li - 1) % nb]), int(ring.addrs[li]),
+        int(ring.addrs[(li + 1) % nb]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# seeded grid (always runs; covers the same properties deterministically)
+# ---------------------------------------------------------------------------
+
+GRID = [(2, 8, 0), (2, 32, 1), (3, 4, 2), (5, 6, 3), (17, 12, 4),
+        (64, 16, 5), (199, 32, 6), (512, 32, 7)]
+
+
+@pytest.mark.parametrize("n,d,seed", GRID)
+def test_seeded_parent_child_inverse(n, d, seed):
+    check_parent_child_inverse(_ring(n, d, seed))
+
+
+@pytest.mark.parametrize("n,d,seed", GRID)
+def test_seeded_tree_structure(n, d, seed):
+    check_tree_structure(_ring(n, d, seed))
+
+
+@pytest.mark.parametrize("n,d,seed", GRID[:6])
+def test_seeded_delivery_lands_on_lemma2(n, d, seed):
+    check_delivery_lands_on_lemma2(_ring(n, d, seed))
+
+
+def test_n2_root_wrap_rings():
+    """N=2 rings: verbatim Alg. 1 drops the root's CW descent with
+    certainty (R2); the repaired rules must still find the neighbor."""
+    for d in (4, 8, 32):
+        for seed in range(6):
+            ring = _ring(2, d, seed)
+            check_tree_structure(ring)
+            check_delivery_lands_on_lemma2(ring)
+
+
+def test_root_wrap_heavy_ring():
+    """All peers crowded at the bottom of the space: the root's segment
+    wraps through a huge empty region, exercising R2 on most routes."""
+    addrs = np.sort(np.random.default_rng(0).choice(
+        2**20, size=64, replace=False).astype(np.uint64))
+    ring = Ring(addrs, 32)
+    check_tree_structure(ring)
+    check_delivery_lands_on_lemma2(ring)
+
+
+def test_change_positions_cover_seeded():
+    for n, d, seed in [(3, 4, 2), (17, 12, 4), (64, 16, 5), (199, 32, 6)]:
+        ring = _ring(n, d, seed)
+        rng = np.random.default_rng(seed)
+        li = int(rng.integers(0, ring.n))
+        after = ring.leave(li)
+        nb = ring.n
+        check_change_positions_cover(
+            after, ring,
+            int(ring.addrs[(li - 1) % nb]), int(ring.addrs[li]),
+            int(ring.addrs[(li + 1) % nb]),
+        )
+        while True:
+            a = int(rng.integers(0, A.mask_of(d)))
+            if a not in ring.addrs:
+                break
+        after2, k = ring.join(a)
+        n2 = after2.n
+        check_change_positions_cover(
+            ring, after2,
+            int(after2.addrs[(k - 1) % n2]), int(after2.addrs[k]),
+            int(after2.addrs[(k + 1) % n2]),
+        )
