@@ -8,19 +8,28 @@ systems layer. Prints ``name,key=value,...`` CSV lines.
   sync_comparison    trainer-level sync families (paper mode vs baselines)
   engine             numpy-vs-device engine cycles/sec -> BENCH_engine.json
   churn              Alg. 2 join/leave reconvergence    -> BENCH_churn.json
+  sweep              batched accuracy-vs-threshold grid -> BENCH_sweep.json
   roofline           summary of the dry-run roofline table (if present)
 
 The majority-voting sections run on the engine backend selected with
 ``--backend {numpy,jax}`` (default numpy — the reference simulator).
+The JAX persistent compilation cache is enabled (results/.jax_cache) so
+the device engine's superstep programs compile once across benchmark
+invocations instead of ~4s of jit per size per run.
 
 Run everything:   PYTHONPATH=src python -m benchmarks.run
 One section:      PYTHONPATH=src python -m benchmarks.run --only stationary
 Device engine:    PYTHONPATH=src python -m benchmarks.run --backend jax
+CI perf gate:     PYTHONPATH=src python -m benchmarks.run --check-regression
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+CACHE_DIR = os.path.join("results", ".jax_cache")
 
 
 def csv(line: str):
@@ -31,17 +40,43 @@ def section(name):
     print(f"### {name}", flush=True)
 
 
+def enable_compilation_cache(cache_dir: str = CACHE_DIR):
+    """Persistent XLA compilation cache: the engine's superstep programs
+    are ~4s of jit per (backend, size) — cache them across benchmark
+    invocations. Must run before the first jit call."""
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", os.path.abspath(cache_dir))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"),
                     help="engine backend for the majority-voting sections")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="re-measure the engine against the committed "
+                         "results/BENCH_engine.json and exit non-zero on a "
+                         ">30%% cycles/sec regression")
+    ap.add_argument("--no-compilation-cache", action="store_true",
+                    help="skip the persistent XLA compilation cache")
     args = ap.parse_args()
+
+    if not args.no_compilation_cache:
+        enable_compilation_cache()
 
     from benchmarks import (
         churn, engine_bench, kernel_bench, static_convergence, stationary,
-        sync_comparison, tree_properties,
+        sweep, sync_comparison, tree_properties,
     )
+
+    if args.check_regression:
+        section("check_regression")
+        ok = engine_bench.check_regression(csv)
+        sys.exit(0 if ok else 1)
 
     b = args.backend
     sections = [
@@ -52,6 +87,7 @@ def main() -> None:
         ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
         ("engine", lambda c: engine_bench.run(c)),
         ("churn", lambda c: churn.run(c)),
+        ("sweep", lambda c: sweep.run(c, backend=b)),
     ]
     for name, fn in sections:
         if args.only and args.only != name:

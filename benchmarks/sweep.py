@@ -1,0 +1,144 @@
+"""Batched scenario sweep: accuracy / cost vs threshold margin, local
+thresholding (LSP) vs gossip, on the vmapped trial engine.
+
+The paper's headline claim (§5: local thresholding beats gossip on
+accuracy per message) is a *sweep* — many independent majority-voting
+trials run to convergence across a grid of vote margins. Here the whole
+grid executes as batched device programs (`make_engine(..., batch=B)`,
+DESIGN.md §Engine): every (margin, seed) cell is one vmapped trial, so
+a grid that used to cost grid-size * dispatches-per-cycle host round
+trips costs one dispatch per superstep chunk for ALL cells.
+
+Per margin mu (fraction of 1-votes; |mu - 1/2| is the threshold margin):
+
+  * lsp_converge_rate / lsp_cycles / lsp_msgs_per_peer — batched LSP
+    trials run to the true majority (the paper's convergence cost);
+  * gossip_msgs_per_peer / gossip_acc_at_budget — LiMoSense on the same
+    vote sets: messages to reach the same all-correct state, and its
+    accuracy when stopped at the LSP message budget (the paper's
+    accuracy-per-message comparison).
+
+Writes ``results/BENCH_sweep.json``.
+Run:  PYTHONPATH=src python -m benchmarks.run --only sweep
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+DEFAULT_MARGINS = (0.40, 0.45, 0.48, 0.52, 0.55, 0.60)
+DEFAULT_TRIALS = 4  # seeds per margin
+OUT_PATH = os.path.join("results", "BENCH_sweep.json")
+
+
+def _grid_votes(n: int, margins, trials: int, seed: int):
+    """(B, n) vote planes for the (margin x seed) grid, B = |margins|*trials."""
+    votes, truths, cells = [], [], []
+    for mi, mu in enumerate(margins):
+        for s in range(trials):
+            rng = np.random.default_rng(seed + 1000 * mi + s)
+            v = np.zeros(n, np.int64)
+            v[rng.choice(n, int(round(n * mu)), replace=False)] = 1
+            votes.append(v)
+            truths.append(int(2 * v.sum() >= n))
+            cells.append((mu, s))
+    return np.stack(votes), np.asarray(truths), cells
+
+
+def run_lsp_grid(n: int, margins=DEFAULT_MARGINS, trials: int = DEFAULT_TRIALS,
+                 seed: int = 0, backend: str = "jax",
+                 max_cycles: int = 20_000):
+    """All (margin, seed) LSP trials to convergence, one batched engine."""
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+
+    votes, truths, cells = _grid_votes(n, margins, trials, seed)
+    B = votes.shape[0]
+    ring = Ring.random(n, 32, seed=seed)
+    eng = make_engine(backend, ring, votes, seed=seed + 1, batch=B)
+    t0 = time.time()
+    results = eng.run_until_converged(truths, max_cycles=max_cycles)
+    wall = time.time() - t0
+    return ring, votes, truths, cells, results, wall
+
+
+def run(csv, n: int = 1000, margins=DEFAULT_MARGINS,
+        trials: int = DEFAULT_TRIALS, seed: int = 0, backend: str = "jax",
+        max_cycles: int = 20_000, out_path: str = OUT_PATH):
+    import jax
+
+    from repro.core.limosense import GossipParams, LiMoSenseSimulator
+
+    ring, votes, truths, cells, results, wall = run_lsp_grid(
+        n, margins, trials, seed, backend, max_cycles)
+    B = votes.shape[0]
+    csv(f"sweep_grid,n={n},cells={B},backend={backend},wall_s={wall:.1f}")
+
+    rows = []
+    for mi, mu in enumerate(margins):
+        cell_res = [results[mi * trials + s] for s in range(trials)]
+        cell_votes = [votes[mi * trials + s] for s in range(trials)]
+        cell_truth = [int(truths[mi * trials + s]) for s in range(trials)]
+        conv = float(np.mean([r["converged"] for r in cell_res]))
+        cyc = float(np.mean([r["cycles"] for r in cell_res]))
+        lsp_msgs = float(np.mean([r["messages"] for r in cell_res]))
+
+        # gossip on the same vote sets: msgs to the same converged state,
+        # and accuracy when stopped at the LSP budget
+        g_msgs, g_acc = [], []
+        for s in range(trials):
+            sim = LiMoSenseSimulator(ring, cell_votes[s],
+                                     seed=seed + 7 + s,
+                                     params=GossipParams(send_prob=1.0))
+            budget = max(int(lsp_msgs), 1)
+            acc_at_budget, gm = None, None
+            start = sim.messages_sent
+            for _ in range(2_000):
+                out = sim.outputs()
+                correct = out == cell_truth[s]
+                if acc_at_budget is None and sim.messages_sent - start >= budget:
+                    acc_at_budget = float(correct.mean())
+                if correct.all():
+                    gm = sim.messages_sent - start
+                    break
+                sim.step()
+            if acc_at_budget is None:
+                # converged inside the budget => perfect; cycle cap hit
+                # before the budget was even spent => current accuracy
+                acc_at_budget = 1.0 if gm is not None else float(
+                    (sim.outputs() == cell_truth[s]).mean())
+            g_msgs.append(gm if gm is not None else sim.messages_sent - start)
+            g_acc.append(acc_at_budget)
+        row = {
+            "mu": mu, "margin": round(abs(mu - 0.5), 3), "trials": trials,
+            "lsp_converge_rate": conv,
+            "lsp_cycles": round(cyc, 1),
+            "lsp_msgs_per_peer": round(lsp_msgs / n, 3),
+            "gossip_msgs_per_peer": round(float(np.mean(g_msgs)) / n, 3),
+            "gossip_acc_at_lsp_budget": round(float(np.mean(g_acc)), 4),
+        }
+        rows.append(row)
+        csv(f"sweep,mu={mu},lsp_msgs/peer={row['lsp_msgs_per_peer']},"
+            f"gossip_msgs/peer={row['gossip_msgs_per_peer']},"
+            f"gossip_acc@budget={row['gossip_acc_at_lsp_budget']},"
+            f"lsp_conv={conv:.2f}")
+
+    out = {
+        "bench": "sweep_accuracy_vs_threshold",
+        "device": jax.default_backend(),
+        "n": n, "trials_per_margin": trials, "batch": B,
+        "engine_backend": backend,
+        "batched_wall_s": round(wall, 2),
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    csv(f"sweep_written,path={out_path}")
+
+
+if __name__ == "__main__":
+    run(print)

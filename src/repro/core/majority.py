@@ -114,6 +114,9 @@ class MajoritySimulator:
         # peer index -> position lookups for accepted-message direction
         self.t = 0
         self.messages_sent = 0  # network deliveries consumed (paper's unit)
+        # output-moving event since the last convergence check? (engine
+        # layer caches its convergence predicate behind this flag)
+        self.dirty = True
         self._trigger_all_initial()
 
     # -- sending ------------------------------------------------------------
@@ -162,6 +165,7 @@ class MajoritySimulator:
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray):
         """Input change upcall: set X_self and re-run test() on those peers."""
         self.state.x[idx] = new_votes
+        self.dirty = True
         self._react(idx)
 
     def alert(self, peers: np.ndarray, dirs: np.ndarray):
@@ -171,6 +175,7 @@ class MajoritySimulator:
         receive; skipping the test wedges quiescence)."""
         self.state.X_in[peers, dirs] = 0
         self.state.last[peers, dirs] = 0
+        self.dirty = True
         self._send(peers, dirs)
         self._react(np.unique(np.asarray(peers)))
 
@@ -243,6 +248,7 @@ class MajoritySimulator:
            X_in[v], Send(v)) at the far endpoints.
         """
         self.messages_sent += ev.deliveries
+        self.dirty = True  # membership changed: outputs re-indexed
         dt = self.ring.addrs.dtype
         fence = np.asarray([ev.pos_fix, ev.pos_var], dt)
         m = self.msgs
@@ -283,6 +289,7 @@ class MajoritySimulator:
             # accepted messages update X_in with seq dedup
             ai = due[acc]
             if ai.size:
+                self.dirty = True
                 recv = owner[acc]
                 vdir = A.direction_of(m.origin[ai], self.pos[recv], self.ring.d)
                 vdir = np.asarray(vdir, np.int64)

@@ -14,9 +14,17 @@ implement dynamic membership (`join`/`leave` — Alg. 2 tree change
 notification); see DESIGN.md §Engine for the architecture, §Churn for
 the upcall semantics, and the cross-backend equivalence contract.
 
+Since PR 3 the device engine executes *supersteps* (`step(K)` is one
+dispatch; `run_until_converged` checks convergence on device and syncs
+once per chunk), and ``batch=B`` vmaps the whole cycle over B stacked
+trials (`engine.batched`) — the paper's sweeps run as one program.
+
     from repro.engine import make_engine
     eng = make_engine("jax", ring, votes, seed=0)
     res = eng.run_until_converged(truth=1)
+
+    sweep = make_engine("jax", ring, votes_Bn, seed=0, batch=B)
+    results = sweep.run_until_converged(truths)   # B EngineResults
 """
 from __future__ import annotations
 
@@ -27,22 +35,38 @@ from .base import EngineResult, MajorityEngine
 BACKENDS = ("numpy", "jax")
 
 
-def make_engine(backend: str, ring, votes: np.ndarray, seed: int = 0,
-                **kwargs) -> MajorityEngine:
+def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
+                batch: int = 0, **kwargs):
     """Construct a majority-voting engine over `ring` with initial `votes`.
 
     `backend` is one of `BACKENDS`. Extra keyword arguments are
-    backend-specific (e.g. ``capacity_per_peer`` / ``kernel`` for jax).
+    backend-specific (e.g. ``capacity_per_peer`` / ``kernel`` / ``chunk``
+    for jax).
+
+    With ``batch=B`` (B > 0), `votes` is (B, n), `ring` a single Ring or
+    a list of B rings of equal (n, d), `seed` a scalar (per-trial seeds
+    are seed+i) or a (B,) array, and the result is a batched engine
+    (`engine.batched`) running B independent trials — vmapped on the
+    device backend, serial reference engines on numpy.
     """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown engine backend {backend!r}; want one of {BACKENDS}")
+    if batch:
+        if backend == "numpy":
+            from .batched import BatchedNumpyEngine
+
+            return BatchedNumpyEngine(ring, votes, seed=seed, **kwargs)
+        from .batched import BatchedJaxEngine
+
+        return BatchedJaxEngine(ring, votes, seed=seed, **kwargs)
     if backend == "numpy":
         from .numpy_backend import NumpyEngine
 
         return NumpyEngine(ring, votes, seed=seed, **kwargs)
-    if backend == "jax":
-        from .jax_backend import JaxEngine
+    from .jax_backend import JaxEngine
 
-        return JaxEngine(ring, votes, seed=seed, **kwargs)
-    raise ValueError(f"unknown engine backend {backend!r}; want one of {BACKENDS}")
+    return JaxEngine(ring, votes, seed=seed, **kwargs)
 
 
 __all__ = ["BACKENDS", "EngineResult", "MajorityEngine", "make_engine"]

@@ -21,7 +21,7 @@ DESIGN.md §Churn):
 """
 from __future__ import annotations
 
-from typing import Dict, Protocol, runtime_checkable
+from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -30,6 +30,42 @@ EngineResult = Dict[str, float]
 # the run lost messages to table overflow (device backend only; the host
 # table grows instead). An invalid run's other numbers are meaningless:
 # rerun with a larger capacity_per_peer.
+
+
+def run_convergence_loop(
+    probe: Callable[[int], Tuple[bool, int]],
+    max_cycles: int,
+    *,
+    cycles: Callable[[], int],
+    messages: Callable[[], int],
+    invalid: Callable[[], float] = lambda: 0.0,
+) -> EngineResult:
+    """The one run-to-quiescence loop skeleton both backends share.
+
+    The contract is the reference simulator's: up to `max_cycles`
+    iterations of (convergence check; step), the check running *before*
+    the step so the reported cycle is the paper's "first such cycle",
+    with the `stable_for` bookkeeping hoisted behind `probe`.
+
+    `probe(budget)` advances the engine by at most `budget` of those
+    check+step iterations and returns `(done, used)`. The numpy backend
+    probes one host cycle at a time (with a dirty-flag cache so the
+    convergence check is only recomputed when an event could have moved
+    an output); the jax backend probes a whole device chunk per call —
+    the check runs on device every cycle and the host syncs once per
+    chunk instead of twice per cycle.
+    """
+    remaining = int(max_cycles)
+    done = False
+    while remaining > 0 and not done:
+        done, used = probe(remaining)
+        remaining -= max(int(used), 1)
+    return {
+        "cycles": cycles(),
+        "messages": messages(),
+        "converged": 1.0 if done else 0.0,
+        "invalid": invalid(),
+    }
 
 
 @runtime_checkable

@@ -1,0 +1,240 @@
+"""Batched trial execution: B independent majority-voting runs as ONE
+device program.
+
+The paper's headline result (§5) is a *sweep* — many independent trials
+run to convergence — and the superstep cycle body in
+`engine.jax_backend` is a pure `DeviceState -> DeviceState` function
+whose RNG material (delay permutations, salts) lives inside the state.
+`BatchedJaxEngine` therefore just stacks B `DeviceState`s along a
+leading axis and `vmap`s the jitted superstep / convergence chunk:
+
+  * every trial carries its own ring addresses, votes, seed-derived
+    delay streams, and counters;
+  * `run_until_converged` vmaps the convergence-checked chunk — JAX's
+    `while_loop` batching rule keeps already-converged lanes frozen
+    (their carry re-selects the old state), so per-trial cycle and
+    message counts are bit-identical to B serial runs (tested);
+  * rings must share (n, d) so the stacked shapes agree; the padded
+    tables are sized once for all trials.
+
+`BatchedNumpyEngine` wraps B reference engines behind the same API (the
+serial ground truth the batched parity test compares against).
+
+Construct through `make_engine(..., batch=B)`:
+
+    eng = make_engine("jax", rings, votes_Bn, seed=0, batch=B)
+    res = eng.run_until_converged(truths)      # list of B EngineResults
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Union
+
+import numpy as np
+
+from repro.core.dht import Ring
+from repro.engine.base import EngineResult
+
+NDIR = 3
+
+
+def _as_rings(ring: Union[Ring, Sequence[Ring]], batch: int) -> List[Ring]:
+    rings = [ring] * batch if isinstance(ring, Ring) else list(ring)
+    if len(rings) != batch:
+        raise ValueError(f"got {len(rings)} rings for batch={batch}")
+    n, d = rings[0].n, rings[0].d
+    for r in rings[1:]:
+        if (r.n, r.d) != (n, d):
+            raise ValueError("batched trials need rings of equal (n, d); "
+                             f"got {(r.n, r.d)} vs {(n, d)}")
+    return rings
+
+
+def _as_seeds(seed, batch: int) -> List[int]:
+    if np.isscalar(seed):
+        return [int(seed) + i for i in range(batch)]
+    seeds = [int(s) for s in np.asarray(seed).reshape(-1)]
+    if len(seeds) != batch:
+        raise ValueError(f"got {len(seeds)} seeds for batch={batch}")
+    return seeds
+
+
+class BatchedJaxEngine:
+    """B vmapped device trials behind one API (leading axis = trial)."""
+
+    backend = "jax"
+
+    def __init__(self, ring: Union[Ring, Sequence[Ring]], votes: np.ndarray,
+                 seed=0, **kwargs):
+        import jax
+        import jax.numpy as jnp
+        from repro.engine.jax_backend import JaxEngine, _I32
+
+        self._jax, self._jnp, self._I32 = jax, jnp, _I32
+        votes = np.asarray(votes)
+        if votes.ndim != 2:
+            raise ValueError(f"batched votes must be (B, n), got {votes.shape}")
+        self.batch = int(votes.shape[0])
+        self.rings = _as_rings(ring, self.batch)
+        seeds = _as_seeds(seed, self.batch)
+        # one engine supplies the sizes and the (unbatched) cycle body;
+        # its jitted programs are never compiled (jit is lazy)
+        self._eng = JaxEngine(self.rings[0], votes[0], seed=seeds[0],
+                              _defer_state=True, **kwargs)
+        self.n, self.pad = self._eng.n, self._eng.pad
+        self.chunk = self._eng.chunk
+
+        states = [self._eng._initial_state(r, v, s)
+                  for r, v, s in zip(self.rings, votes, seeds)]
+        stack = lambda *xs: jnp.stack(xs)
+        st = jax.tree.map(stack, *states)
+
+        eng = self._eng
+        self._vreact = jax.jit(jax.vmap(eng._react_impl), donate_argnums=(0,))
+        self._vsteps = jax.jit(jax.vmap(eng._steps_impl, in_axes=(0, None)),
+                               donate_argnums=(0,))
+        self._vchunk = jax.jit(
+            jax.vmap(eng._chunk_impl, in_axes=(0, 0, None, 0, None)),
+            donate_argnums=(0,),
+        )
+        occ = jnp.arange(self.pad)[None, :] < st.n_live[:, None]
+        self._st = self._vreact(st, occ)
+
+    # -- per-trial views -----------------------------------------------------
+
+    @property
+    def t(self) -> np.ndarray:
+        return np.asarray(self._st.t)
+
+    @property
+    def messages_sent(self) -> np.ndarray:
+        return np.asarray(self._st.messages_sent)
+
+    @property
+    def dropped(self) -> np.ndarray:
+        return np.asarray(self._st.dropped)
+
+    @property
+    def deferred(self) -> np.ndarray:
+        return np.asarray(self._st.deferred)
+
+    def outputs(self) -> np.ndarray:
+        """(B, n) current 0/1 outputs, all trials."""
+        from repro.engine.jax_backend import knowledge_outputs
+
+        out = knowledge_outputs(self._st.inbox, self._st.x, self.pad)
+        return np.asarray(out)[:, : self.n].astype(np.int64)
+
+    def votes(self) -> np.ndarray:
+        return np.asarray(self._st.x)[:, : self.n].astype(np.int64)
+
+    def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
+        """Vote-change upcall, all trials at once: `idx`/`new_votes` are
+        (B, k); pad ragged trials with idx = -1 (dropped)."""
+        jnp, jax = self._jnp, self._jax
+        idx = np.asarray(idx)
+        safe = np.where(idx >= 0, idx, self.pad)
+        st = self._st
+        bi = jnp.arange(self.batch)[:, None]
+        x = st.x.at[bi, jnp.asarray(safe)].set(
+            jnp.asarray(np.asarray(new_votes, np.int32)), mode="drop")
+        touched = jnp.zeros((self.batch, self.pad), bool).at[
+            bi, jnp.asarray(safe)].set(True, mode="drop")
+        self._st = self._vreact(st._replace(x=x), touched)
+
+    def step(self, cycles: int = 1) -> None:
+        """Advance every trial by `cycles` cycles — one vmapped dispatch."""
+        self._st = self._vsteps(self._st, self._jnp.asarray(cycles, self._I32))
+
+    def block_until_ready(self) -> None:
+        self._jax.block_until_ready(self._st)
+
+    def run_until_converged(self, truth, max_cycles: int = 200_000,
+                            stable_for: int = 1) -> List[EngineResult]:
+        """Run every trial to convergence against its own `truth`
+        ((B,) or scalar). Converged lanes freeze (the vmapped while_loop
+        re-selects their carry) while the rest keep stepping; the host
+        syncs once per chunk. Returns one `EngineResult` per trial."""
+        jnp, _I32 = self._jnp, self._I32
+        truths = jnp.asarray(
+            np.broadcast_to(np.asarray(truth), (self.batch,)).astype(np.int32))
+        start_msgs = self.messages_sent.copy()
+        stable = jnp.zeros(self.batch, _I32)
+        sf = jnp.asarray(stable_for, _I32)
+        remaining = int(max_cycles)
+        done = np.zeros(self.batch, bool)
+        while remaining > 0 and not done.all():
+            k = jnp.asarray(min(remaining, self.chunk), _I32)
+            self._st, stable, done_d, used = self._vchunk(
+                self._st, truths, k, stable, sf)
+            done = np.asarray(done_d)
+            remaining -= max(int(np.asarray(used).max()), 1)
+        t = self.t
+        msgs = self.messages_sent
+        drops = self.dropped
+        return [
+            {"cycles": int(t[b]), "messages": int(msgs[b] - start_msgs[b]),
+             "converged": 1.0 if done[b] else 0.0,
+             "invalid": float(drops[b] > 0)}
+            for b in range(self.batch)
+        ]
+
+
+class BatchedNumpyEngine:
+    """B serial reference engines behind the batched API (ground truth
+    for the batched-vs-serial parity tests; no device required)."""
+
+    backend = "numpy"
+
+    def __init__(self, ring: Union[Ring, Sequence[Ring]], votes: np.ndarray,
+                 seed=0, **kwargs):
+        from repro.engine.numpy_backend import NumpyEngine
+
+        votes = np.asarray(votes)
+        if votes.ndim != 2:
+            raise ValueError(f"batched votes must be (B, n), got {votes.shape}")
+        self.batch = int(votes.shape[0])
+        rings = _as_rings(ring, self.batch)
+        seeds = _as_seeds(seed, self.batch)
+        self.engines = [NumpyEngine(r, v, seed=s, **kwargs)
+                        for r, v, s in zip(rings, votes, seeds)]
+        self.n = rings[0].n
+
+    @property
+    def t(self) -> np.ndarray:
+        return np.asarray([e.t for e in self.engines])
+
+    @property
+    def messages_sent(self) -> np.ndarray:
+        return np.asarray([e.messages_sent for e in self.engines])
+
+    @property
+    def dropped(self) -> np.ndarray:
+        return np.zeros(self.batch, np.int64)
+
+    def outputs(self) -> np.ndarray:
+        return np.stack([e.outputs() for e in self.engines])
+
+    def votes(self) -> np.ndarray:
+        return np.stack([e.votes() for e in self.engines])
+
+    def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
+        idx = np.asarray(idx)
+        new_votes = np.asarray(new_votes)
+        for b, e in enumerate(self.engines):
+            keep = idx[b] >= 0
+            if keep.any():
+                e.set_votes(idx[b][keep], new_votes[b][keep])
+
+    def step(self, cycles: int = 1) -> None:
+        for e in self.engines:
+            e.step(cycles)
+
+    def block_until_ready(self) -> None:
+        pass
+
+    def run_until_converged(self, truth, max_cycles: int = 200_000,
+                            stable_for: int = 1) -> List[EngineResult]:
+        truths = np.broadcast_to(np.asarray(truth), (self.batch,))
+        return [e.run_until_converged(int(truths[b]), max_cycles=max_cycles,
+                                      stable_for=stable_for)
+                for b, e in enumerate(self.engines)]

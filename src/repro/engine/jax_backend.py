@@ -1,31 +1,46 @@
-"""Device-resident majority-voting engine (one jitted program per cycle).
+"""Device-resident majority-voting engine (scan-fused superstep execution).
 
 Everything the numpy reference does per cycle — due-message delivery
 through the Alg. 1 router, X_in acceptance with sequence dedup, the
-Alg. 3 violation test, and the Send fan-out — runs as a single jitted
-XLA program over fixed-shape device arrays:
+Alg. 3 violation test, and the Send fan-out — runs on device over
+fixed-shape arrays, and since PR 3 whole *runs* execute as single XLA
+programs:
 
+  * ``step(cycles=K)`` is ONE dispatch: the cycle body is the body of a
+    jitted ``lax.while_loop`` (the superstep); ``run_until_converged``
+    evaluates the Alg. 3 convergence predicate on device every cycle and
+    early-exits through the loop carry, syncing with the host once per
+    *chunk* (default 256 cycles) instead of twice per cycle;
+  * the message store is a **delivery wheel**: messages bucketed by
+    ``deliver_t mod (MAX_DELAY+1)`` into 11 dense per-slot row arenas
+    (plus a small ALERT side-wheel), so the per-cycle due-scan is a
+    contiguous slice of one bucket — not a mask over all C rows — and
+    enqueues are contiguous dynamic-update-slice appends, not row
+    scatters (DESIGN.md §Engine, delivery-wheel invariants);
+  * per-cycle work is *budgeted*: the drain window is the first
+    ``work_budget`` rows of the due bucket (ALERT side-wheel rows always
+    ride ahead of data). Over-budget rows slip one cycle into the next
+    bucket; pathological bursts beyond that stay in place and are
+    revisited a wheel revolution later (both counted in ``deferred`` —
+    the protocol tolerates arbitrary delays by design);
   * routing uses the jnp path of `core.addressing`'s bit algebra through
     the same `engine.protocol.deliver_rules` the numpy backend consumes;
     the R1 internal-descent loop is a `lax.while_loop` over live masks;
-  * the message table is one fixed-capacity (C, 8) uint32 row matrix
-    (columns: origin, dest, edge, has_edge|kind, pay_ones, pay_tot, seq,
-    deliver_t; free slot <=> deliver_t == NO_MSG) plus a circular
-    free-list, so every table mutation is a single row scatter;
-  * per-cycle work is *budgeted*: due slots are compacted by a
-    gather-only cumsum+searchsorted (no large scatter) into a
-    `work_budget`-row buffer; sends come from the compacted acceptor
-    set, so scatter rows scale with the budget, not with n or C. Budget
-    overflow defers the excess deliveries by one cycle (counted in
-    `deferred`) — the protocol tolerates arbitrary delays by design;
-  * the violation/test/Send phase is the fused Pallas ``majority_step``
-    kernel (interpret mode off-TPU, or the jnp oracle with
-    ``kernel="ref"`` — the fast CPU path);
-  * message delays are a counter-hashed uniform 1..10 (splitmix-style
-    integer finalizer), not a threefry stream — the delay only has to
-    decorrelate peers (paper §4), and hashing is orders of magnitude
-    cheaper than threefry on CPU. Seeds still make runs reproducible and
-    independent of numpy's global RNG state.
+  * the in-cycle test/Send react is gather-based (`protocol.
+    majority_rules` over the compacted acceptor set — work scales with
+    the window, not with n); the fused Pallas ``majority_step`` kernel
+    serves the full-width event paths (init, vote changes) and stays the
+    TPU fast path there;
+  * message delays are a per-cycle pseudorandom *permutation* of 1..10
+    assigned by position within the cycle's append block (event-path
+    enqueues keep the per-row splitmix hash). Either way the delay only
+    has to decorrelate peers (paper §4); seeds still make runs
+    reproducible and independent of numpy's global RNG state.
+
+All RNG material (delay permutations, hash salts) lives inside
+`DeviceState`, so the whole superstep `vmap`s over stacked states —
+`engine.batched.BatchedJaxEngine` runs B independent trials as one
+program on exactly this cycle body.
 
 Dynamic membership (Alg. 2, DESIGN.md §Churn): the ring lives *inside*
 `DeviceState` as padded sorted-prefix tables — rows [0, n_live) hold the
@@ -33,9 +48,9 @@ occupied addresses ascending, rows above are 0xFFFFFFFF sentinels (the
 occupancy mask is the prefix predicate `arange < n_live`) — so `join` /
 `leave` are jitted gather-shifts plus one row scatter, and the owner
 lookup stays a single padded binary search. ALERT messages ride the
-existing (C, 8) table with kind tag 1 packed into the has_edge column's
-second bit; accepting one zeroes X_in[v] and forces Send(v), exactly the
-upcall `core.majority.MajoritySimulator.alert` implements. Re-jit
+side-wheel at one cycle per hop (control plane: an alert is always
+processed before any data due the same cycle, so along the identical
+route it strictly precedes the data its event re-sent). Re-jit
 (recompilation) happens only when a join outgrows the padded capacity
 and the tables are rebuilt one size up.
 
@@ -57,19 +72,25 @@ from repro.core import addressing as A
 from repro.core.dht import Ring
 from repro.core.simulator import MAX_DELAY, MIN_DELAY
 from repro.engine import protocol as P
-from repro.engine.base import EngineResult
+from repro.engine.base import EngineResult, run_convergence_loop
 from repro.kernels.majority_step.ops import _on_tpu, majority_step
 
 NDIR = 3
 _I32 = jnp.int32
 _U32 = jnp.uint32
 
-# message-table columns (all uint32; ints bit-fit, bools are 0/1)
+# message-row columns (all uint32; ints bit-fit, bools are 0/1)
 ORIGIN, DEST, EDGE, HAS_EDGE, PAY_ONES, PAY_TOT, SEQ, DELIVER_T = range(8)
-NO_MSG = np.uint32(0xFFFFFFFF)  # deliver_t sentinel: slot is free
+# the has_edge column packs a continuation flag in bit 1 (bit 0: has_edge):
+# a row whose R1 internal descent outran the narrow-loop budget re-enters
+# the wheel mid-descent with its network-entry already consumed
+CONT = np.uint32(2)
+NO_MSG = np.uint32(0xFFFFFFFF)  # deliver_t sentinel: row is dead (fenced)
 NO_ADDR = np.uint32(0xFFFFFFFF)  # padded-ring sentinel: row is vacant
-# the has_edge column packs the message kind in bit 1 (bit 0: has_edge)
-KIND_DATA, KIND_ALERT = 0, 1
+
+SLOTS = MAX_DELAY + 1   # delivery-wheel slots; delays 1..10 never wrap a slot
+NPERM = 16              # per-cycle delay permutations kept in DeviceState
+ALERT_W = 64            # ALERT side-wheel rows per slot (<= 6 per churn event)
 
 
 def _next_pow2(v: int) -> int:
@@ -79,10 +100,21 @@ def _next_pow2(v: int) -> int:
     return p
 
 
-def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: int) -> jnp.ndarray:
-    """Uniform 1..10 delay from (row, cycle, seed) via an integer mix."""
+def knowledge_outputs(inbox, x, pd: int):
+    """(pd,) bool Alg. 3 outputs from the flat per-link inbox: the sign
+    of thr(K), K = X_self + sum_v X_in. The ONE definition behind the
+    on-device convergence predicate and both engines' host-visible
+    `outputs()` (batched included) — keep them in lockstep."""
+    k_ones = inbox[..., 0].reshape(*inbox.shape[:-2], pd, NDIR).sum(-1) + x
+    k_tot = inbox[..., 1].reshape(*inbox.shape[:-2], pd, NDIR).sum(-1) + 1
+    return 2 * k_ones - k_tot >= 0
+
+
+def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
+    """Uniform 1..10 delay from (row, cycle, seed) via an integer mix
+    (event-path enqueues; the cycle path uses permutation strides)."""
     h = idx.astype(_U32) * _U32(0x9E3779B1)
-    h = h + t.astype(_U32) * _U32(0x85EBCA77) + _U32(salt)
+    h = h + t.astype(_U32) * _U32(0x85EBCA77) + salt.astype(_U32)
     h = h ^ (h >> _U32(16))
     h = h * _U32(0x7FEB352D)
     h = h ^ (h >> _U32(15))
@@ -93,7 +125,8 @@ def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: int) -> jnp.ndarray:
 
 
 def deliver_network_step(*, origin, dest, edge, has_edge, live, pos_i,
-                         a_prev, a_self, self_seg, max_addr, d: int):
+                         a_prev, a_self, self_seg, max_addr, d: int,
+                         entry=None):
     """One *network* delivery for a batch of messages, R1 loop included.
 
     All inputs are equal-length arrays; `live` masks the rows to process
@@ -102,11 +135,13 @@ def deliver_network_step(*, origin, dest, edge, has_edge, live, pos_i,
     while the recalculated destination stays inside its own segment.
     Returns (accept, drop, fwd_dest, fwd_edge, fwd_has_edge) — rows that
     neither accept nor drop re-enter the network with the fwd_* fields.
+    `entry` overrides the network-entry flags (the cycle passes False
+    for rows resuming a partially-completed internal descent).
 
     This is THE delivery semantics of the device engine; the parity
     tests drive this exact function against `routing.step_batch`, for
     ordinary traffic and for Alg. 2 ALERTs alike (an ALERT differs only
-    in its kind tag, never in routing).
+    in riding the side-wheel, never in routing).
     """
     def cond(c):
         return c[0].any()
@@ -138,7 +173,9 @@ def deliver_network_step(*, origin, dest, edge, has_edge, live, pos_i,
         )
 
     false_b = jnp.zeros(live.shape, bool)
-    init = (live, jnp.ones(live.shape, bool), dest, edge, has_edge,
+    if entry is None:
+        entry = jnp.ones(live.shape, bool)
+    init = (live, entry, dest, edge, has_edge,
             false_b, false_b, dest, edge, has_edge)
     (_, _, _, _, _, acc, drop, o_dest, o_edge, o_he) = jax.lax.while_loop(
         cond, body, init
@@ -151,28 +188,32 @@ class DeviceState(NamedTuple):
 
     Peer rows are padded to `pad` entries; the occupied rows are the
     sorted prefix [0, n_live) (vacant address rows hold NO_ADDR).
+    `engine.batched` stacks a leading batch axis over every leaf and
+    vmaps the cycle body — all RNG material is therefore state, not
+    Python closure.
     """
 
-    # Alg. 3 peer state (pad rows)
-    x: jnp.ndarray         # (pad,)    int32 votes
-    inbox: jnp.ndarray     # (pad,3,3) int32 [X_in.ones, X_in.total, last_seq]
-    out_ones: jnp.ndarray  # (pad,3)   int32
-    out_tot: jnp.ndarray   # (pad,3)   int32
-    seq: jnp.ndarray       # (pad,)    int32
+    # Alg. 3 peer state
+    x: jnp.ndarray      # (pad,)      int32 votes
+    inbox: jnp.ndarray  # (pad*3, 3)  int32 per-link [X_in.ones, X_in.total, last_seq]
+    out: jnp.ndarray    # (pad, 7)    int32 [X_out.ones*3, X_out.total*3, seq]
     # ring membership (sorted-prefix padded tables)
-    addrs: jnp.ndarray     # (pad,) uint32, ascending prefix then NO_ADDR
-    prev: jnp.ndarray      # (pad,) uint32 predecessor addresses (cyclic)
-    pos: jnp.ndarray       # (pad,) uint32 tree positions
-    n_live: jnp.ndarray    # ()     int32 occupied row count
-    # message table + circular free-list of slots
-    table: jnp.ndarray       # (C,8) uint32, see column constants
-    free_list: jnp.ndarray   # (C,)  int32 slot ids
-    free_head: jnp.ndarray   # ()    int32 next slot to allocate
-    free_count: jnp.ndarray  # ()    int32 number of free slots
+    addrs: jnp.ndarray  # (pad,) uint32, ascending prefix then NO_ADDR
+    prev: jnp.ndarray   # (pad,) uint32 predecessor addresses (cyclic)
+    pos: jnp.ndarray    # (pad,) uint32 tree positions
+    n_live: jnp.ndarray  # ()    int32 occupied row count
+    # delivery wheel: dense per-slot arenas bucketed by deliver_t mod SLOTS
+    wheel: jnp.ndarray   # (SLOTS, W, 8)       uint32 data rows
+    wcnt: jnp.ndarray    # (SLOTS,)            int32 live rows per slot
+    awheel: jnp.ndarray  # (SLOTS, ALERT_W, 8) uint32 Alg. 2 ALERT rows
+    acnt: jnp.ndarray    # (SLOTS,)            int32
+    # RNG material (state, so the superstep vmaps)
+    perms: jnp.ndarray     # (NPERM, 10) int32 delay permutations of 1..10
+    salt_enq: jnp.ndarray  # ()          uint32 event-path delay salt
     # counters
     t: jnp.ndarray              # () int32
     messages_sent: jnp.ndarray  # () int32 network deliveries consumed
-    dropped: jnp.ndarray        # () int32 enqueue overflow (should stay 0)
+    dropped: jnp.ndarray        # () int32 arena overflow (should stay 0)
     deferred: jnp.ndarray       # () int32 deliveries pushed past the budget
 
 
@@ -183,7 +224,8 @@ class JaxEngine:
 
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
                  capacity_per_peer: int = 6, work_budget: int = 0,
-                 kernel: str = "auto", pad_to: int = 0):
+                 kernel: str = "auto", pad_to: int = 0, chunk: int = 256,
+                 _defer_state: bool = False):
         if ring.d > 32:
             raise ValueError(
                 f"jax engine needs d <= 32 (uint32 addresses), got d={ring.d}"
@@ -196,62 +238,89 @@ class JaxEngine:
         self.d = int(ring.d)
         self._cpp = int(capacity_per_peer)
         self._wb_req = int(work_budget)
+        self.chunk = int(chunk)
         # "auto" uses the Pallas kernel only where it compiles natively;
         # off-TPU it falls back to the jnp oracle (interpret mode is for
         # parity tests, not throughput).
         self._use_kernel = kernel == "pallas" or (kernel == "auto" and _on_tpu())
-        salt_rng = np.random.default_rng(seed)
-        self._salt_fwd = int(salt_rng.integers(0, 2**32, dtype=np.uint64))
-        self._salt_enq = int(salt_rng.integers(0, 2**32, dtype=np.uint64))
 
         self.pad = int(pad_to) or _next_pow2(max(self.n + max(8, self.n // 8), 64))
         if self.pad < self.n:
             raise ValueError(f"pad_to={pad_to} below ring size {self.n}")
         self._size_tables()
+        self._make_programs()
 
-        self._cycle = jax.jit(self._cycle_impl, donate_argnums=(0,))
+        if _defer_state:  # engine.batched builds (stacked) state itself
+            return
+        st = self._initial_state(ring, votes, seed)
+        occ = jnp.arange(self.pad) < st.n_live
+        self._st = self._react(st, occ)
+
+    def _size_tables(self):
+        # drain-window budget: downstream scatter/deliver work per cycle
+        # scales with this, so it tracks the steady active-phase due rate
+        # (well under n/8 with 1..10-cycle delays); overflow only defers
+        self.work_budget = self._wb_req or max(512, self.pad // 8)
+        # per-slot arena capacity; the wheel totals SLOTS*cap live rows
+        # (comparable to the old flat table's capacity_per_peer*pad, and
+        # several times the observed steady in-flight row count)
+        self.slot_cap = max(64, self._cpp * self.pad // 16)
+        # physical slot width: capacity + slack for the widest contiguous
+        # append — the one-cycle slip block (B rows) or a delay-class
+        # block (ceil(4*window/10) rows, which EXCEEDS B for small
+        # budgets since the window includes the alert side-rows). Slack
+        # below the widest write would let dynamic_update_slice clamp
+        # its start backwards over live rows — silent corruption.
+        class_w = -(-4 * (ALERT_W + self.work_budget) // 10)
+        slack = max(self.work_budget, class_w)
+        self.slot_width = max(self.slot_cap, self.work_budget) + slack
+        self.capacity = SLOTS * (self.slot_cap + ALERT_W)
+        # R1 narrow-tail width: after two full-width descent steps only a
+        # few percent of the window is still descending (measured); the
+        # while_loop tail runs at this width instead of the window's
+        self.narrow = max(64, self.work_budget // 8)
+
+    def _make_programs(self):
         self._react = jax.jit(self._react_impl, donate_argnums=(0,))
         self._join = jax.jit(self._join_impl, donate_argnums=(0,))
         self._leave = jax.jit(self._leave_impl, donate_argnums=(0,))
-        self._conv = jax.jit(self._converged_impl)
+        self._steps = jax.jit(self._steps_impl, donate_argnums=(0,))
+        self._chunk_run = jax.jit(self._chunk_impl, donate_argnums=(0,))
+        self._conv = jax.jit(self._outputs_match)
 
-        pd, C = self.pad, self.capacity
+    def _initial_state(self, ring: Ring, votes: np.ndarray,
+                       seed: int) -> DeviceState:
+        """Fresh `DeviceState` for (ring, votes, seed) — before the
+        initialization react. Host-side so `engine.batched` can stack B
+        of them cheaply."""
+        pd, W = self.pad, self.slot_width
+        rng = np.random.default_rng(seed)
+        salt = np.uint32(rng.integers(0, 2**32, dtype=np.uint64))
+        perms = np.stack([rng.permutation(10) + MIN_DELAY
+                          for _ in range(NPERM)]).astype(np.int32)
         addrs = np.full(pd, NO_ADDR, np.uint32)
         addrs[: self.n] = ring.addrs.astype(np.uint32)
         x = np.zeros(pd, np.int32)
         x[: self.n] = votes.astype(np.int32)
-        table = jnp.zeros((C, 8), _U32).at[:, DELIVER_T].set(NO_MSG)
         st = DeviceState(
             x=jnp.asarray(x),
-            inbox=jnp.zeros((pd, NDIR, 3), _I32),
-            out_ones=jnp.zeros((pd, NDIR), _I32),
-            out_tot=jnp.zeros((pd, NDIR), _I32),
-            seq=jnp.zeros(pd, _I32),
+            inbox=jnp.zeros((pd * NDIR, 3), _I32),
+            out=jnp.zeros((pd, 7), _I32),
             addrs=jnp.asarray(addrs),
             prev=jnp.zeros(pd, _U32), pos=jnp.zeros(pd, _U32),
             n_live=jnp.asarray(self.n, _I32),
-            table=table,
-            free_list=jnp.arange(C, dtype=_I32),
-            free_head=jnp.zeros((), _I32),
-            free_count=jnp.asarray(C, _I32),
+            wheel=jnp.zeros((SLOTS, W, 8), _U32),
+            wcnt=jnp.zeros(SLOTS, _I32),
+            awheel=jnp.zeros((SLOTS, ALERT_W, 8), _U32),
+            acnt=jnp.zeros(SLOTS, _I32),
+            perms=jnp.asarray(perms),
+            salt_enq=jnp.asarray(salt, _U32),
             t=jnp.zeros((), _I32), messages_sent=jnp.zeros((), _I32),
             dropped=jnp.zeros((), _I32), deferred=jnp.zeros((), _I32),
         )
-        st = st._replace(**self._ring_views(st.addrs, st.n_live))
-        # initialization event: every peer runs test() (paper's init upcall)
-        occ = jnp.arange(pd) < st.n_live
-        self._st = self._react(st, occ)
+        return st._replace(**self._ring_views(st.addrs, st.n_live))
 
-    def _size_tables(self):
-        self.capacity = max(64, self._cpp * self.pad)
-        # per-cycle delivery budget; with 1..10-cycle delays the steady
-        # active-phase due rate is well under n/4 per cycle, and overflow
-        # only defers deliveries (see `deferred`)
-        self.work_budget = min(
-            self.capacity, self._wb_req or max(256, self.pad // 4)
-        )
-
-    # -- jitted bodies -------------------------------------------------------
+    # -- shared jitted helpers ----------------------------------------------
 
     @staticmethod
     def _owner_of(addrs: jnp.ndarray, n_live: jnp.ndarray,
@@ -287,7 +356,7 @@ class JaxEngine:
 
         Returns (idx (budget,) int32 — len(mask) where exhausted — and the
         per-element ordinal cumsum of `mask`). searchsorted on the cumsum
-        replaces the usual full-length scatter, which is ~10x slower on
+        replaces the usual full-length scatter, which is far slower on
         CPU XLA than this gather-based form.
         """
         cum = jnp.cumsum(mask.astype(_I32))
@@ -297,129 +366,121 @@ class JaxEngine:
         return idx, cum
 
     def _test_phase(self, st: DeviceState):
+        """Full-width Alg. 3 rules (event paths + parity surface): the
+        fused Pallas kernel on TPU, the jnp oracle elsewhere."""
+        pd = st.x.shape[0]
+        io = st.inbox[:, 0].reshape(pd, NDIR)
+        it = st.inbox[:, 1].reshape(pd, NDIR)
         return majority_step(
-            st.inbox[..., 0], st.inbox[..., 1], st.out_ones, st.out_tot, st.x,
+            io, it, st.out[:, 0:3], st.out[:, 3:6], st.x,
             use_kernel=self._use_kernel,
         )
 
-    def _enqueue(self, st: DeviceState, cand, origin, dest, edge, has_edge,
-                 pay_ones, pay_tot, seq, kind: int,
-                 immediate: bool = False) -> DeviceState:
-        """Allocate table slots for the `cand` rows off the circular
-        free-list and write them (one row scatter). `kind` tags the rows
-        (data vs Alg. 2 ALERT); overflow counts into `dropped`.
+    def _outputs_match(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
+        """Alg. 3 convergence predicate, on device (the superstep's
+        per-cycle early-exit check — output column only, no rule set)."""
+        pd = st.x.shape[0]
+        out = knowledge_outputs(st.inbox, st.x, pd).astype(_I32)
+        occ = jnp.arange(pd) < st.n_live
+        return ((out == truth) | ~occ).all()
 
-        `immediate` rows are due at the current cycle — ALERTs ride the
-        control plane at one cycle per hop, so along the identical route
-        they strictly precede any data the same event re-sent (the
-        numpy reference gets this ordering for free by routing alerts
-        synchronously at event time).
-        """
-        C = st.table.shape[0]
+    # -- event-path enqueue (scatter append; any width, per-row hash delay) --
+
+    def _enqueue_events(self, st: DeviceState, cand, origin, dest, edge,
+                        has_edge, pay_ones, pay_tot, seq,
+                        alert: bool = False) -> DeviceState:
+        """Append the `cand` rows of an *event* (init / vote change /
+        churn) to the wheel: slot = deliver_t mod SLOTS, offset = current
+        count + rank-within-slot. One flat row scatter — event paths are
+        occasional, so the scatter cost is paid per event, not per cycle.
+        ALERT rows go to the side-wheel, due immediately."""
         m = cand.shape[0]
-        rank = jnp.cumsum(cand) - 1
-        ok = cand & (rank < st.free_count)
-        slot = st.free_list[(st.free_head + rank) % C]
-        target = jnp.where(ok, slot, C)
-        used = ok.sum().astype(_I32)
-        if immediate:
-            delays = jnp.broadcast_to(st.t, (m,))
-        else:
-            delays = st.t + _hash_delay(
-                jnp.arange(m, dtype=_I32), st.t + st.messages_sent,
-                self._salt_enq,
-            )
         u = lambda a: a.reshape(-1).astype(_U32)
-        he = u(has_edge) | _U32(kind << 1)
+        if alert:
+            buf, cnt, cap, width = st.awheel, st.acnt, ALERT_W, ALERT_W
+            due = jnp.broadcast_to(st.t, (m,))
+        else:
+            buf, cnt, cap, width = st.wheel, st.wcnt, self.slot_cap, self.slot_width
+            due = st.t + _hash_delay(
+                jnp.arange(m, dtype=_I32), st.t + st.messages_sent, st.salt_enq
+            )
+        slot = due % SLOTS
+        onehot = (slot[:, None] == jnp.arange(SLOTS)[None, :]) & cand[:, None]
+        rank = jnp.take_along_axis(
+            jnp.cumsum(onehot.astype(_I32), axis=0), slot[:, None], axis=1
+        )[:, 0] - 1
+        off = cnt[slot] + rank
+        ok = cand & (off < cap)
         rows = jnp.stack(
-            [u(origin), u(dest), u(edge), he,
-             u(pay_ones), u(pay_tot), u(seq), u(delays)],
+            [u(origin), u(dest), u(edge), u(has_edge),
+             u(pay_ones), u(pay_tot), u(seq), u(due)],
             axis=1,
         )  # (m, 8)
-        return st._replace(
-            table=st.table.at[target].set(rows, mode="drop"),
-            free_head=(st.free_head + used) % C,
-            free_count=st.free_count - used,
-            dropped=st.dropped + (cand & ~ok).sum().astype(_I32),
-        )
-
-    def _send_phase(self, st: DeviceState, send_mask, pay_ones, pay_tot,
-                    peers: jnp.ndarray) -> DeviceState:
-        """Alg. 3 Send(v) for the peers listed in `peers` (sentinel pad =
-        empty row): update X_out/seq, allocate table slots, enqueue.
-
-        `send_mask` is the full (pad,3) bool plane of directions to send
-        — the violation test output, OR-ed with any forced (ALERT)
-        directions by the caller; `pay_*` the matching (pad,3) payload
-        planes. Scatter work is proportional to len(peers), not pad.
-        """
-        pd, d = st.x.shape[0], self.d
-        L = peers.shape[0]
-        pv = peers < pd
-        pc = jnp.where(pv, peers, 0)
-        vrows = send_mask[pc] & pv[:, None]  # (L,3)
-
-        # X_out/seq update mirrors the reference: X_out for every sending
-        # direction (valid or not), one seq bump per peer per event
-        send_nf = jnp.zeros((pd, NDIR), bool).at[
-            jnp.where(pv, peers, pd)
-        ].set(vrows, mode="drop")
-        out_ones = jnp.where(send_nf, pay_ones, st.out_ones)
-        out_tot = jnp.where(send_nf, pay_tot, st.out_tot)
-        seq = st.seq + send_nf.any(1).astype(_I32)
-
-        dirs = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (L, NDIR))
-        bc = lambda a: jnp.broadcast_to(a[:, None], (L, NDIR))
-        valid, origin, dest, edge, has_edge = P.send_fields(
-            jnp, bc(st.pos[pc]), dirs, bc(st.addrs[pc]), bc(st.prev[pc]), d
-        )
-        cand = (vrows & valid).reshape(-1)  # (3L,)
-        st = st._replace(out_ones=out_ones, out_tot=out_tot, seq=seq)
-        return self._enqueue(
-            st, cand, origin, dest, edge, has_edge,
-            pay_ones[pc], pay_tot[pc], bc(seq[pc]), KIND_DATA,
-        )
+        flat = jnp.where(ok, slot * width + off, SLOTS * width)
+        nbuf = buf.reshape(SLOTS * width, 8).at[flat].set(
+            rows, mode="drop").reshape(SLOTS, width, 8)
+        ncnt = cnt + (onehot & ok[:, None]).sum(0).astype(_I32)
+        dropped = st.dropped + (cand & ~ok).sum().astype(_I32)
+        if alert:
+            return st._replace(awheel=nbuf, acnt=ncnt, dropped=dropped)
+        return st._replace(wheel=nbuf, wcnt=ncnt, dropped=dropped)
 
     def _react_impl(self, st: DeviceState, touched: jnp.ndarray) -> DeviceState:
         """Alg. 3 test() + Send(v) for all `touched` peers (full-width
-        event path: initialization and vote changes)."""
-        pd = st.x.shape[0]
+        event path: initialization and vote changes). Elementwise
+        full-width X_out/seq updates, one event append for the sends."""
+        pd, d = st.x.shape[0], self.d
         viol, _, pay_ones, pay_tot = self._test_phase(st)
         eff = viol & touched[:, None]
-        peers = jnp.where(touched, jnp.arange(pd, dtype=_I32), pd)
-        return self._send_phase(st, eff, pay_ones, pay_tot, peers)
+        out = jnp.concatenate(
+            [jnp.where(eff, pay_ones, st.out[:, 0:3]),
+             jnp.where(eff, pay_tot, st.out[:, 3:6]),
+             (st.out[:, 6] + eff.any(1).astype(_I32))[:, None]],
+            axis=1,
+        )
+        st = st._replace(out=out)
+        dirs = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (pd, NDIR))
+        bc = lambda a: jnp.broadcast_to(a[:, None], (pd, NDIR))
+        valid, origin, dest, edge, has_edge = P.send_fields(
+            jnp, bc(st.pos), dirs, bc(st.addrs), bc(st.prev), d
+        )
+        cand = (eff & valid).reshape(-1)
+        return self._enqueue_events(
+            st, cand, origin, dest, edge, has_edge,
+            pay_ones, pay_tot, bc(out[:, 6]), alert=False,
+        )
+
+    # -- the cycle (superstep body) ------------------------------------------
 
     def _cycle_impl(self, st: DeviceState) -> DeviceState:
-        """One simulation cycle: deliver due messages, route, accept, react."""
-        pd, d, B = st.x.shape[0], self.d, self.work_budget
-        C = st.table.shape[0]
+        """One simulation cycle: drain the due wheel slot, route, accept,
+        react, append forwards/sends to their due slots."""
+        pd, d = st.x.shape[0], self.d
+        B, W, cap = self.work_budget, self.slot_width, self.slot_cap
+        WW = ALERT_W + B  # drain-window width (alerts always ride ahead)
 
-        # ---- compact due slots into the (B,) work buffer (gather-only).
-        # ALERT rows fill the buffer first: a slipped ALERT would let the
-        # mover's same-route data re-send overtake it and be zeroed
-        # retroactively — the ordering wedge DESIGN.md §Churn rules out.
-        dt_col = st.table[:, DELIVER_T]
-        due = dt_col == st.t.astype(_U32)
-        due_alert = due & ((st.table[:, HAS_EDGE] >> _U32(1)) != 0)
-        due_data = due & ~due_alert
-        row_a, cum_a = self._compact(due_alert, B)
-        row_d, cum_d = self._compact(due_data, B)
-        n_alert = jnp.minimum(cum_a[-1], B)
-        n_due = cum_a[-1] + cum_d[-1]
-        bi = jnp.arange(B, dtype=_I32)
-        row_of = jnp.where(bi < n_alert, row_a,
-                           row_d[jnp.maximum(bi - n_alert, 0)])
-        row_ok = row_of < C
-        w = st.table[jnp.where(row_ok, row_of, 0)]  # (B,8)
+        s = (st.t % SLOTS).astype(_I32)
+        s1 = ((st.t + 1) % SLOTS).astype(_I32)
+        abuf = jax.lax.dynamic_slice(st.awheel, (s, 0, 0), (1, ALERT_W, 8))[0]
+        # one materialized read of the due slot: window, slip block and
+        # leftover shift all source from `sbuf`, so the wheel itself is
+        # only ever *written* below — XLA aliases the whole update chain
+        # in place (a read-while-write would force a full-wheel copy)
+        sbuf = jax.lax.dynamic_slice(st.wheel, (s, 0, 0), (1, W, 8))[0]
+        dbuf = sbuf[: 2 * B]
+        n_alert = st.acnt[s]
+        dcnt = st.wcnt[s]
+        n_data = jnp.minimum(dcnt, B)
+
+        w = jnp.concatenate([abuf, dbuf[:B]], axis=0)  # (WW, 8)
+        wi = jnp.arange(WW, dtype=_I32)
+        is_alert = wi < ALERT_W
+        live = jnp.where(is_alert, wi < n_alert, wi - ALERT_W < n_data)
+        has_alerts = n_alert > 0
         w_origin, w_dest, w_edge = w[:, ORIGIN], w[:, DEST], w[:, EDGE]
-        w_has_edge = (w[:, HAS_EDGE] & _U32(1)) != 0
-        w_kind = (w[:, HAS_EDGE] >> _U32(1)).astype(_I32)
+        w_has_edge = ((w[:, HAS_EDGE] & _U32(1)) != 0) & live
+        w_cont = (w[:, HAS_EDGE] & CONT) != 0
         w_seq = w[:, SEQ].astype(_I32)
-        # over-budget due rows slip one cycle (elementwise, counted)
-        slipped = (due_alert & (cum_a > B)) | (due_data & (cum_d > B - n_alert))
-        table = st.table.at[:, DELIVER_T].set(
-            jnp.where(slipped, st.t.astype(_U32) + _U32(1), dt_col)
-        )
 
         owner = self._owner_of(st.addrs, st.n_live, w_dest)
         pos_i = st.pos[owner]
@@ -428,94 +489,288 @@ class JaxEngine:
         self_seg = self._in_segment(w_origin, a_prev, a_self)
         max_addr = st.addrs[st.n_live - 1]
 
-        # ---- Alg. 1 delivery (shared semantics: deliver_network_step)
-        acc, drop, o_dest, o_edge, o_he = deliver_network_step(
-            origin=w_origin, dest=w_dest, edge=w_edge, has_edge=w_has_edge,
-            live=row_ok, pos_i=pos_i, a_prev=a_prev, a_self=a_self,
-            self_seg=self_seg, max_addr=max_addr, d=d,
+        # ---- Alg. 1 delivery, two-phase (shared rules with
+        # deliver_network_step, restructured for the width/latency split:
+        # two full-width descent steps settle all but a few percent of
+        # the window; the while_loop tail then runs at `narrow` width).
+        entry = live & ~w_cont
+        lv, cur_d, cur_e, cur_h = live, w_dest, w_edge, w_has_edge
+        false_b = jnp.zeros(WW, bool)
+        acc, drop = false_b, false_b
+        o_dest, o_edge, o_he = w_dest, w_edge, w_has_edge
+        for _ in range(2):
+            dlv = P.deliver_rules(
+                jnp, origin=w_origin, dest=cur_d, edge=cur_e, has_edge=cur_h,
+                network_entry=entry, pos_i=pos_i, a_prev=a_prev,
+                a_self=a_self, self_seg=self_seg, max_addr=max_addr, d=d,
+                repair=True,
+            )
+            moving = lv & ~dlv.accept & ~dlv.drop
+            stay = moving & self._in_segment(dlv.new_dest, a_prev, a_self)
+            fwdn = moving & ~stay
+            acc = acc | (lv & dlv.accept)
+            drop = drop | (lv & dlv.drop & ~dlv.accept)
+            o_dest = jnp.where(fwdn, dlv.new_dest, o_dest)
+            o_edge = jnp.where(fwdn, dlv.new_edge, o_edge)
+            o_he = jnp.where(fwdn, dlv.new_has_edge, o_he)
+            cur_d = jnp.where(stay, dlv.new_dest, cur_d)
+            cur_e = jnp.where(stay, dlv.new_edge, cur_e)
+            cur_h = jnp.where(stay, dlv.new_has_edge, cur_h)
+            entry = entry & ~stay
+            lv = stay
+        # narrow tail: compact the survivors (window order puts alerts
+        # first, so alerts always fit — only data can spill)
+        NW = self.narrow
+        sidx, scum = self._compact(lv, NW)
+        spill = lv & (scum > NW)  # beyond the narrow budget: defer
+        sok = sidx < WW
+        sp = jnp.where(sok, sidx, 0)
+        acc2, drop2, od2, oe2, ohe2 = deliver_network_step(
+            origin=w_origin[sp], dest=cur_d[sp], edge=cur_e[sp],
+            has_edge=cur_h[sp], live=sok, pos_i=pos_i[sp], a_prev=a_prev[sp],
+            a_self=a_self[sp], self_seg=self_seg[sp], max_addr=max_addr, d=d,
+            entry=jnp.zeros(NW, bool),
         )
-        fwd = row_ok & ~acc & ~drop
+        pack = jnp.stack(
+            [acc2.astype(_U32) | (drop2.astype(_U32) << 1), od2, oe2,
+             ohe2.astype(_U32)], axis=1,
+        )
+        stage = jnp.zeros((WW, 4), _U32).at[jnp.where(sok, sp, WW)].set(
+            pack, mode="drop")
+        merged = lv & ~spill
+        acc = acc | (merged & ((stage[:, 0] & 1) != 0))
+        drop = drop | (merged & ((stage[:, 0] & 2) != 0))
+        o_dest = jnp.where(merged, stage[:, 1], o_dest)
+        o_edge = jnp.where(merged, stage[:, 2], o_edge)
+        o_he = jnp.where(merged, stage[:, 3] != 0, o_he)
+        fwd = live & ~acc & ~drop & ~spill
 
-        # ---- one row-scatter updates the whole table: forwards get their
-        # new dest/edge and a fresh delay, accepts/drops release the slot
-        # (ALERT forwards take exactly one cycle per hop — control plane)
-        fwd_delay = jnp.where(
-            w_kind == KIND_ALERT, st.t + 1,
-            st.t + _hash_delay(row_of, st.t, self._salt_fwd),
-        ).astype(_U32)
-        new_dt = jnp.where(fwd, fwd_delay, NO_MSG)  # acc|drop -> free
-        he_col = (jnp.where(fwd, o_he, w_has_edge).astype(_U32)
-                  | (w_kind.astype(_U32) << _U32(1)))  # kind survives forwards
-        upd = jnp.stack(
-            [w_origin, jnp.where(fwd, o_dest, w_dest),
-             jnp.where(fwd, o_edge, w_edge), he_col,
-             w[:, PAY_ONES], w[:, PAY_TOT], w[:, SEQ], new_dt],
-            axis=1,
-        )
-        rel = acc | drop  # released slots return to the free-list tail
-        rel_rank = jnp.cumsum(rel) - 1
-        tail = (st.free_head + st.free_count + rel_rank) % C
-        st = st._replace(
-            table=table.at[jnp.where(row_ok, row_of, C)].set(upd, mode="drop"),
-            free_list=st.free_list.at[jnp.where(rel, tail, C)].set(
-                row_of, mode="drop"
-            ),
-            free_count=st.free_count + rel.sum().astype(_I32),
-            messages_sent=st.messages_sent + jnp.minimum(n_due, B),
-            deferred=st.deferred + jnp.maximum(n_due - B, 0),
-        )
-
-        # ---- ACCEPT upcalls. ALERT messages zero X_in[v] and force
-        # Send(v) (Alg. 2's receiver upcall) *first*; data messages then
-        # update X_in with per-(peer,dir) newest-seq dedup against the
-        # post-zero sequence floor — a same-cycle data delivery is
-        # logically newer than the alert that reset the link.
+        # ---- ACCEPT. One data winner per (peer, dir) link per cycle;
+        # colliding rows defer (re-enter the wheel) and the monotone
+        # per-link seq floor orders them on redelivery. An accepted ALERT
+        # zeroes the link and forces Send(v); a same-cycle data delivery
+        # is logically newer than the alert (post-zero sequence floor).
+        # Every alert-side op is cond-guarded: churn is occasional, the
+        # steady-state cycle pays only the data path.
         recv = owner
-        vdir = jnp.asarray(
-            A.direction_of(w_origin, st.pos[recv], d), _I32
-        )
-        is_alert = w_kind == KIND_ALERT
+        vdir = jnp.asarray(A.direction_of(w_origin, st.pos[recv], d), _I32)
+        flat = recv * NDIR + vdir
         acc_d = acc & ~is_alert
         acc_a = acc & is_alert
-        a_idx = jnp.where(acc_a, recv, pd)  # out-of-bounds rows drop
-        inbox = st.inbox.at[a_idx, vdir].set(0, mode="drop")
-        force = jnp.zeros((pd, NDIR), bool).at[a_idx, vdir].set(
-            True, mode="drop"
+        sent = pd * NDIR  # scatter sentinel
+        best = jnp.full(pd * NDIR, -1, _I32).at[
+            jnp.where(acc_d, flat, sent)
+        ].max(jnp.where(acc_d, wi, -1), mode="drop")
+        abest = jax.lax.cond(
+            has_alerts,
+            lambda: jnp.full(pd * NDIR, -1, _I32).at[
+                jnp.where(acc_a, flat, sent)
+            ].max(jnp.where(acc_a, wi, -1), mode="drop"),
+            lambda: jnp.full(pd * NDIR, -1, _I32),
         )
-        flat = recv * NDIR + vdir
-        best_seq = jnp.full(pd * NDIR, -1, _I32).at[flat].max(
-            jnp.where(acc_d, w_seq, -1), mode="drop"
+        winner = acc_d & (wi == best[flat])
+        loser = acc_d & ~winner
+        floor = jnp.where(abest[flat] >= 0, 0, st.inbox[flat, 2])
+        fresh = winner & (w_seq > floor)
+        # one width-WW scatter: a window row is either a fresh data write
+        # or an alert zeroing a link with no data winner (disjoint rows
+        # AND disjoint links, so no duplicate indices)
+        alert_write = acc_a & (best[flat] < 0)
+        data_idx = jnp.where(fresh | alert_write, flat, sent)
+        data_val = jnp.where(
+            alert_write[:, None], 0,
+            jnp.stack([w[:, PAY_ONES].astype(_I32),
+                       w[:, PAY_TOT].astype(_I32), w_seq], axis=1),
         )
-        is_best = acc_d & (w_seq == best_seq[flat])
-        rowi = jnp.arange(B, dtype=_I32)
-        best_row = jnp.full(pd * NDIR, -1, _I32).at[flat].max(
-            jnp.where(is_best, rowi, -1), mode="drop"
-        )
-        winner = is_best & (rowi == best_row[flat])
-        last = inbox[recv, vdir, 2]
-        fresh = winner & (w_seq > last)
-        r_idx = jnp.where(fresh, recv, pd)
-        newbox = jnp.stack(
-            [w[:, PAY_ONES].astype(_I32), w[:, PAY_TOT].astype(_I32), w_seq],
-            axis=1,
-        )  # (B,3)
-        inbox = inbox.at[r_idx, vdir].set(newbox, mode="drop")
-        touched = jnp.zeros(pd, bool).at[jnp.where(acc, recv, pd)].set(
-            True, mode="drop"
-        )
+        inbox = st.inbox.at[data_idx].set(data_val, mode="drop")
         st = st._replace(inbox=inbox)
 
-        # ---- react: test() on touched peers, Send via the compacted
-        # acceptor set (scatter work ∝ budget, not pad); ALERT-forced
-        # directions send unconditionally
-        peers_u, _ = self._compact(touched, B)
-        peers_u = jnp.where(peers_u < pd, peers_u, pd)
-        viol, _, pay_ones, pay_tot = self._test_phase(st)
-        eff = (viol & touched[:, None]) | force
-        st = self._send_phase(st, eff, pay_ones, pay_tot, peers_u)
-        return st._replace(t=st.t + 1)
+        # ---- react: gather-based test() + Send on the touched peers
+        # (one representative window row per peer; work ∝ window, not pad)
+        rep = jnp.maximum(best, abest).reshape(pd, NDIR).max(1)  # (pd,)
+        is_rep = acc & (wi == rep[recv])
+        reps_w, _ = self._compact(is_rep, WW)
+        rvalid = reps_w < WW
+        rp = jnp.where(rvalid, recv[jnp.where(rvalid, reps_w, 0)], 0)
+        link = rp[:, None] * NDIR + jnp.arange(NDIR, dtype=_I32)[None, :]
+        rin = inbox[link]                      # (WW, 3, 3)
+        ro = st.out[rp]                        # (WW, 7)
+        viol, _, pay_ones, pay_tot = P.majority_rules(
+            rin[..., 0], rin[..., 1], ro[:, 0:3], ro[:, 3:6], st.x[rp]
+        )
+        force = (abest.reshape(pd, NDIR)[rp] >= 0) & has_alerts
+        eff = (viol | force) & rvalid[:, None]
+        seq2 = ro[:, 6] + eff.any(1).astype(_I32)
+        ro2 = jnp.concatenate(
+            [jnp.where(eff, pay_ones, ro[:, 0:3]),
+             jnp.where(eff, pay_tot, ro[:, 3:6]), seq2[:, None]], axis=1,
+        )
+        st = st._replace(out=st.out.at[jnp.where(rvalid, rp, pd)].set(
+            ro2, mode="drop"))
+
+        dirs3 = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (WW, NDIR))
+        bc = lambda a: jnp.broadcast_to(a[:, None], (WW, NDIR))
+        valid, s_origin, s_dest, s_edge, s_he = P.send_fields(
+            jnp, bc(st.pos[rp]), dirs3, bc(st.addrs[rp]), bc(st.prev[rp]), d
+        )
+        cand = (eff & valid).reshape(-1)  # (3*WW,)
+
+        # ---- wheel maintenance: slip one cycle, shift leftovers to the
+        # front (revisited a revolution later), then contiguous appends.
+        # Everything below only *writes* the wheel (sources are `sbuf`/
+        # `dbuf`), keeping the donated update chain alias-clean.
+        slip_avail = jnp.clip(dcnt - B, 0, B)
+        slip_k = jnp.minimum(slip_avail, cap - st.wcnt[s1])
+        leftover = jnp.clip(dcnt - B - slip_k, 0, W - 2 * B)
+        shifted = jax.lax.dynamic_slice(
+            sbuf, (B + slip_k, 0), (W - 2 * B, 8))
+        wheel = jax.lax.dynamic_update_slice(
+            st.wheel, shifted[None], (s, 0, 0))
+        wcnt = st.wcnt.at[s].set(leftover)
+        acnt = st.acnt.at[s].set(0)
+        # slip block: rows [B, 2B) of the drained slot, due next cycle
+        wheel = jax.lax.dynamic_update_slice(
+            wheel, dbuf[B:].at[:, DELIVER_T].set(
+                (st.t + 1).astype(_U32))[None],
+            (s1, wcnt[s1], 0))
+        wcnt = wcnt.at[s1].add(slip_k)
+
+        # ALERT forwards: side-wheel, exactly one cycle per hop
+        def alert_fwds(args):
+            awheel, acnt, dropped = args
+            af_idx, af_cum = self._compact(fwd & is_alert, ALERT_W)
+            af_ok = af_idx < WW
+            afp = jnp.where(af_ok, af_idx, 0)
+            af_rows = jnp.stack(
+                [w_origin[afp], o_dest[afp], o_edge[afp],
+                 o_he[afp].astype(_U32), w[afp, PAY_ONES], w[afp, PAY_TOT],
+                 w[afp, SEQ],
+                 jnp.broadcast_to((st.t + 1).astype(_U32), (ALERT_W,))],
+                axis=1,
+            )
+            af_k = jnp.minimum(jnp.minimum(af_cum[-1], ALERT_W),
+                               ALERT_W - acnt[s1])
+            awheel = jax.lax.dynamic_update_slice(
+                awheel, af_rows[None], (s1, acnt[s1], 0))
+            acnt = acnt.at[s1].add(af_k)
+            n_af = (fwd & is_alert).sum().astype(_I32)
+            return awheel, acnt, dropped + jnp.maximum(n_af - af_k, 0)
+
+        awheel, acnt, dropped = jax.lax.cond(
+            has_alerts, alert_fwds, lambda a: a,
+            (st.awheel, acnt, st.dropped),
+        )
+
+        # data forwards + deferred collision losers + mid-descent spills
+        # + react sends, one dense block; a per-cycle delay permutation
+        # assigns delays by position within the block (10 strided
+        # classes -> 10 contiguous per-slot appends, no row scatter)
+        f_dest = jnp.where(fwd, o_dest, jnp.where(spill, cur_d, w_dest))
+        f_edge = jnp.where(fwd, o_edge, jnp.where(spill, cur_e, w_edge))
+        # losers and spills re-enter as continuations: their network hop
+        # was already charged at first window entry
+        f_he = (jnp.where(fwd, o_he, jnp.where(spill, cur_h, w_has_edge))
+                .astype(_U32) | jnp.where(spill | loser, CONT, _U32(0)))
+        fwd_rows = jnp.stack(
+            [w_origin, f_dest, f_edge, f_he,
+             w[:, PAY_ONES], w[:, PAY_TOT], w[:, SEQ], w[:, DELIVER_T]],
+            axis=1,
+        )  # (WW, 8)
+        u = lambda a: a.reshape(-1).astype(_U32)
+        send_rows = jnp.stack(
+            [u(s_origin), u(s_dest), u(s_edge), u(s_he),
+             u(pay_ones), u(pay_tot), u(bc(seq2)), u(bc(seq2))],
+            axis=1,
+        )  # (3*WW, 8)
+        blk_mask = jnp.concatenate([(fwd & ~is_alert) | loser | spill, cand])
+        blk_rows = jnp.concatenate([fwd_rows, send_rows])  # (4*WW, 8)
+        M = 4 * WW
+        dense_idx, dense_cum = self._compact(blk_mask, M)
+        k_tot = dense_cum[-1]
+        dense = blk_rows[jnp.where(dense_idx < M, dense_idx, 0)]  # (M, 8)
+
+        h = ((st.t + 1).astype(_U32) * _U32(0x9E3779B1) + st.salt_enq)
+        perm = st.perms[(h >> _U32(28)).astype(_I32)]  # (10,) delays 1..10
+        CW_ = -(-M // 10)  # ceil(M / 10): strided class width
+        for c in range(10):
+            rows_c = dense[c::10]
+            if rows_c.shape[0] < CW_:  # pad the ragged last class
+                rows_c = jnp.concatenate(
+                    [rows_c, jnp.zeros((CW_ - rows_c.shape[0], 8), _U32)])
+            delay_c = perm[c]
+            slot_c = (st.t + delay_c) % SLOTS
+            k_c = jnp.clip((k_tot - c + 9) // 10, 0, CW_)
+            k_eff = jnp.minimum(k_c, jnp.maximum(cap - wcnt[slot_c], 0))
+            rows_c = rows_c.at[:, DELIVER_T].set((st.t + delay_c).astype(_U32))
+            wheel = jax.lax.dynamic_update_slice(
+                wheel, rows_c[None], (slot_c, wcnt[slot_c], 0))
+            wcnt = wcnt.at[slot_c].add(k_eff)
+            dropped = dropped + (k_c - k_eff)
+
+        # accounting: every first-entry live window row is one consumed
+        # network delivery; continuations (mid-descent spills and
+        # collision-loser redeliveries) were already charged
+        n_live_rows = n_alert + n_data
+        n_cont = (live & w_cont).sum().astype(_I32)
+        n_defer = loser.sum().astype(_I32) + spill.sum().astype(_I32)
+        return st._replace(
+            wheel=wheel, wcnt=wcnt, awheel=awheel, acnt=acnt,
+            messages_sent=st.messages_sent + n_live_rows - n_cont,
+            deferred=st.deferred + jnp.maximum(dcnt - B, 0) + n_defer,
+            dropped=dropped,
+            t=st.t + 1,
+        )
+
+    # -- superstep / chunked convergence ------------------------------------
+
+    def _steps_impl(self, st: DeviceState, k: jnp.ndarray) -> DeviceState:
+        """K cycles in one dispatch (`k` is traced: no re-jit per K)."""
+        def body(c):
+            return self._cycle_impl(c[0]), c[1] + 1
+
+        st, _ = jax.lax.while_loop(
+            lambda c: c[1] < k, body, (st, jnp.zeros((), _I32))
+        )
+        return st
+
+    def _chunk_impl(self, st: DeviceState, truth: jnp.ndarray, k: jnp.ndarray,
+                    stable: jnp.ndarray, stable_for: jnp.ndarray):
+        """Up to `k` convergence-checked cycles in one dispatch.
+
+        Per cycle (matching the reference loop exactly): evaluate the
+        Alg. 3 predicate *before* stepping; a run of `stable_for`
+        consecutive true checks exits without stepping further. Returns
+        (state, stable, done, checks_used) — one host sync per chunk.
+        """
+        def cond(c):
+            st, i, stable, done = c
+            return (~done) & (i < k)
+
+        def body(c):
+            st, i, stable, done = c
+            conv = self._outputs_match(st, truth)
+            stable = jnp.where(conv, stable + 1, jnp.zeros((), _I32))
+            done = stable >= stable_for
+            st = jax.lax.cond(done, lambda x: x, self._cycle_impl, st)
+            return st, i + 1, stable, done
+
+        st, i, stable, done = jax.lax.while_loop(
+            cond, body,
+            (st, jnp.zeros((), _I32), stable, jnp.zeros((), bool)),
+        )
+        return st, stable, done, i
 
     # -- churn (Alg. 2) ------------------------------------------------------
+
+    def _shift_peer_rows(self, st: DeviceState, src: jnp.ndarray) -> dict:
+        """Gather-shift every peer-indexed table by `src` (join/leave)."""
+        pd = st.x.shape[0]
+        link_src = (src[:, None] * NDIR
+                    + jnp.arange(NDIR, dtype=_I32)[None, :]).reshape(-1)
+        return {
+            "x": st.x[src], "out": st.out[src],
+            "inbox": st.inbox[link_src], "addrs": st.addrs[src],
+        }
 
     def _join_impl(self, st: DeviceState, addr: jnp.ndarray,
                    vote: jnp.ndarray, k: jnp.ndarray) -> DeviceState:
@@ -524,15 +779,14 @@ class JaxEngine:
         pd = st.x.shape[0]
         idx = jnp.arange(pd, dtype=_I32)
         src = jnp.where(idx <= k, idx, idx - 1)
-        g = lambda a: a[src]
+        g = self._shift_peer_rows(st, src)
         n_live = st.n_live + 1
+        lk = k * NDIR + jnp.arange(NDIR, dtype=_I32)
         st = st._replace(
-            addrs=g(st.addrs).at[k].set(addr),
-            x=g(st.x).at[k].set(vote),
-            inbox=g(st.inbox).at[k].set(0),
-            out_ones=g(st.out_ones).at[k].set(0),
-            out_tot=g(st.out_tot).at[k].set(0),
-            seq=g(st.seq).at[k].set(0),
+            addrs=g["addrs"].at[k].set(addr),
+            x=g["x"].at[k].set(vote),
+            inbox=g["inbox"].at[lk].set(0),
+            out=g["out"].at[k].set(0),
             n_live=n_live,
         )
         st = st._replace(**self._ring_views(st.addrs, n_live))
@@ -551,14 +805,13 @@ class JaxEngine:
         idx = jnp.arange(pd, dtype=_I32)
         src = jnp.minimum(jnp.where(idx < k, idx, idx + 1), pd - 1)
         last = nb - 1  # vacated row after the shift
-        g = lambda a: a[src]
+        g = self._shift_peer_rows(st, src)
+        ll = last * NDIR + jnp.arange(NDIR, dtype=_I32)
         st = st._replace(
-            addrs=g(st.addrs).at[last].set(NO_ADDR),
-            x=g(st.x).at[last].set(0),
-            inbox=g(st.inbox).at[last].set(0),
-            out_ones=g(st.out_ones).at[last].set(0),
-            out_tot=g(st.out_tot).at[last].set(0),
-            seq=g(st.seq).at[last].set(0),
+            addrs=g["addrs"].at[last].set(NO_ADDR),
+            x=g["x"].at[last].set(0),
+            inbox=g["inbox"].at[ll].set(0),
+            out=g["out"].at[last].set(0),
             n_live=last,
         )
         st = st._replace(**self._ring_views(st.addrs, st.n_live))
@@ -567,51 +820,60 @@ class JaxEngine:
     def _churn_tail(self, st: DeviceState, a_im2, a_im1, a_i) -> DeviceState:
         """Alg. 2 on device, mirroring `MajoritySimulator._apply_change`:
 
-        1. fence (R3) — free every in-flight DATA row whose origin is one
-           of the two change positions (stale pre-change senders);
+        1. fence (R3) — recompact every wheel slot dropping in-flight
+           DATA rows whose origin is one of the two change positions
+           (stale pre-change senders); the side-wheel is untouched
+           (routed ALERTs legitimately originate from those positions);
         2. movers — peers whose post-change position IS pos_fix/pos_var —
            zero their whole X_in and send unconditionally everywhere;
-        3. enqueue the <= 6 routed ALERT rows (kind tag 1) into the
-           message table; the cycle loop delivers them through the same
+        3. enqueue the <= 6 routed ALERT rows into the side-wheel (due
+           immediately); the cycle loop delivers them through the same
            Alg. 1 router as data and fires the zero+Send upcall on
            accept.
         """
         pd, d = st.x.shape[0], self.d
-        C = st.table.shape[0]
+        W, cap = self.slot_width, self.slot_cap
         pos_fix, pos_var = P.change_positions(jnp, a_im2, a_im1, a_i, d)
 
-        tab = st.table
-        live_row = tab[:, DELIVER_T] != NO_MSG
-        kind = (tab[:, HAS_EDGE] >> _U32(1)).astype(_I32)
-        stale = live_row & (kind == KIND_DATA) & (
-            (tab[:, ORIGIN] == pos_fix) | (tab[:, ORIGIN] == pos_var)
-        )
-        rel_rank = jnp.cumsum(stale) - 1
-        tail = (st.free_head + st.free_count + rel_rank) % C
-        rows_idx = jnp.arange(C, dtype=_I32)
-        st = st._replace(
-            table=tab.at[:, DELIVER_T].set(
-                jnp.where(stale, NO_MSG, tab[:, DELIVER_T])
-            ),
-            free_list=st.free_list.at[jnp.where(stale, tail, C)].set(
-                rows_idx, mode="drop"
-            ),
-            free_count=st.free_count + stale.sum().astype(_I32),
-        )
+        def fence_slot(buf, cnt):
+            keep = ((jnp.arange(W) < cnt)
+                    & (buf[:, ORIGIN] != pos_fix) & (buf[:, ORIGIN] != pos_var)
+                    & (buf[:, DELIVER_T] != NO_MSG))
+            idx, cum = self._compact(keep, W)
+            return buf[jnp.where(idx < W, idx, 0)], cum[-1]
+
+        wheel, wcnt = jax.vmap(fence_slot)(st.wheel, st.wcnt)
+        st = st._replace(wheel=wheel, wcnt=wcnt.astype(_I32))
 
         cp = jnp.stack([pos_fix, pos_var])  # (2,)
         own = self._owner_of(st.addrs, st.n_live, cp)
         mover_rows = jnp.where(st.pos[own] == cp, own, pd)
-        st = st._replace(inbox=st.inbox.at[mover_rows].set(0, mode="drop"))
-        force = jnp.zeros((pd, NDIR), bool).at[mover_rows].set(
-            True, mode="drop"
+        mlinks = (mover_rows[:, None] * NDIR
+                  + jnp.arange(NDIR, dtype=_I32)[None, :]).reshape(-1)
+        st = st._replace(inbox=st.inbox.at[
+            jnp.where(mlinks < pd * NDIR, mlinks, pd * NDIR)
+        ].set(0, mode="drop"))
+        # movers: zero X_in done; unconditional Send in every direction
+        # (test() re-run is subsumed — every direction sends)
+        mv = mover_rows < pd
+        mp = jnp.where(mv, mover_rows, 0)
+        k_ones = st.inbox[:, 0].reshape(pd, NDIR).sum(1) + st.x
+        k_tot = st.inbox[:, 1].reshape(pd, NDIR).sum(1) + 1
+        pay_ones = jnp.broadcast_to(k_ones[mp][:, None], (2, NDIR))
+        pay_tot = jnp.broadcast_to(k_tot[mp][:, None], (2, NDIR))
+        seq2 = st.out[mp, 6] + 1
+        ro2 = jnp.concatenate([pay_ones, pay_tot, seq2[:, None]], axis=1)
+        st = st._replace(out=st.out.at[jnp.where(mv, mp, pd)].set(
+            ro2.astype(_I32), mode="drop"))
+        dirs2 = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (2, NDIR))
+        bc2 = lambda a: jnp.broadcast_to(a[:, None], (2, NDIR))
+        valid, origin, dest, edge, has_edge = P.send_fields(
+            jnp, bc2(st.pos[mp]), dirs2, bc2(st.addrs[mp]), bc2(st.prev[mp]), d
         )
-        touched = force.any(1)
-        viol, _, pay_ones, pay_tot = self._test_phase(st)
-        eff = (viol & touched[:, None]) | force
-        peers, _ = self._compact(touched, 4)
-        st = self._send_phase(st, eff, pay_ones, pay_tot,
-                              jnp.where(peers < pd, peers, pd))
+        st = self._enqueue_events(
+            st, (valid & bc2(mv)).reshape(-1), origin, dest, edge, has_edge,
+            pay_ones, pay_tot, bc2(seq2), alert=False,
+        )
 
         ap, adirs = P.alert_plan(jnp, pos_fix, pos_var)  # (6,), (6,)
         aown = self._owner_of(st.addrs, st.n_live, ap)
@@ -619,15 +881,10 @@ class JaxEngine:
             jnp, ap, adirs, st.addrs[aown], st.prev[aown], d
         )
         zero6 = jnp.zeros(6, _U32)
-        return self._enqueue(
+        return self._enqueue_events(
             st, valid, origin, dest, edge, has_edge,
-            zero6, zero6, zero6, KIND_ALERT, immediate=True,
+            zero6, zero6, zero6, alert=True,
         )
-
-    def _converged_impl(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
-        _, out, _, _ = self._test_phase(st)
-        occ = jnp.arange(st.x.shape[0]) < st.n_live
-        return ((out == truth) | ~occ).all()
 
     # -- engine API ----------------------------------------------------------
 
@@ -641,11 +898,11 @@ class JaxEngine:
 
     @property
     def in_flight(self) -> int:
-        return int(self.capacity) - int(self._st.free_count)
+        return int(self._st.wcnt.sum()) + int(self._st.acnt.sum())
 
     @property
     def dropped(self) -> int:
-        """Messages lost to table overflow; 0 unless capacity_per_peer is
+        """Messages lost to arena overflow; 0 unless capacity_per_peer is
         set too low (the numpy table grows instead — see DESIGN.md). A
         run with dropped > 0 is invalid (`run_until_converged` flags
         it)."""
@@ -653,13 +910,15 @@ class JaxEngine:
 
     @property
     def deferred(self) -> int:
-        """Deliveries pushed one cycle past their due time because a cycle
-        had more due messages than `work_budget` rows."""
+        """Deliveries pushed past their due time: over-budget rows slip
+        one cycle (bursts beyond the slip block wait one wheel
+        revolution and are re-counted), and same-link collision losers
+        re-deliver later."""
         return int(self._st.deferred)
 
     def outputs(self) -> np.ndarray:
-        _, out, _, _ = self._test_phase(self._st)
-        return np.asarray(out, dtype=np.int64)[: self.n]
+        out = knowledge_outputs(self._st.inbox, self._st.x, self.pad)
+        return np.asarray(out)[: self.n].astype(np.int64)
 
     def votes(self) -> np.ndarray:
         return np.asarray(self._st.x, dtype=np.int64)[: self.n]
@@ -700,42 +959,41 @@ class JaxEngine:
 
     def _grow(self, need_n: int) -> None:
         """Re-pad every device table one size up (re-jit point: shapes
-        change, so the jitted programs recompile on next use). The
-        circular free-list is rebuilt flat: live slots keep their ids,
-        the new capacity extends the free pool."""
+        change, so the jitted programs recompile on next use). Wheel
+        slots keep their live prefixes; the arena width is rebuilt for
+        the new budget."""
         host = jax.device_get(self._st)
-        old_pad, old_C = self.pad, self.capacity
+        old_pad, old_W = self.pad, self.slot_width
         self.pad = _next_pow2(need_n + max(8, need_n // 8))
         self._size_tables()
+        self._make_programs()
         pr = self.pad - old_pad
 
         def pad_rows(a, fill=0):
             extra = np.full((pr,) + a.shape[1:], fill, a.dtype)
             return np.concatenate([a, extra])
 
-        extra_C = self.capacity - old_C
-        empty = np.zeros((extra_C, 8), np.uint32)
-        empty[:, DELIVER_T] = NO_MSG
-        fl = np.asarray(host.free_list)
-        fh, fc = int(host.free_head), int(host.free_count)
-        cur_free = fl[(fh + np.arange(fc)) % old_C]
-        free_list = np.zeros(self.capacity, np.int32)
-        free_list[:fc] = cur_free
-        free_list[fc: fc + extra_C] = old_C + np.arange(extra_C)
+        W = self.slot_width
+        wheel = np.zeros((SLOTS, W, 8), np.uint32)
+        keep = min(old_W, W)
+        wheel[:, :keep] = np.asarray(host.wheel)[:, :keep]
         self._st = DeviceState(
             x=jnp.asarray(pad_rows(np.asarray(host.x))),
-            inbox=jnp.asarray(pad_rows(np.asarray(host.inbox))),
-            out_ones=jnp.asarray(pad_rows(np.asarray(host.out_ones))),
-            out_tot=jnp.asarray(pad_rows(np.asarray(host.out_tot))),
-            seq=jnp.asarray(pad_rows(np.asarray(host.seq))),
+            inbox=jnp.asarray(np.concatenate([
+                np.asarray(host.inbox),
+                np.zeros((pr * NDIR, 3), np.int32)])),
+            out=jnp.asarray(pad_rows(np.asarray(host.out))),
             addrs=jnp.asarray(pad_rows(np.asarray(host.addrs), NO_ADDR)),
             prev=jnp.asarray(pad_rows(np.asarray(host.prev))),
             pos=jnp.asarray(pad_rows(np.asarray(host.pos))),
             n_live=jnp.asarray(int(host.n_live), _I32),
-            table=jnp.asarray(np.concatenate([np.asarray(host.table), empty])),
-            free_list=jnp.asarray(free_list),
-            free_head=jnp.zeros((), _I32),
-            free_count=jnp.asarray(fc + extra_C, _I32),
+            wheel=jnp.asarray(wheel),
+            wcnt=jnp.asarray(np.minimum(np.asarray(host.wcnt),
+                                        self.slot_cap).astype(np.int32)),
+            awheel=jnp.asarray(np.asarray(host.awheel)),
+            acnt=jnp.asarray(np.asarray(host.acnt)),
+            perms=jnp.asarray(np.asarray(host.perms)),
+            salt_enq=jnp.asarray(np.uint32(host.salt_enq)),
             t=jnp.asarray(int(host.t), _I32),
             messages_sent=jnp.asarray(int(host.messages_sent), _I32),
             dropped=jnp.asarray(int(host.dropped), _I32),
@@ -743,8 +1001,9 @@ class JaxEngine:
         )
 
     def step(self, cycles: int = 1) -> None:
-        for _ in range(cycles):
-            self._st = self._cycle(self._st)
+        """Advance `cycles` cycles as ONE device dispatch (the superstep;
+        bit-identical to `cycles` single-cycle dispatches — tested)."""
+        self._st = self._steps(self._st, jnp.asarray(cycles, _I32))
 
     def block_until_ready(self) -> None:
         jax.block_until_ready(self._st)
@@ -753,19 +1012,21 @@ class JaxEngine:
                             stable_for: int = 1) -> EngineResult:
         start_msgs = self.messages_sent
         truth_dev = jnp.asarray(truth, _I32)
-        stable = 0
-        for _ in range(max_cycles):
-            if bool(self._conv(self._st, truth_dev)):
-                stable += 1
-                if stable >= stable_for:
-                    return {"cycles": self.t,
-                            "messages": self.messages_sent - start_msgs,
-                            "converged": 1.0,
-                            "invalid": float(self.dropped > 0)}
-            else:
-                stable = 0
-            self.step()
-        return {"cycles": self.t,
-                "messages": self.messages_sent - start_msgs,
-                "converged": 0.0,
-                "invalid": float(self.dropped > 0)}
+        sf = jnp.asarray(stable_for, _I32)
+        state = {"stable": jnp.zeros((), _I32)}
+
+        def probe(budget: int) -> Tuple[bool, int]:
+            st, stable, done, used = self._chunk_run(
+                self._st, truth_dev, jnp.asarray(min(budget, self.chunk), _I32),
+                state["stable"], sf,
+            )
+            self._st = st
+            state["stable"] = stable
+            return bool(done), int(used)
+
+        return run_convergence_loop(
+            probe, max_cycles,
+            cycles=lambda: self.t,
+            messages=lambda: self.messages_sent - start_msgs,
+            invalid=lambda: float(self.dropped > 0),
+        )

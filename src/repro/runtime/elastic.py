@@ -104,6 +104,44 @@ def churn_drill(hosts: int = 32, events: int = 8, backend: str = "numpy",
     }
 
 
+def decision_latency_profile(hosts: int = 32, trials: int = 16,
+                             backend: str = "jax", seed: int = 0,
+                             mu: float = 0.55,
+                             max_cycles: int = 50_000) -> Dict:
+    """How fast does the control tree decide a sync quorum? — `trials`
+    independent majority votes over `hosts` peers, run to convergence as
+    ONE batched engine (`make_engine(..., batch=trials)`, vmapped on the
+    device backend).
+
+    This is the threshold-sync control-plane question at fleet scale:
+    every sync decision (`EngineQuorum` in benchmarks/sync_comparison)
+    is one such majority vote, and the trainer's staleness deadline
+    (`max_inner_steps`) must cover its latency tail. Returns the cycle
+    and per-peer message distribution across trials."""
+    from repro.engine import make_engine
+
+    rings = Ring.random(hosts, D_BITS, seed=seed)
+    votes = np.stack([
+        (np.random.default_rng(seed + 100 + b).random(hosts) < mu)
+        .astype(np.int64)
+        for b in range(trials)
+    ])
+    truths = (2 * votes.sum(1) >= hosts).astype(np.int64)
+    eng = make_engine(backend, rings, votes, seed=seed + 1, batch=trials)
+    results = eng.run_until_converged(truths, max_cycles=max_cycles)
+    cycles = np.asarray([r["cycles"] for r in results], np.float64)
+    msgs = np.asarray([r["messages"] for r in results], np.float64) / hosts
+    return {
+        "backend": backend, "hosts": hosts, "trials": trials,
+        "converged": float(np.mean([r["converged"] for r in results])),
+        "cycles_p50": float(np.percentile(cycles, 50)),
+        "cycles_p95": float(np.percentile(cycles, 95)),
+        "cycles_max": float(cycles.max()),
+        "msgs_per_peer_p50": float(np.percentile(msgs, 50)),
+        "msgs_per_peer_p95": float(np.percentile(msgs, 95)),
+    }
+
+
 def remesh_plan(old_hosts: int, new_hosts: int, dp: int, tp: int) -> Dict:
     """Recompute the (data, model) mesh after churn.
 
