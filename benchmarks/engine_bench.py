@@ -29,6 +29,9 @@ import numpy as np
 DEFAULT_SIZES = (1_000, 10_000, 100_000)
 OUT_PATH = os.path.join("results", "BENCH_engine.json")
 REGRESSION_TOLERANCE = 0.30  # fail --check-regression beyond this drop
+# tiny configuration shared by `benchmarks.run --smoke` and the pytest
+# `bench` marker smoke tests — one size, few cycles, finishes in seconds
+SMOKE = {"sizes": (256,), "cycles": 10}
 
 
 def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,

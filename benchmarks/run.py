@@ -21,6 +21,11 @@ Run everything:   PYTHONPATH=src python -m benchmarks.run
 One section:      PYTHONPATH=src python -m benchmarks.run --only stationary
 Device engine:    PYTHONPATH=src python -m benchmarks.run --backend jax
 CI perf gate:     PYTHONPATH=src python -m benchmarks.run --check-regression
+CI smoke pass:    PYTHONPATH=src python -m benchmarks.run --smoke
+                  (tiny n, 1-2 trials per suite, JSONs under
+                  results/smoke/ so the committed baselines stay put;
+                  finishes in ~2 min — the CI bench job runs this after
+                  the regression gate and uploads the JSONs)
 """
 from __future__ import annotations
 
@@ -61,6 +66,10 @@ def main() -> None:
                     help="re-measure the engine against the committed "
                          "results/BENCH_engine.json and exit non-zero on a "
                          ">30%% cycles/sec regression")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny smoke pass (CI): one small size / 1-2 trials "
+                         "per JSON-writing suite, outputs under "
+                         "results/smoke/")
     ap.add_argument("--no-compilation-cache", action="store_true",
                     help="skip the persistent XLA compilation cache")
     args = ap.parse_args()
@@ -75,20 +84,49 @@ def main() -> None:
 
     if args.check_regression:
         section("check_regression")
-        ok = engine_bench.check_regression(csv)
+        ok = engine_bench.check_regression(
+            csv, max_n=1_000 if args.smoke else 10_000)
         sys.exit(0 if ok else 1)
 
     b = args.backend
-    sections = [
-        ("tree_properties", lambda c: tree_properties.run(c)),
-        ("static_convergence", lambda c: static_convergence.run(c, backend=b)),
-        ("stationary", lambda c: stationary.run(c, backend=b)),
-        ("kernel_bench", lambda c: kernel_bench.run(c)),
-        ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
-        ("engine", lambda c: engine_bench.run(c)),
-        ("churn", lambda c: churn.run(c)),
-        ("sweep", lambda c: sweep.run(c, backend=b)),
-    ]
+    if args.smoke:
+        smoke_dir = os.path.join("results", "smoke")
+        os.makedirs(smoke_dir, exist_ok=True)
+        sp = lambda name: os.path.join(smoke_dir, name)
+        sections = [
+            ("kernel_bench", lambda c: kernel_bench.run(c)),
+            ("engine", lambda c: engine_bench.run(
+                c, **engine_bench.SMOKE, out_path=sp("BENCH_engine.json"))),
+            # numpy-only: the device engine's churn programs cost tens
+            # of seconds of one-time jit — too slow for the smoke gate;
+            # the full bench and the churn-marked tests cover the jax path
+            ("churn", lambda c: churn.run(
+                c, sizes=(256,), events=4, backends=("numpy",),
+                out_path=sp("BENCH_churn.json"))),
+            ("sweep", lambda c: sweep.run(
+                c, **sweep.SMOKE, margins=(0.3, 0.7), backend=b,
+                out_path=sp("BENCH_sweep.json"))),
+            ("sweep_mean", lambda c: sweep.run(
+                c, **sweep.SMOKE, offsets=(-0.4, 0.4), problem="mean",
+                backend=b, out_path=sp("BENCH_sweep.json"))),
+            ("sweep_l2", lambda c: sweep.run(
+                c, **sweep.SMOKE, offsets=(-0.4, 0.4), problem="l2",
+                backend=b, out_path=sp("BENCH_sweep.json"))),
+        ]
+    else:
+        sections = [
+            ("tree_properties", lambda c: tree_properties.run(c)),
+            ("static_convergence",
+             lambda c: static_convergence.run(c, backend=b)),
+            ("stationary", lambda c: stationary.run(c, backend=b)),
+            ("kernel_bench", lambda c: kernel_bench.run(c)),
+            ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
+            ("engine", lambda c: engine_bench.run(c)),
+            ("churn", lambda c: churn.run(c)),
+            ("sweep", lambda c: sweep.run(c, backend=b)),
+            ("sweep_mean", lambda c: sweep.run(c, backend=b, problem="mean")),
+            ("sweep_l2", lambda c: sweep.run(c, backend=b, problem="l2")),
+        ]
     for name, fn in sections:
         if args.only and args.only != name:
             continue

@@ -1,5 +1,6 @@
 """Batched scenario sweep: accuracy / cost vs threshold margin, local
-thresholding (LSP) vs gossip, on the vmapped trial engine.
+thresholding (LSP) vs gossip, on the vmapped trial engine — for every
+`ThresholdProblem` (``--problem {majority,mean,l2}``).
 
 The paper's headline claim (§5: local thresholding beats gossip on
 accuracy per message) is a *sweep* — many independent majority-voting
@@ -18,8 +19,17 @@ Per margin mu (fraction of 1-votes; |mu - 1/2| is the threshold margin):
     accuracy when stopped at the LSP message budget (the paper's
     accuracy-per-message comparison).
 
-Writes ``results/BENCH_sweep.json``.
+The mean/L2 grids sweep the *global statistic's distance from tau*
+(``offset``) instead of the vote fraction: per offset, B batched trials
+draw per-peer data whose network statistic sits offset away from the
+threshold, run to the correct global decision, and record convergence
+rate / cycles / messages per peer. Gossip columns exist for majority
+only (LiMoSense is a 0/1-vote protocol).
+
+Writes ``results/BENCH_sweep.json`` — majority keeps the historical
+top-level ``rows``; mean/L2 grids live under ``problems.<name>``.
 Run:  PYTHONPATH=src python -m benchmarks.run --only sweep
+      PYTHONPATH=src python -m benchmarks.sweep --problem mean
 """
 from __future__ import annotations
 
@@ -30,6 +40,7 @@ import time
 import numpy as np
 
 DEFAULT_MARGINS = (0.40, 0.45, 0.48, 0.52, 0.55, 0.60)
+DEFAULT_OFFSETS = (-0.6, -0.25, -0.1, 0.1, 0.25, 0.6)  # mean/l2 grids
 DEFAULT_TRIALS = 4  # seeds per margin
 OUT_PATH = os.path.join("results", "BENCH_sweep.json")
 
@@ -65,9 +76,57 @@ def run_lsp_grid(n: int, margins=DEFAULT_MARGINS, trials: int = DEFAULT_TRIALS,
     return ring, votes, truths, cells, results, wall
 
 
+def _problem_grid(problem, n: int, offsets, trials: int, seed: int):
+    """(B, n[, D]) data planes for a mean/l2 (offset x seed) grid: per
+    cell the *network statistic* sits `offset` away from tau."""
+    from repro.engine import get_problem
+
+    prob = get_problem(problem)
+    data, truths, cells = [], [], []
+    for oi, off in enumerate(offsets):
+        for s in range(trials):
+            rng = np.random.default_rng(seed + 1000 * oi + s)
+            if prob.name == "mean":
+                d = rng.normal(prob.tau + off, 1.0, n)
+            else:  # l2: center along a fixed direction with ||.|| off-tau
+                u = np.ones(prob.data_width) / np.sqrt(prob.data_width)
+                d = rng.normal(u * max(prob.tau + off, 0.0), 0.5,
+                               (n, prob.data_width))
+            q = prob.init_state(d)
+            data.append(d)
+            truths.append(prob.global_output(q))
+            cells.append((off, s))
+    return prob, np.stack(data), np.asarray(truths), cells
+
+
+def run_problem_grid(problem, n: int, offsets=DEFAULT_OFFSETS,
+                     trials: int = DEFAULT_TRIALS, seed: int = 0,
+                     backend: str = "jax", max_cycles: int = 20_000):
+    """All (offset, seed) trials of a mean/l2 problem to convergence,
+    one batched engine."""
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+
+    prob, data, truths, cells = _problem_grid(problem, n, offsets, trials,
+                                              seed)
+    B = data.shape[0]
+    ring = Ring.random(n, 32, seed=seed)
+    eng = make_engine(backend, ring, data, seed=seed + 1, batch=B,
+                      problem=prob)
+    t0 = time.time()
+    results = eng.run_until_converged(truths, max_cycles=max_cycles)
+    wall = time.time() - t0
+    return prob, truths, cells, results, wall
+
+
 def run(csv, n: int = 1000, margins=DEFAULT_MARGINS,
         trials: int = DEFAULT_TRIALS, seed: int = 0, backend: str = "jax",
-        max_cycles: int = 20_000, out_path: str = OUT_PATH):
+        max_cycles: int = 20_000, out_path: str = OUT_PATH,
+        problem: str = "majority", offsets=DEFAULT_OFFSETS):
+    if problem != "majority":
+        return run_problem(csv, problem, n=n, offsets=offsets, trials=trials,
+                           seed=seed, backend=backend, max_cycles=max_cycles,
+                           out_path=out_path)
     import jax
 
     from repro.core.limosense import GossipParams, LiMoSenseSimulator
@@ -134,11 +193,93 @@ def run(csv, n: int = 1000, margins=DEFAULT_MARGINS,
         "batched_wall_s": round(wall, 2),
         "rows": rows,
     }
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(out, f, indent=1)
+    _write_merged(out, out_path)
     csv(f"sweep_written,path={out_path}")
 
 
+def run_problem(csv, problem: str, n: int = 1000, offsets=DEFAULT_OFFSETS,
+                trials: int = DEFAULT_TRIALS, seed: int = 0,
+                backend: str = "jax", max_cycles: int = 20_000,
+                out_path: str = OUT_PATH):
+    """Accuracy-vs-threshold grid for a mean/l2 problem; merged into
+    ``results/BENCH_sweep.json`` under ``problems.<name>``."""
+    import jax
+
+    prob, truths, cells, results, wall = run_problem_grid(
+        problem, n, offsets, trials, seed, backend, max_cycles)
+    B = len(cells)
+    csv(f"sweep_grid,problem={prob.name},n={n},cells={B},backend={backend},"
+        f"wall_s={wall:.1f}")
+    rows = []
+    for oi, off in enumerate(offsets):
+        cell_res = [results[oi * trials + s] for s in range(trials)]
+        conv = float(np.mean([r["converged"] for r in cell_res]))
+        row = {
+            "offset": off, "trials": trials,
+            "truth": int(truths[oi * trials]),
+            "converge_rate": conv,
+            "cycles": round(float(np.mean([r["cycles"] for r in cell_res])), 1),
+            "msgs_per_peer": round(
+                float(np.mean([r["messages"] for r in cell_res])) / n, 3),
+        }
+        rows.append(row)
+        csv(f"sweep,problem={prob.name},offset={off},"
+            f"msgs/peer={row['msgs_per_peer']},cycles={row['cycles']},"
+            f"conv={conv:.2f}")
+    grid = {
+        "problem": repr(prob), "device": jax.default_backend(),
+        "n": n, "trials_per_offset": trials, "batch": B,
+        "engine_backend": backend, "batched_wall_s": round(wall, 2),
+        "rows": rows,
+    }
+    _write_merged({"problems": {prob.name: grid}}, out_path)
+    csv(f"sweep_written,path={out_path}")
+
+
+def _write_merged(out: dict, out_path: str):
+    """Write the sweep JSON preserving the other problems' grids: the
+    majority schema stays at the top level (back-compat), mean/l2 grids
+    merge under ``problems``."""
+    prev = {}
+    try:
+        with open(out_path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        pass
+    problems = {**prev.get("problems", {}), **out.pop("problems", {})}
+    merged = {**(prev if "rows" in prev and "rows" not in out else {}),
+              **out}
+    if problems:
+        merged["problems"] = problems
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1)
+
+
+# smoke-sized arguments (CI bench job + the pytest `bench` marker)
+SMOKE = {"n": 96, "trials": 2, "max_cycles": 5_000}
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--problem", default="majority",
+                    choices=("majority", "mean", "l2"))
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--trials", type=int, default=DEFAULT_TRIALS)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="jax", choices=("numpy", "jax"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid (n=96, 2 trials) for CI")
+    args = ap.parse_args()
+    if args.smoke:
+        kw = dict(SMOKE, margins=(0.3, 0.7), offsets=(-0.4, 0.4))
+    else:
+        kw = {"n": args.n, "trials": args.trials}
+    run(print, seed=args.seed, backend=args.backend,
+        problem=args.problem, **kw)
+
+
 if __name__ == "__main__":
-    run(print)
+    main()

@@ -3,10 +3,15 @@ and the local-thresholding vs gossip message bill.
 
 Runs on either cycle engine (`repro.engine`): the numpy reference or the
 device-resident jax backend (one jitted program per cycle, Pallas
-majority kernel on TPU).
+majority kernel on TPU). ``--problem`` swaps the threshold decision rule
+(the pluggable `ThresholdProblem` layer, DESIGN.md §Problems): majority
+is the paper's Alg. 3; ``mean`` monitors whether the network-wide mean
+sits above a threshold; ``l2`` thresholds the norm of a 2-D mean vector.
 
     PYTHONPATH=src python examples/majority_voting_demo.py
     PYTHONPATH=src python examples/majority_voting_demo.py --backend jax
+    PYTHONPATH=src python examples/majority_voting_demo.py --problem mean
+    PYTHONPATH=src python examples/majority_voting_demo.py --problem l2 --backend jax
 """
 import argparse
 
@@ -15,14 +20,50 @@ import numpy as np
 from repro.core import addressing as A
 from repro.core.dht import Ring
 from repro.core.limosense import LiMoSenseSimulator
-from repro.engine import make_engine
+from repro.engine import get_problem, make_engine
+
+
+def run_problem_demo(args):
+    """Mean / L2 monitoring: converge, shift the data across the
+    threshold, reconverge — same engine, different decision rule."""
+    n = args.peers
+    rng = np.random.default_rng(0)
+    ring = Ring.random(n, 32, seed=0)
+    if args.problem == "mean":
+        prob = get_problem("mean", tau=0.5)
+        lo, hi = rng.normal(0.1, 1.0, n), rng.normal(1.1, 1.0, n)
+        desc = f"mean(x) >= {prob.tau}"
+    else:
+        prob = get_problem("l2", tau=1.0, dim=2)
+        lo = rng.normal([0.2, -0.1], 0.5, (n, 2))
+        hi = rng.normal([0.9, 0.8], 0.5, (n, 2))
+        desc = f"||mean vec|| >= {prob.tau} (2-D, {prob.U.shape[0]} tangent half-spaces)"
+    print(f"== {n} peers, problem: {prob!r} — {desc}, "
+          f"backend: {args.backend} ==")
+    t_lo = prob.global_output(prob.init_state(lo))
+    eng = make_engine(args.backend, ring, lo, seed=1, problem=prob)
+    r = eng.run_until_converged(truth=t_lo)
+    print(f"below-threshold data: decision {t_lo}, converged in "
+          f"{r['cycles']} cycles, {r['messages']/n:.2f} messages/peer")
+    eng.set_votes(np.arange(n), hi)  # raw units: set_votes quantizes
+    t_hi = prob.global_output(prob.init_state(hi))
+    r2 = eng.run_until_converged(truth=t_hi)
+    print(f"data shifted across tau: decision {t_hi}, re-converged in "
+          f"{r2['cycles'] - r['cycles']} cycles, "
+          f"{r2['messages']/n:.2f} messages/peer")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"))
     ap.add_argument("--peers", type=int, default=2000)
+    ap.add_argument("--problem", default="majority",
+                    choices=("majority", "mean", "l2"),
+                    help="threshold decision rule (DESIGN.md §Problems)")
     args = ap.parse_args()
+
+    if args.problem != "majority":
+        return run_problem_demo(args)
 
     n = args.peers
     rng = np.random.default_rng(0)

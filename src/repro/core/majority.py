@@ -1,26 +1,29 @@
-"""Alg. 3 — DHT Local Majority Voting (paper §3.1), vectorized simulator.
+"""Alg. 3 — DHT local thresholding (paper §3.1), vectorized simulator.
 
-Per-peer state (directions v in {UP, CW, CCW}):
-  X_in[i, v]  = (ones, total)  latest message *received* from direction v
-  X_out[i, v] = (ones, total)  latest message *sent* to direction v
-  X_self[i]   = (x_i, 1)       the peer's own vote
-  seq[i], last[i, v]           sequence numbers (out-of-order drop)
+Since the problem layer (`repro.engine.problems`) the simulator runs ANY
+`ThresholdProblem` — the paper's majority vote is the default instance.
+Per-peer state (directions v in {UP, CW, CCW}; P = D + 1 payload width):
 
-Knowledge   K_i     = X_self + sum_v X_in[v]
+  X_in[i, v]  = (vec, count)  latest payload *received* from direction v
+  X_out[i, v] = (vec, count)  latest payload *sent* to direction v
+  data[i]     = (D,)          the peer's own data vector (majority: the vote)
+  seq[i], last[i, v]          sequence numbers (out-of-order drop)
+
+Knowledge   K_i     = (data_i, 1) + sum_v X_in[v]
 Agreement   A_{i,v} = X_in[v] + X_out[v]
-Threshold   thr(X)  = X.ones - X.total / 2        (the paper's (1,-1/2)^t X;
-                      we use 2*ones - total to stay in integers)
+Margin      f(X)    = problem.margin — for majority the paper's
+                      (1,-1/2)^t X, i.e. 2*ones - total in integers
 
-Violation in direction v (paper §3.1):
-      thr(A) >= 0  and  thr(K - A) <  0
-   or thr(A) <  0  and  thr(K - A) >  0
+Violation in direction v (the safe-zone test, paper §3.1):
+      f(A) >= 0  and  f(K - A) <  0
+   or f(A) <  0  and  f(K - A) >  0
 On violation: X_out[v] <- K - X_in[v]; send (X_out[v], ++seq) towards v —
 after which A_{i,v} = K_i and the violation is resolved locally.
 
-Output: 1 iff thr(K) >= 0.
+Output: 1 iff f(K) >= 0.
 
 The event sources are exactly the paper's: initialization, a change of the
-peer's own vote, an incoming message, or an Alg. 2 ALERT (which zeroes
+peer's own data, an incoming message, or an Alg. 2 ALERT (which zeroes
 X_in[v] and forces a send).
 
 The implementation is a cycle-driven simulation over a vectorized peer
@@ -30,12 +33,12 @@ delivery, the same unit LiMoSense is charged in.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 import numpy as np
 
 from repro.engine import protocol as P
+from repro.engine.problems import MAJORITY, ThresholdProblem, get_problem
 from repro.engine.protocol import thr2  # noqa: F401  (re-export, public API)
 
 from . import addressing as A
@@ -48,69 +51,77 @@ from .simulator import MessageTable, random_delays
 NDIR = 3
 
 
-@dataclass
 class MajorityState:
-    """Vectorized Alg. 3 state for all n peers."""
+    """Vectorized Alg. 3 state for all n peers, problem-generic.
 
-    n: int
-    x: np.ndarray  # (n,) votes in {0,1}
-    X_in: np.ndarray = field(default=None)  # (n, 3, 2) [ones, total]
-    X_out: np.ndarray = field(default=None)  # (n, 3, 2)
-    seq: np.ndarray = field(default=None)  # (n,)
-    last: np.ndarray = field(default=None)  # (n, 3)
+    `data` is the (n, D) int64 per-peer data plane; `x` stays the
+    majority-era (n,) view of its single column (readable AND
+    index-assignable — it is a numpy view)."""
 
-    def __post_init__(self):
-        if self.X_in is None:
-            self.X_in = np.zeros((self.n, NDIR, 2), np.int64)
-        if self.X_out is None:
-            self.X_out = np.zeros((self.n, NDIR, 2), np.int64)
-        if self.seq is None:
-            self.seq = np.zeros(self.n, np.int64)
-        if self.last is None:
-            self.last = np.zeros((self.n, NDIR), np.int64)
+    def __init__(self, n: int, x: np.ndarray,
+                 problem: Optional[ThresholdProblem] = None):
+        self.problem = get_problem(problem)
+        self.n = n
+        data = np.asarray(x, np.int64)
+        self.data = (data[:, None] if data.ndim == 1 else data).copy()
+        assert self.data.shape == (n, self.problem.data_width)
+        pw = self.problem.payload_width
+        self.X_in = np.zeros((n, NDIR, pw), np.int64)
+        self.X_out = np.zeros((n, NDIR, pw), np.int64)
+        self.seq = np.zeros(n, np.int64)
+        self.last = np.zeros((n, NDIR), np.int64)
+
+    @property
+    def x(self) -> np.ndarray:
+        """(n,) scalar-data view (majority votes); (n, D) when D > 1."""
+        return self.data[:, 0] if self.data.shape[1] == 1 else self.data
 
     def knowledge(self, idx: Optional[np.ndarray] = None) -> np.ndarray:
-        """(n|len(idx), 2) K_i = X_self + sum_v X_in."""
+        """(n|len(idx), P) K_i = (data_i, 1) + sum_v X_in."""
         xin = self.X_in if idx is None else self.X_in[idx]
-        x = self.x if idx is None else self.x[idx]
+        data = self.data if idx is None else self.data[idx]
         k = xin.sum(axis=1)
-        k[:, 0] += x
-        k[:, 1] += 1
+        k[:, :-1] += data
+        k[:, -1] += 1
         return k
 
     def _rules(self, idx: Optional[np.ndarray] = None):
-        """The shared Alg. 3 test (engine.protocol) on (a subset of) peers."""
+        """The shared safe-zone test (engine.protocol) on (a subset of)
+        peers: (viol (k,3), output (k,), pay (k,3,P))."""
         xin = self.X_in if idx is None else self.X_in[idx]
         xout = self.X_out if idx is None else self.X_out[idx]
-        x = self.x if idx is None else self.x[idx]
-        return P.majority_rules(
-            xin[..., 0], xin[..., 1], xout[..., 0], xout[..., 1], x
-        )
+        data = self.data if idx is None else self.data[idx]
+        return P.threshold_rules(self.problem, np, xin, xout, data)
 
     def outputs(self) -> np.ndarray:
         # only the output column is needed here (hot convergence check);
         # the full rule set (violations/payloads) runs in _rules()
         k = self.knowledge()
-        return (thr2(k[:, 0], k[:, 1]) >= 0).astype(np.int64)
+        return (self.problem.margin(np, k) >= 0).astype(np.int64)
 
     def violations(self, idx: Optional[np.ndarray] = None) -> np.ndarray:
         """(n|len(idx), 3) bool — the paper's test() per peer and direction."""
-        viol, _, _, _ = self._rules(idx)
+        viol, _, _ = self._rules(idx)
         return viol
 
 
 class MajoritySimulator:
     """Cycle-driven co-simulation of Alg. 1 + Alg. 3, with Alg. 2 churn
     (`join` / `leave` re-route in-flight traffic against the changed ring
-    and fire the notification upcalls)."""
+    and fire the notification upcalls). `problem` selects the threshold
+    decision rule (default: the paper's majority vote)."""
 
-    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0):
-        assert votes.shape == (ring.n,)
+    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
+                 problem: Optional[ThresholdProblem] = None):
+        self.problem = get_problem(problem)
+        data = self.problem.init_state(votes)
+        assert data.shape[0] == ring.n
         self.ring = ring
         self.pos = ring.positions()
-        self.state = MajorityState(ring.n, votes.astype(np.int64).copy())
+        self.state = MajorityState(ring.n, data, problem=self.problem)
         self.rng = np.random.default_rng(seed)
-        self.msgs = MessageTable(addr_dtype=ring.addrs.dtype)
+        self.msgs = MessageTable(addr_dtype=ring.addrs.dtype,
+                                 payload_width=self.problem.payload_width)
         # peer index -> position lookups for accepted-message direction
         self.t = 0
         self.messages_sent = 0  # network deliveries consumed (paper's unit)
@@ -124,7 +135,7 @@ class MajoritySimulator:
               pay: Optional[np.ndarray] = None):
         """Alg. 3 Send(v) for (peer, dir) pairs: update X_out, seq, enqueue.
 
-        `pay` is the (len(peers), 2) Send payload K - X_in when the caller
+        `pay` is the (len(peers), P) Send payload K - X_in when the caller
         already ran the full test (`_rules` returns it); recomputed here
         only for the unconditional-alert path.
         """
@@ -143,28 +154,29 @@ class MajoritySimulator:
         v = np.nonzero(valid)[0]
         # invalid (structurally absent) directions are silently wasted, as in
         # the paper; X_out is still updated, which is harmless since X_in
-        # stays (0,0) for those directions.
+        # stays (0,...,0) for those directions.
         self.msgs.enqueue(
-            origin[v], dest[v], edge[v], has_edge[v],
-            pay[v, 0], pay[v, 1], seqs[v],
+            origin[v], dest[v], edge[v], has_edge[v], pay[v], seqs[v],
             random_delays(self.rng, v.size, self.t),
         )
 
     def _react(self, idx: Optional[np.ndarray] = None):
         """test() on (a subset of) peers; Send with the payloads the same
         rule evaluation already produced."""
-        viol, _, po, pt = self.state._rules(idx)
+        viol, _, pay = self.state._rules(idx)
         p, dd = np.nonzero(viol)
         peers = p if idx is None else idx[p]
-        self._send(peers, dd, pay=np.stack([po[p, dd], pt[p, dd]], axis=1))
+        self._send(peers, dd, pay=pay[p, dd])
 
     def _trigger_all_initial(self):
         self._react()
 
     # -- external events ----------------------------------------------------
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray):
-        """Input change upcall: set X_self and re-run test() on those peers."""
-        self.state.x[idx] = new_votes
+        """Input change upcall: set the peers' own data and re-run test().
+        `new_votes` is (k,) scalar data or (k, D) vectors in RAW units —
+        quantized here through the problem, exactly like `join`."""
+        self.state.data[idx] = self.problem.init_state(np.asarray(new_votes))
         self.dirty = True
         self._react(idx)
 
@@ -180,7 +192,7 @@ class MajoritySimulator:
         self._react(np.unique(np.asarray(peers)))
 
     # -- churn (Alg. 2 tree change notification) ----------------------------
-    def join(self, addr: int, vote: int = 0) -> int:
+    def join(self, addr: int, vote=0) -> int:
         """A peer joins at `addr`: grow the ring and state, route the
         Alg. 2 ALERTs on the post-change ring, fire the upcalls.
 
@@ -188,12 +200,14 @@ class MajoritySimulator:
         delivery re-resolves ownership against the changed ring (the
         paper's DHT does the same); only traffic originating from the two
         changed tree positions is fenced (see `_apply_change`). Returns
-        the new peer's ring index.
+        the new peer's ring index. `vote` is the joiner's scalar data or
+        (D,) vector.
         """
         ring_before = self.ring
         ring_after, new_idx = ring_before.join(int(addr))
         st = self.state
-        st.x = np.insert(st.x, new_idx, np.int64(vote))
+        st.data = np.insert(st.data, new_idx,
+                            self.problem.peer_data(vote), axis=0)
         st.X_in = np.insert(st.X_in, new_idx, 0, axis=0)
         st.X_out = np.insert(st.X_out, new_idx, 0, axis=0)
         st.seq = np.insert(st.seq, new_idx, 0)
@@ -215,7 +229,7 @@ class MajoritySimulator:
         ring_before = self.ring
         ring_after = ring_before.leave(idx)
         st = self.state
-        st.x = np.delete(st.x, idx)
+        st.data = np.delete(st.data, idx, axis=0)
         st.X_in = np.delete(st.X_in, idx, axis=0)
         st.X_out = np.delete(st.X_out, idx, axis=0)
         st.seq = np.delete(st.seq, idx)
@@ -300,8 +314,7 @@ class MajoritySimulator:
                 st = self.state
                 ok = seqs[order] > st.last[recv[order], vdir[order]]
                 oo = order[ok]
-                st.X_in[recv[oo], vdir[oo], 0] = m.pay_ones[ai][oo]
-                st.X_in[recv[oo], vdir[oo], 1] = m.pay_total[ai][oo]
+                st.X_in[recv[oo], vdir[oo]] = m.pay[ai][oo]
                 st.last[recv[oo], vdir[oo]] = seqs[oo]
                 self.msgs.release(ai)
                 # react: test() on affected peers
@@ -316,7 +329,7 @@ class MajoritySimulator:
         start_msgs = self.messages_sent
         stable = 0
         for _ in range(max_cycles):
-            if (self.state.outputs() == truth).all():
+            if self.problem.converged(np, self.state.outputs(), truth).all():
                 stable += 1
                 if stable >= stable_for:
                     return {

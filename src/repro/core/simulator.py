@@ -25,15 +25,17 @@ AVG_DELAY = (MIN_DELAY + MAX_DELAY) / 2  # "average message delay" = 5.5 ~ 5 cyc
 
 @dataclass
 class MessageTable:
-    """Bounded-growth SoA message queue. payload is (ones, total) int64."""
+    """Bounded-growth SoA message queue. The payload is a (capacity, P)
+    int64 plane — P = problem payload width (`repro.engine.problems`;
+    the paper's majority messages are P = 2: ones, total)."""
 
     capacity: int = 1024
+    payload_width: int = 2
     origin: np.ndarray = field(default=None)  # sender tree position
     dest: np.ndarray = field(default=None)  # destination address
     edge: np.ndarray = field(default=None)
     has_edge: np.ndarray = field(default=None)
-    pay_ones: np.ndarray = field(default=None)
-    pay_total: np.ndarray = field(default=None)
+    pay: np.ndarray = field(default=None)  # (capacity, P)
     seq: np.ndarray = field(default=None)
     deliver_t: np.ndarray = field(default=None)  # -1 == free slot
     addr_dtype: type = np.uint64
@@ -44,24 +46,33 @@ class MessageTable:
         self.dest = np.zeros(c, self.addr_dtype)
         self.edge = np.zeros(c, self.addr_dtype)
         self.has_edge = np.zeros(c, bool)
-        self.pay_ones = np.zeros(c, np.int64)
-        self.pay_total = np.zeros(c, np.int64)
+        self.pay = np.zeros((c, self.payload_width), np.int64)
         self.seq = np.zeros(c, np.int64)
         self.deliver_t = np.full(c, -1, np.int64)
 
+    @property
+    def pay_ones(self) -> np.ndarray:
+        """Majority payload column 0 (back-compat view)."""
+        return self.pay[:, 0]
+
+    @property
+    def pay_total(self) -> np.ndarray:
+        """Majority payload column 1 (back-compat view)."""
+        return self.pay[:, 1]
+
     def _grow(self, need: int):
         newcap = max(self.capacity * 2, self.capacity + need)
-        for name in ("origin", "dest", "edge", "has_edge", "pay_ones",
-                     "pay_total", "seq", "deliver_t"):
+        for name in ("origin", "dest", "edge", "has_edge", "pay", "seq",
+                     "deliver_t"):
             old = getattr(self, name)
-            new = np.zeros(newcap, old.dtype)
+            new = np.zeros((newcap,) + old.shape[1:], old.dtype)
             if name == "deliver_t":
                 new[:] = -1
             new[: self.capacity] = old
             setattr(self, name, new)
         self.capacity = newcap
 
-    def enqueue(self, origin, dest, edge, has_edge, pay_ones, pay_total, seq, deliver_t):
+    def enqueue(self, origin, dest, edge, has_edge, pay, seq, deliver_t):
         k = origin.shape[0]
         if k == 0:
             return
@@ -74,8 +85,7 @@ class MessageTable:
         self.dest[sl] = dest
         self.edge[sl] = edge
         self.has_edge[sl] = has_edge
-        self.pay_ones[sl] = pay_ones
-        self.pay_total[sl] = pay_total
+        self.pay[sl] = pay
         self.seq[sl] = seq
         self.deliver_t[sl] = deliver_t
 

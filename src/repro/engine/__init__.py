@@ -31,17 +31,23 @@ from __future__ import annotations
 import numpy as np
 
 from .base import EngineResult, MajorityEngine
+from .problems import (L2Thresh, MAJORITY, Majority, MeanMonitor, PROBLEMS,
+                       ThresholdProblem, get_problem)
 
 BACKENDS = ("numpy", "jax")
 
 
 def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
                 batch: int = 0, **kwargs):
-    """Construct a majority-voting engine over `ring` with initial `votes`.
+    """Construct a threshold-monitoring engine over `ring` with initial
+    per-peer data `votes`.
 
-    `backend` is one of `BACKENDS`. Extra keyword arguments are
-    backend-specific (e.g. ``capacity_per_peer`` / ``kernel`` / ``chunk``
-    for jax).
+    `backend` is one of `BACKENDS`. ``problem`` selects the threshold
+    decision rule — a `ThresholdProblem` instance or a `PROBLEMS` name
+    (default: the paper's majority vote); for problems with
+    data_width D > 1 `votes` is the (n, D) raw data plane. Other keyword
+    arguments are backend-specific (e.g. ``capacity_per_peer`` /
+    ``kernel`` / ``chunk`` for jax).
 
     With ``batch=B`` (B > 0), `votes` is (B, n), `ring` a single Ring or
     a list of B rings of equal (n, d), `seed` a scalar (per-trial seeds
@@ -69,4 +75,6 @@ def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
     return JaxEngine(ring, votes, seed=seed, **kwargs)
 
 
-__all__ = ["BACKENDS", "EngineResult", "MajorityEngine", "make_engine"]
+__all__ = ["BACKENDS", "EngineResult", "L2Thresh", "MAJORITY", "Majority",
+           "MajorityEngine", "MeanMonitor", "PROBLEMS", "ThresholdProblem",
+           "get_problem", "make_engine"]

@@ -1,9 +1,17 @@
-"""Engine API: what a majority-voting cycle engine must provide.
+"""Engine API: what a threshold-monitoring cycle engine must provide.
 
 The contract is deliberately small — everything the benchmarks, the
 examples and the elastic runtime need, and nothing tied to where the
 state lives (host numpy vs device arrays). Methods take and return host
 numpy values; backends move data as required.
+
+Since the problem layer (PR 4, `engine.problems`) the decision rule is
+pluggable: engines take a ``problem`` (a `ThresholdProblem` or a name),
+per-peer state is a (D,)-vector, and `votes()` / `set_votes` remain the
+scalar-data views (D = 1: majority votes, mean samples) while `data()`
+exposes the full (n, D) quantized plane. `join` accepts scalar data or
+a (D,) vector. `run_until_converged(truth)` checks the problem's
+`converged` predicate (default: every peer outputs `truth`).
 
 Since PR 2 the contract includes *dynamic membership* (Alg. 2): `join`
 and `leave` change the ring mid-run. Both backends implement the same
@@ -94,10 +102,15 @@ class MajorityEngine(Protocol):
         """(n,) current 0/1 output of every peer (n tracks churn)."""
 
     def votes(self) -> np.ndarray:
-        """(n,) current input vote of every peer."""
+        """(n,) current scalar data of every peer (majority: the vote);
+        (n, D) for problems with data_width > 1."""
+
+    def data(self) -> np.ndarray:
+        """(n, D) quantized per-peer data plane (problem layer)."""
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
-        """Input-change upcall: set X_self and re-run test() on `idx`."""
+        """Data-change upcall: set X_self and re-run test() on `idx`;
+        `new_votes` is (k,) scalar data or (k, D) vectors."""
 
     def join(self, addr: int, vote: int = 0) -> int:
         """Membership upcall: a peer with `vote` joins at address `addr`

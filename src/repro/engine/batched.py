@@ -68,11 +68,17 @@ class BatchedJaxEngine:
         import jax
         import jax.numpy as jnp
         from repro.engine.jax_backend import JaxEngine, _I32
+        from repro.engine.problems import get_problem
 
         self._jax, self._jnp, self._I32 = jax, jnp, _I32
+        problem = get_problem(kwargs.pop("problem", None))
+        kwargs["problem"] = problem
         votes = np.asarray(votes)
-        if votes.ndim != 2:
-            raise ValueError(f"batched votes must be (B, n), got {votes.shape}")
+        want = 2 if problem.data_width == 1 else 3
+        if votes.ndim != want:
+            raise ValueError(
+                f"batched {problem.name} data must be (B, n"
+                f"{', D' if want == 3 else ''}), got {votes.shape}")
         self.batch = int(votes.shape[0])
         self.rings = _as_rings(ring, self.batch)
         seeds = _as_seeds(seed, self.batch)
@@ -80,6 +86,7 @@ class BatchedJaxEngine:
         # its jitted programs are never compiled (jit is lazy)
         self._eng = JaxEngine(self.rings[0], votes[0], seed=seeds[0],
                               _defer_state=True, **kwargs)
+        self.problem = self._eng.problem
         self.n, self.pad = self._eng.n, self._eng.pad
         self.chunk = self._eng.chunk
 
@@ -121,22 +128,34 @@ class BatchedJaxEngine:
         """(B, n) current 0/1 outputs, all trials."""
         from repro.engine.jax_backend import knowledge_outputs
 
-        out = knowledge_outputs(self._st.inbox, self._st.x, self.pad)
+        out = knowledge_outputs(self.problem, self._st.inbox, self._st.x,
+                                self.pad)
         return np.asarray(out)[:, : self.n].astype(np.int64)
 
     def votes(self) -> np.ndarray:
-        return np.asarray(self._st.x)[:, : self.n].astype(np.int64)
+        x = np.asarray(self._st.x)[:, : self.n].astype(np.int64)
+        return x[:, :, 0] if self.problem.data_width == 1 else x
+
+    def data(self) -> np.ndarray:
+        """(B, n, D) quantized per-peer data planes, all trials."""
+        return np.asarray(self._st.x)[:, : self.n].astype(np.int64).copy()
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
-        """Vote-change upcall, all trials at once: `idx`/`new_votes` are
-        (B, k); pad ragged trials with idx = -1 (dropped)."""
+        """Data-change upcall, all trials at once: `idx` is (B, k),
+        `new_votes` (B, k) scalar data or (B, k, D) vectors in RAW
+        units (quantized through the problem, like `join`); pad ragged
+        trials with idx = -1 (dropped — their values must still pass
+        the problem's validation)."""
         jnp, jax = self._jnp, self._jax
         idx = np.asarray(idx)
+        raw = np.asarray(new_votes)
+        nd = np.stack([self.problem.init_state(r) for r in raw]).astype(
+            np.int32)
         safe = np.where(idx >= 0, idx, self.pad)
         st = self._st
         bi = jnp.arange(self.batch)[:, None]
         x = st.x.at[bi, jnp.asarray(safe)].set(
-            jnp.asarray(np.asarray(new_votes, np.int32)), mode="drop")
+            jnp.asarray(nd), mode="drop")
         touched = jnp.zeros((self.batch, self.pad), bool).at[
             bi, jnp.asarray(safe)].set(True, mode="drop")
         self._st = self._vreact(st._replace(x=x), touched)
@@ -188,10 +207,16 @@ class BatchedNumpyEngine:
     def __init__(self, ring: Union[Ring, Sequence[Ring]], votes: np.ndarray,
                  seed=0, **kwargs):
         from repro.engine.numpy_backend import NumpyEngine
+        from repro.engine.problems import get_problem
 
+        self.problem = get_problem(kwargs.pop("problem", None))
+        kwargs["problem"] = self.problem
         votes = np.asarray(votes)
-        if votes.ndim != 2:
-            raise ValueError(f"batched votes must be (B, n), got {votes.shape}")
+        want = 2 if self.problem.data_width == 1 else 3
+        if votes.ndim != want:
+            raise ValueError(
+                f"batched {self.problem.name} data must be (B, n"
+                f"{', D' if want == 3 else ''}), got {votes.shape}")
         self.batch = int(votes.shape[0])
         rings = _as_rings(ring, self.batch)
         seeds = _as_seeds(seed, self.batch)
@@ -216,6 +241,9 @@ class BatchedNumpyEngine:
 
     def votes(self) -> np.ndarray:
         return np.stack([e.votes() for e in self.engines])
+
+    def data(self) -> np.ndarray:
+        return np.stack([e.data() for e in self.engines])
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
         idx = np.asarray(idx)

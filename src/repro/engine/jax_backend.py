@@ -73,14 +73,20 @@ from repro.core.dht import Ring
 from repro.core.simulator import MAX_DELAY, MIN_DELAY
 from repro.engine import protocol as P
 from repro.engine.base import EngineResult, run_convergence_loop
+from repro.engine.problems import Majority, get_problem
 from repro.kernels.majority_step.ops import _on_tpu, majority_step
 
 NDIR = 3
 _I32 = jnp.int32
 _U32 = jnp.uint32
 
-# message-row columns (all uint32; ints bit-fit, bools are 0/1)
-ORIGIN, DEST, EDGE, HAS_EDGE, PAY_ONES, PAY_TOT, SEQ, DELIVER_T = range(8)
+# message-row columns (all uint32; ints bit-fit via wraparound, bools are
+# 0/1). The row is ROWW = 6 + P wide for payload width P (problem layer):
+# the 4 fixed router columns, P payload columns, then SEQ and DELIVER_T at
+# PAY0 + P and PAY0 + P + 1. The majority problem (P = 2) keeps the
+# historical 8-column layout below bit for bit.
+ORIGIN, DEST, EDGE, HAS_EDGE, PAY0 = range(5)
+PAY_ONES, PAY_TOT, SEQ, DELIVER_T = 4, 5, 6, 7  # majority (P = 2) layout
 # the has_edge column packs a continuation flag in bit 1 (bit 0: has_edge):
 # a row whose R1 internal descent outran the narrow-loop budget re-enters
 # the wheel mid-descent with its network-entry already consumed
@@ -100,14 +106,22 @@ def _next_pow2(v: int) -> int:
     return p
 
 
-def knowledge_outputs(inbox, x, pd: int):
-    """(pd,) bool Alg. 3 outputs from the flat per-link inbox: the sign
-    of thr(K), K = X_self + sum_v X_in. The ONE definition behind the
-    on-device convergence predicate and both engines' host-visible
-    `outputs()` (batched included) — keep them in lockstep."""
-    k_ones = inbox[..., 0].reshape(*inbox.shape[:-2], pd, NDIR).sum(-1) + x
-    k_tot = inbox[..., 1].reshape(*inbox.shape[:-2], pd, NDIR).sum(-1) + 1
-    return 2 * k_ones - k_tot >= 0
+def knowledge(problem, inbox, x, pd: int):
+    """(..., pd, P) knowledge payloads K = X_self + sum_v X_in from the
+    flat per-link inbox. The ONE inbox-based definition — the
+    convergence predicate, both engines' host-visible `outputs()`
+    (batched included) and the churn mover payloads all read it; keep
+    them in lockstep. `x` is the (..., pd, D) own-data plane."""
+    pw = problem.payload_width
+    lead = inbox.shape[:-2]
+    k = inbox[..., :pw].reshape(*lead, pd, NDIR, pw).sum(-2)
+    one = jnp.ones_like(x[..., :1])
+    return k + jnp.concatenate([x, one], axis=-1)
+
+
+def knowledge_outputs(problem, inbox, x, pd: int):
+    """(pd,) bool threshold outputs: the sign of margin(K)."""
+    return problem.margin(jnp, knowledge(problem, inbox, x, pd)) >= 0
 
 
 def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
@@ -193,19 +207,19 @@ class DeviceState(NamedTuple):
     Python closure.
     """
 
-    # Alg. 3 peer state
-    x: jnp.ndarray      # (pad,)      int32 votes
-    inbox: jnp.ndarray  # (pad*3, 3)  int32 per-link [X_in.ones, X_in.total, last_seq]
-    out: jnp.ndarray    # (pad, 7)    int32 [X_out.ones*3, X_out.total*3, seq]
+    # Alg. 3 peer state (P = problem payload width; majority: D=1, P=2)
+    x: jnp.ndarray      # (pad, D)      int32 own data (majority: votes)
+    inbox: jnp.ndarray  # (pad*3, P+1)  int32 per-link [X_in payload, last_seq]
+    out: jnp.ndarray    # (pad, 3P+1)   int32 [X_out component c per dir]*P, seq
     # ring membership (sorted-prefix padded tables)
     addrs: jnp.ndarray  # (pad,) uint32, ascending prefix then NO_ADDR
     prev: jnp.ndarray   # (pad,) uint32 predecessor addresses (cyclic)
     pos: jnp.ndarray    # (pad,) uint32 tree positions
     n_live: jnp.ndarray  # ()    int32 occupied row count
     # delivery wheel: dense per-slot arenas bucketed by deliver_t mod SLOTS
-    wheel: jnp.ndarray   # (SLOTS, W, 8)       uint32 data rows
-    wcnt: jnp.ndarray    # (SLOTS,)            int32 live rows per slot
-    awheel: jnp.ndarray  # (SLOTS, ALERT_W, 8) uint32 Alg. 2 ALERT rows
+    wheel: jnp.ndarray   # (SLOTS, W, ROWW)       uint32 data rows
+    wcnt: jnp.ndarray    # (SLOTS,)                int32 live rows per slot
+    awheel: jnp.ndarray  # (SLOTS, ALERT_W, ROWW)  uint32 Alg. 2 ALERT rows
     acnt: jnp.ndarray    # (SLOTS,)            int32
     # RNG material (state, so the superstep vmaps)
     perms: jnp.ndarray     # (NPERM, 10) int32 delay permutations of 1..10
@@ -225,14 +239,22 @@ class JaxEngine:
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
                  capacity_per_peer: int = 6, work_budget: int = 0,
                  kernel: str = "auto", pad_to: int = 0, chunk: int = 256,
-                 _defer_state: bool = False):
+                 problem=None, _defer_state: bool = False):
         if ring.d > 32:
             raise ValueError(
                 f"jax engine needs d <= 32 (uint32 addresses), got d={ring.d}"
             )
-        assert votes.shape == (ring.n,)
         if kernel not in ("auto", "pallas", "ref"):
             raise ValueError(f"kernel must be auto|pallas|ref, got {kernel!r}")
+        self.problem = get_problem(problem)
+        self.pw = int(self.problem.payload_width)   # P
+        self.dw = int(self.problem.data_width)      # D
+        # wheel row layout for this problem (majority keeps the 8-column
+        # historical layout: SEQ=6, DELIVER_T=7)
+        self._SEQ = PAY0 + self.pw
+        self._DT = self._SEQ + 1
+        self.roww = self._DT + 1
+        assert votes.shape[0] == ring.n
         self.ring = ring
         self.n = int(ring.n)
         self.d = int(ring.d)
@@ -241,8 +263,12 @@ class JaxEngine:
         self.chunk = int(chunk)
         # "auto" uses the Pallas kernel only where it compiles natively;
         # off-TPU it falls back to the jnp oracle (interpret mode is for
-        # parity tests, not throughput).
-        self._use_kernel = kernel == "pallas" or (kernel == "auto" and _on_tpu())
+        # parity tests, not throughput). The fused kernel implements the
+        # majority rule only — other problems run the jnp rules.
+        self._is_majority = isinstance(self.problem, Majority)
+        self._use_kernel = (
+            kernel == "pallas" or (kernel == "auto" and _on_tpu())
+        ) and self._is_majority
 
         self.pad = int(pad_to) or _next_pow2(max(self.n + max(8, self.n // 8), 64))
         if self.pad < self.n:
@@ -263,8 +289,14 @@ class JaxEngine:
         self.work_budget = self._wb_req or max(512, self.pad // 8)
         # per-slot arena capacity; the wheel totals SLOTS*cap live rows
         # (comparable to the old flat table's capacity_per_peer*pad, and
-        # several times the observed steady in-flight row count)
-        self.slot_cap = max(64, self._cpp * self.pad // 16)
+        # several times the observed steady in-flight row count). The
+        # 128-row floor (scaled down with an explicitly tiny
+        # capacity_per_peer — the overflow tests rely on small caps)
+        # absorbs the full-width data-change storms of the mean/L2
+        # problems at small pads (majority flips stay well under it;
+        # capacity never alters a non-overflowing trajectory).
+        self.slot_cap = max(min(128, 32 * self._cpp),
+                            self._cpp * self.pad // 16)
         # physical slot width: capacity + slack for the widest contiguous
         # append — the one-cycle slip block (B rows) or a delay-class
         # block (ceil(4*window/10) rows, which EXCEEDS B for small
@@ -300,18 +332,19 @@ class JaxEngine:
                           for _ in range(NPERM)]).astype(np.int32)
         addrs = np.full(pd, NO_ADDR, np.uint32)
         addrs[: self.n] = ring.addrs.astype(np.uint32)
-        x = np.zeros(pd, np.int32)
-        x[: self.n] = votes.astype(np.int32)
+        data = self.problem.init_state(votes)
+        x = np.zeros((pd, self.dw), np.int32)
+        x[: self.n] = data.astype(np.int32)
         st = DeviceState(
             x=jnp.asarray(x),
-            inbox=jnp.zeros((pd * NDIR, 3), _I32),
-            out=jnp.zeros((pd, 7), _I32),
+            inbox=jnp.zeros((pd * NDIR, self.pw + 1), _I32),
+            out=jnp.zeros((pd, NDIR * self.pw + 1), _I32),
             addrs=jnp.asarray(addrs),
             prev=jnp.zeros(pd, _U32), pos=jnp.zeros(pd, _U32),
             n_live=jnp.asarray(self.n, _I32),
-            wheel=jnp.zeros((SLOTS, W, 8), _U32),
+            wheel=jnp.zeros((SLOTS, W, self.roww), _U32),
             wcnt=jnp.zeros(SLOTS, _I32),
-            awheel=jnp.zeros((SLOTS, ALERT_W, 8), _U32),
+            awheel=jnp.zeros((SLOTS, ALERT_W, self.roww), _U32),
             acnt=jnp.zeros(SLOTS, _I32),
             perms=jnp.asarray(perms),
             salt_enq=jnp.asarray(salt, _U32),
@@ -365,37 +398,62 @@ class JaxEngine:
         ).astype(_I32)
         return idx, cum
 
+    def _out_pay(self, out: jnp.ndarray) -> jnp.ndarray:
+        """(..., 3P+1) out rows -> (..., 3, P) X_out payload planes
+        (component-major columns, the majority-era [ones*3, total*3]
+        layout generalized)."""
+        pw = self.pw
+        comps = [out[..., c * NDIR:(c + 1) * NDIR] for c in range(pw)]
+        return jnp.stack(comps, axis=-1)
+
+    def _pack_out(self, pay: jnp.ndarray, seq: jnp.ndarray) -> jnp.ndarray:
+        """Inverse of `_out_pay`: (..., 3, P) payload + (...,) seq ->
+        (..., 3P+1) out rows."""
+        comps = [pay[..., c] for c in range(self.pw)]
+        return jnp.concatenate(comps + [seq[..., None]], axis=-1)
+
     def _test_phase(self, st: DeviceState):
-        """Full-width Alg. 3 rules (event paths + parity surface): the
-        fused Pallas kernel on TPU, the jnp oracle elsewhere."""
+        """Full-width threshold rules (event paths + parity surface):
+        the fused Pallas kernel for the majority problem on TPU, the
+        shared jnp rules elsewhere. Returns (viol (pd,3), pay (pd,3,P))."""
         pd = st.x.shape[0]
-        io = st.inbox[:, 0].reshape(pd, NDIR)
-        it = st.inbox[:, 1].reshape(pd, NDIR)
-        return majority_step(
-            io, it, st.out[:, 0:3], st.out[:, 3:6], st.x,
-            use_kernel=self._use_kernel,
+        pw = self.pw
+        if self._is_majority:
+            io = st.inbox[:, 0].reshape(pd, NDIR)
+            it = st.inbox[:, 1].reshape(pd, NDIR)
+            viol, _, po, pt = majority_step(
+                io, it, st.out[:, 0:3], st.out[:, 3:6], st.x[:, 0],
+                use_kernel=self._use_kernel,
+            )
+            return viol, jnp.stack([po, pt], axis=-1)
+        in_pay = st.inbox[:, :pw].reshape(pd, NDIR, pw)
+        viol, _, pay = P.threshold_rules(
+            self.problem, jnp, in_pay, self._out_pay(st.out), st.x
         )
+        return viol, pay
 
     def _outputs_match(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
-        """Alg. 3 convergence predicate, on device (the superstep's
+        """Threshold convergence predicate, on device (the superstep's
         per-cycle early-exit check — output column only, no rule set)."""
         pd = st.x.shape[0]
-        out = knowledge_outputs(st.inbox, st.x, pd).astype(_I32)
+        out = knowledge_outputs(self.problem, st.inbox, st.x, pd).astype(_I32)
         occ = jnp.arange(pd) < st.n_live
-        return ((out == truth) | ~occ).all()
+        return (self.problem.converged(jnp, out, truth) | ~occ).all()
 
     # -- event-path enqueue (scatter append; any width, per-row hash delay) --
 
     def _enqueue_events(self, st: DeviceState, cand, origin, dest, edge,
-                        has_edge, pay_ones, pay_tot, seq,
+                        has_edge, pay, seq,
                         alert: bool = False) -> DeviceState:
-        """Append the `cand` rows of an *event* (init / vote change /
+        """Append the `cand` rows of an *event* (init / data change /
         churn) to the wheel: slot = deliver_t mod SLOTS, offset = current
         count + rank-within-slot. One flat row scatter — event paths are
         occasional, so the scatter cost is paid per event, not per cycle.
-        ALERT rows go to the side-wheel, due immediately."""
+        ALERT rows go to the side-wheel, due immediately. All args are
+        flat: (m,) meta columns and (m, P) payload."""
         m = cand.shape[0]
-        u = lambda a: a.reshape(-1).astype(_U32)
+        roww = self.roww
+        u = lambda a: a.astype(_U32)
         if alert:
             buf, cnt, cap, width = st.awheel, st.acnt, ALERT_W, ALERT_W
             due = jnp.broadcast_to(st.t, (m,))
@@ -412,13 +470,14 @@ class JaxEngine:
         off = cnt[slot] + rank
         ok = cand & (off < cap)
         rows = jnp.stack(
-            [u(origin), u(dest), u(edge), u(has_edge),
-             u(pay_ones), u(pay_tot), u(seq), u(due)],
+            [u(origin), u(dest), u(edge), u(has_edge)]
+            + [u(pay[:, c]) for c in range(self.pw)]
+            + [u(seq), u(due)],
             axis=1,
-        )  # (m, 8)
+        )  # (m, roww)
         flat = jnp.where(ok, slot * width + off, SLOTS * width)
-        nbuf = buf.reshape(SLOTS * width, 8).at[flat].set(
-            rows, mode="drop").reshape(SLOTS, width, 8)
+        nbuf = buf.reshape(SLOTS * width, roww).at[flat].set(
+            rows, mode="drop").reshape(SLOTS, width, roww)
         ncnt = cnt + (onehot & ok[:, None]).sum(0).astype(_I32)
         dropped = st.dropped + (cand & ~ok).sum().astype(_I32)
         if alert:
@@ -426,19 +485,15 @@ class JaxEngine:
         return st._replace(wheel=nbuf, wcnt=ncnt, dropped=dropped)
 
     def _react_impl(self, st: DeviceState, touched: jnp.ndarray) -> DeviceState:
-        """Alg. 3 test() + Send(v) for all `touched` peers (full-width
-        event path: initialization and vote changes). Elementwise
+        """Threshold test() + Send(v) for all `touched` peers (full-width
+        event path: initialization and data changes). Elementwise
         full-width X_out/seq updates, one event append for the sends."""
         pd, d = st.x.shape[0], self.d
-        viol, _, pay_ones, pay_tot = self._test_phase(st)
+        viol, pay = self._test_phase(st)  # (pd,3), (pd,3,P)
         eff = viol & touched[:, None]
-        out = jnp.concatenate(
-            [jnp.where(eff, pay_ones, st.out[:, 0:3]),
-             jnp.where(eff, pay_tot, st.out[:, 3:6]),
-             (st.out[:, 6] + eff.any(1).astype(_I32))[:, None]],
-            axis=1,
-        )
-        st = st._replace(out=out)
+        seq = st.out[:, NDIR * self.pw] + eff.any(1).astype(_I32)
+        new_pay = jnp.where(eff[..., None], pay, self._out_pay(st.out))
+        st = st._replace(out=self._pack_out(new_pay, seq))
         dirs = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (pd, NDIR))
         bc = lambda a: jnp.broadcast_to(a[:, None], (pd, NDIR))
         valid, origin, dest, edge, has_edge = P.send_fields(
@@ -446,8 +501,9 @@ class JaxEngine:
         )
         cand = (eff & valid).reshape(-1)
         return self._enqueue_events(
-            st, cand, origin, dest, edge, has_edge,
-            pay_ones, pay_tot, bc(out[:, 6]), alert=False,
+            st, cand, origin.reshape(-1), dest.reshape(-1), edge.reshape(-1),
+            has_edge.reshape(-1), pay.reshape(-1, self.pw),
+            bc(seq).reshape(-1), alert=False,
         )
 
     # -- the cycle (superstep body) ------------------------------------------
@@ -459,20 +515,22 @@ class JaxEngine:
         B, W, cap = self.work_budget, self.slot_width, self.slot_cap
         WW = ALERT_W + B  # drain-window width (alerts always ride ahead)
 
+        roww = self.roww
         s = (st.t % SLOTS).astype(_I32)
         s1 = ((st.t + 1) % SLOTS).astype(_I32)
-        abuf = jax.lax.dynamic_slice(st.awheel, (s, 0, 0), (1, ALERT_W, 8))[0]
+        abuf = jax.lax.dynamic_slice(
+            st.awheel, (s, 0, 0), (1, ALERT_W, roww))[0]
         # one materialized read of the due slot: window, slip block and
         # leftover shift all source from `sbuf`, so the wheel itself is
         # only ever *written* below — XLA aliases the whole update chain
         # in place (a read-while-write would force a full-wheel copy)
-        sbuf = jax.lax.dynamic_slice(st.wheel, (s, 0, 0), (1, W, 8))[0]
+        sbuf = jax.lax.dynamic_slice(st.wheel, (s, 0, 0), (1, W, roww))[0]
         dbuf = sbuf[: 2 * B]
         n_alert = st.acnt[s]
         dcnt = st.wcnt[s]
         n_data = jnp.minimum(dcnt, B)
 
-        w = jnp.concatenate([abuf, dbuf[:B]], axis=0)  # (WW, 8)
+        w = jnp.concatenate([abuf, dbuf[:B]], axis=0)  # (WW, roww)
         wi = jnp.arange(WW, dtype=_I32)
         is_alert = wi < ALERT_W
         live = jnp.where(is_alert, wi < n_alert, wi - ALERT_W < n_data)
@@ -480,7 +538,8 @@ class JaxEngine:
         w_origin, w_dest, w_edge = w[:, ORIGIN], w[:, DEST], w[:, EDGE]
         w_has_edge = ((w[:, HAS_EDGE] & _U32(1)) != 0) & live
         w_cont = (w[:, HAS_EDGE] & CONT) != 0
-        w_seq = w[:, SEQ].astype(_I32)
+        w_pay = w[:, PAY0:PAY0 + self.pw]  # (WW, P) uint32 payload bits
+        w_seq = w[:, self._SEQ].astype(_I32)
 
         owner = self._owner_of(st.addrs, st.n_live, w_dest)
         pos_i = st.pos[owner]
@@ -570,7 +629,7 @@ class JaxEngine:
         )
         winner = acc_d & (wi == best[flat])
         loser = acc_d & ~winner
-        floor = jnp.where(abest[flat] >= 0, 0, st.inbox[flat, 2])
+        floor = jnp.where(abest[flat] >= 0, 0, st.inbox[flat, self.pw])
         fresh = winner & (w_seq > floor)
         # one width-WW scatter: a window row is either a fresh data write
         # or an alert zeroing a link with no data winner (disjoint rows
@@ -579,8 +638,7 @@ class JaxEngine:
         data_idx = jnp.where(fresh | alert_write, flat, sent)
         data_val = jnp.where(
             alert_write[:, None], 0,
-            jnp.stack([w[:, PAY_ONES].astype(_I32),
-                       w[:, PAY_TOT].astype(_I32), w_seq], axis=1),
+            jnp.concatenate([w_pay.astype(_I32), w_seq[:, None]], axis=1),
         )
         inbox = st.inbox.at[data_idx].set(data_val, mode="drop")
         st = st._replace(inbox=inbox)
@@ -593,18 +651,16 @@ class JaxEngine:
         rvalid = reps_w < WW
         rp = jnp.where(rvalid, recv[jnp.where(rvalid, reps_w, 0)], 0)
         link = rp[:, None] * NDIR + jnp.arange(NDIR, dtype=_I32)[None, :]
-        rin = inbox[link]                      # (WW, 3, 3)
-        ro = st.out[rp]                        # (WW, 7)
-        viol, _, pay_ones, pay_tot = P.majority_rules(
-            rin[..., 0], rin[..., 1], ro[:, 0:3], ro[:, 3:6], st.x[rp]
+        rin = inbox[link]                      # (WW, 3, P+1)
+        ro = st.out[rp]                        # (WW, 3P+1)
+        viol, _, pay = P.threshold_rules(
+            self.problem, jnp, rin[..., :self.pw], self._out_pay(ro), st.x[rp]
         )
         force = (abest.reshape(pd, NDIR)[rp] >= 0) & has_alerts
         eff = (viol | force) & rvalid[:, None]
-        seq2 = ro[:, 6] + eff.any(1).astype(_I32)
-        ro2 = jnp.concatenate(
-            [jnp.where(eff, pay_ones, ro[:, 0:3]),
-             jnp.where(eff, pay_tot, ro[:, 3:6]), seq2[:, None]], axis=1,
-        )
+        seq2 = ro[:, NDIR * self.pw] + eff.any(1).astype(_I32)
+        ro2 = self._pack_out(
+            jnp.where(eff[..., None], pay, self._out_pay(ro)), seq2)
         st = st._replace(out=st.out.at[jnp.where(rvalid, rp, pd)].set(
             ro2, mode="drop"))
 
@@ -623,14 +679,14 @@ class JaxEngine:
         slip_k = jnp.minimum(slip_avail, cap - st.wcnt[s1])
         leftover = jnp.clip(dcnt - B - slip_k, 0, W - 2 * B)
         shifted = jax.lax.dynamic_slice(
-            sbuf, (B + slip_k, 0), (W - 2 * B, 8))
+            sbuf, (B + slip_k, 0), (W - 2 * B, roww))
         wheel = jax.lax.dynamic_update_slice(
             st.wheel, shifted[None], (s, 0, 0))
         wcnt = st.wcnt.at[s].set(leftover)
         acnt = st.acnt.at[s].set(0)
         # slip block: rows [B, 2B) of the drained slot, due next cycle
         wheel = jax.lax.dynamic_update_slice(
-            wheel, dbuf[B:].at[:, DELIVER_T].set(
+            wheel, dbuf[B:].at[:, self._DT].set(
                 (st.t + 1).astype(_U32))[None],
             (s1, wcnt[s1], 0))
         wcnt = wcnt.at[s1].add(slip_k)
@@ -643,9 +699,10 @@ class JaxEngine:
             afp = jnp.where(af_ok, af_idx, 0)
             af_rows = jnp.stack(
                 [w_origin[afp], o_dest[afp], o_edge[afp],
-                 o_he[afp].astype(_U32), w[afp, PAY_ONES], w[afp, PAY_TOT],
-                 w[afp, SEQ],
-                 jnp.broadcast_to((st.t + 1).astype(_U32), (ALERT_W,))],
+                 o_he[afp].astype(_U32)]
+                + [w_pay[afp, c] for c in range(self.pw)]
+                + [w[afp, self._SEQ],
+                   jnp.broadcast_to((st.t + 1).astype(_U32), (ALERT_W,))],
                 axis=1,
             )
             af_k = jnp.minimum(jnp.minimum(af_cum[-1], ALERT_W),
@@ -672,22 +729,25 @@ class JaxEngine:
         f_he = (jnp.where(fwd, o_he, jnp.where(spill, cur_h, w_has_edge))
                 .astype(_U32) | jnp.where(spill | loser, CONT, _U32(0)))
         fwd_rows = jnp.stack(
-            [w_origin, f_dest, f_edge, f_he,
-             w[:, PAY_ONES], w[:, PAY_TOT], w[:, SEQ], w[:, DELIVER_T]],
+            [w_origin, f_dest, f_edge, f_he]
+            + [w_pay[:, c] for c in range(self.pw)]
+            + [w[:, self._SEQ], w[:, self._DT]],
             axis=1,
-        )  # (WW, 8)
+        )  # (WW, roww)
         u = lambda a: a.reshape(-1).astype(_U32)
+        send_pay = pay.reshape(-1, self.pw)  # (3*WW, P)
         send_rows = jnp.stack(
-            [u(s_origin), u(s_dest), u(s_edge), u(s_he),
-             u(pay_ones), u(pay_tot), u(bc(seq2)), u(bc(seq2))],
+            [u(s_origin), u(s_dest), u(s_edge), u(s_he)]
+            + [send_pay[:, c].astype(_U32) for c in range(self.pw)]
+            + [u(bc(seq2)), u(bc(seq2))],
             axis=1,
-        )  # (3*WW, 8)
+        )  # (3*WW, roww)
         blk_mask = jnp.concatenate([(fwd & ~is_alert) | loser | spill, cand])
-        blk_rows = jnp.concatenate([fwd_rows, send_rows])  # (4*WW, 8)
+        blk_rows = jnp.concatenate([fwd_rows, send_rows])  # (4*WW, roww)
         M = 4 * WW
         dense_idx, dense_cum = self._compact(blk_mask, M)
         k_tot = dense_cum[-1]
-        dense = blk_rows[jnp.where(dense_idx < M, dense_idx, 0)]  # (M, 8)
+        dense = blk_rows[jnp.where(dense_idx < M, dense_idx, 0)]  # (M, roww)
 
         h = ((st.t + 1).astype(_U32) * _U32(0x9E3779B1) + st.salt_enq)
         perm = st.perms[(h >> _U32(28)).astype(_I32)]  # (10,) delays 1..10
@@ -696,12 +756,12 @@ class JaxEngine:
             rows_c = dense[c::10]
             if rows_c.shape[0] < CW_:  # pad the ragged last class
                 rows_c = jnp.concatenate(
-                    [rows_c, jnp.zeros((CW_ - rows_c.shape[0], 8), _U32)])
+                    [rows_c, jnp.zeros((CW_ - rows_c.shape[0], roww), _U32)])
             delay_c = perm[c]
             slot_c = (st.t + delay_c) % SLOTS
             k_c = jnp.clip((k_tot - c + 9) // 10, 0, CW_)
             k_eff = jnp.minimum(k_c, jnp.maximum(cap - wcnt[slot_c], 0))
-            rows_c = rows_c.at[:, DELIVER_T].set((st.t + delay_c).astype(_U32))
+            rows_c = rows_c.at[:, self._DT].set((st.t + delay_c).astype(_U32))
             wheel = jax.lax.dynamic_update_slice(
                 wheel, rows_c[None], (slot_c, wcnt[slot_c], 0))
             wcnt = wcnt.at[slot_c].add(k_eff)
@@ -775,7 +835,8 @@ class JaxEngine:
     def _join_impl(self, st: DeviceState, addr: jnp.ndarray,
                    vote: jnp.ndarray, k: jnp.ndarray) -> DeviceState:
         """Insert a peer row at `k` (gather-shift of the sorted prefix +
-        one row write), then run the shared churn tail."""
+        one row write; `vote` is the joiner's (D,) data vector), then
+        run the shared churn tail."""
         pd = st.x.shape[0]
         idx = jnp.arange(pd, dtype=_I32)
         src = jnp.where(idx <= k, idx, idx - 1)
@@ -838,7 +899,7 @@ class JaxEngine:
         def fence_slot(buf, cnt):
             keep = ((jnp.arange(W) < cnt)
                     & (buf[:, ORIGIN] != pos_fix) & (buf[:, ORIGIN] != pos_var)
-                    & (buf[:, DELIVER_T] != NO_MSG))
+                    & (buf[:, self._DT] != NO_MSG))
             idx, cum = self._compact(keep, W)
             return buf[jnp.where(idx < W, idx, 0)], cum[-1]
 
@@ -857,12 +918,11 @@ class JaxEngine:
         # (test() re-run is subsumed — every direction sends)
         mv = mover_rows < pd
         mp = jnp.where(mv, mover_rows, 0)
-        k_ones = st.inbox[:, 0].reshape(pd, NDIR).sum(1) + st.x
-        k_tot = st.inbox[:, 1].reshape(pd, NDIR).sum(1) + 1
-        pay_ones = jnp.broadcast_to(k_ones[mp][:, None], (2, NDIR))
-        pay_tot = jnp.broadcast_to(k_tot[mp][:, None], (2, NDIR))
-        seq2 = st.out[mp, 6] + 1
-        ro2 = jnp.concatenate([pay_ones, pay_tot, seq2[:, None]], axis=1)
+        pw = self.pw
+        k = knowledge(self.problem, st.inbox, st.x, pd)  # (pd, P)
+        pay = jnp.broadcast_to(k[mp][:, None, :], (2, NDIR, pw))
+        seq2 = st.out[mp, NDIR * pw] + 1
+        ro2 = self._pack_out(pay, seq2)
         st = st._replace(out=st.out.at[jnp.where(mv, mp, pd)].set(
             ro2.astype(_I32), mode="drop"))
         dirs2 = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (2, NDIR))
@@ -871,8 +931,9 @@ class JaxEngine:
             jnp, bc2(st.pos[mp]), dirs2, bc2(st.addrs[mp]), bc2(st.prev[mp]), d
         )
         st = self._enqueue_events(
-            st, (valid & bc2(mv)).reshape(-1), origin, dest, edge, has_edge,
-            pay_ones, pay_tot, bc2(seq2), alert=False,
+            st, (valid & bc2(mv)).reshape(-1), origin.reshape(-1),
+            dest.reshape(-1), edge.reshape(-1), has_edge.reshape(-1),
+            pay.reshape(-1, pw), bc2(seq2).reshape(-1), alert=False,
         )
 
         ap, adirs = P.alert_plan(jnp, pos_fix, pos_var)  # (6,), (6,)
@@ -883,7 +944,7 @@ class JaxEngine:
         zero6 = jnp.zeros(6, _U32)
         return self._enqueue_events(
             st, valid, origin, dest, edge, has_edge,
-            zero6, zero6, zero6, alert=True,
+            jnp.zeros((6, pw), _U32), zero6, alert=True,
         )
 
     # -- engine API ----------------------------------------------------------
@@ -917,31 +978,42 @@ class JaxEngine:
         return int(self._st.deferred)
 
     def outputs(self) -> np.ndarray:
-        out = knowledge_outputs(self._st.inbox, self._st.x, self.pad)
+        out = knowledge_outputs(self.problem, self._st.inbox, self._st.x,
+                                self.pad)
         return np.asarray(out)[: self.n].astype(np.int64)
 
     def votes(self) -> np.ndarray:
-        return np.asarray(self._st.x, dtype=np.int64)[: self.n]
+        """(n,) scalar data (majority votes); (n, D) when D > 1."""
+        x = np.asarray(self._st.x, dtype=np.int64)[: self.n]
+        return x[:, 0] if self.dw == 1 else x
+
+    def data(self) -> np.ndarray:
+        """(n, D) quantized per-peer data plane (problem layer)."""
+        return np.asarray(self._st.x, dtype=np.int64)[: self.n].copy()
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
+        """Data-change upcall; `new_votes` is (k,) scalar data or (k, D)
+        vectors in RAW units — quantized through the problem, exactly
+        like `join`."""
         idx = np.asarray(idx)
+        nd = self.problem.init_state(np.asarray(new_votes)).astype(np.int32)
         st = self._st
-        x = st.x.at[jnp.asarray(idx)].set(
-            jnp.asarray(np.asarray(new_votes, np.int32))
-        )
+        x = st.x.at[jnp.asarray(idx)].set(jnp.asarray(nd))
         touched = jnp.zeros(self.pad, bool).at[jnp.asarray(idx)].set(True)
         self._st = self._react(st._replace(x=x), touched)
 
-    def join(self, addr: int, vote: int = 0) -> int:
-        """Membership upcall: a peer joins at `addr` (Alg. 2). The padded
-        tables absorb the row without recompilation; only outgrowing
-        them triggers the (host-side) grow + re-jit path."""
+    def join(self, addr: int, vote=0) -> int:
+        """Membership upcall: a peer joins at `addr` (Alg. 2) with scalar
+        data or a (D,) vector. The padded tables absorb the row without
+        recompilation; only outgrowing them triggers the (host-side)
+        grow + re-jit path."""
         ring_after, k = self.ring.join(int(addr))
         if ring_after.n > self.pad:
             self._grow(ring_after.n)
         self._st = self._join(
             self._st, jnp.asarray(np.uint32(addr)),
-            jnp.asarray(int(vote), _I32), jnp.asarray(k, _I32),
+            jnp.asarray(self.problem.peer_data(vote).astype(np.int32)),
+            jnp.asarray(k, _I32),
         )
         self.ring = ring_after
         self.n += 1
@@ -974,14 +1046,14 @@ class JaxEngine:
             return np.concatenate([a, extra])
 
         W = self.slot_width
-        wheel = np.zeros((SLOTS, W, 8), np.uint32)
+        wheel = np.zeros((SLOTS, W, self.roww), np.uint32)
         keep = min(old_W, W)
         wheel[:, :keep] = np.asarray(host.wheel)[:, :keep]
         self._st = DeviceState(
             x=jnp.asarray(pad_rows(np.asarray(host.x))),
             inbox=jnp.asarray(np.concatenate([
                 np.asarray(host.inbox),
-                np.zeros((pr * NDIR, 3), np.int32)])),
+                np.zeros((pr * NDIR, self.pw + 1), np.int32)])),
             out=jnp.asarray(pad_rows(np.asarray(host.out))),
             addrs=jnp.asarray(pad_rows(np.asarray(host.addrs), NO_ADDR)),
             prev=jnp.asarray(pad_rows(np.asarray(host.prev))),

@@ -14,6 +14,7 @@ import numpy as np
 from repro.core.dht import Ring
 from repro.core.majority import MajoritySimulator
 from repro.engine.base import EngineResult, run_convergence_loop
+from repro.engine.problems import get_problem
 
 
 class NumpyEngine:
@@ -21,9 +22,12 @@ class NumpyEngine:
 
     backend = "numpy"
 
-    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0):
+    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
+                 problem=None):
         self.ring = ring
-        self.sim = MajoritySimulator(ring, votes, seed=seed)
+        self.problem = get_problem(problem)
+        self.sim = MajoritySimulator(ring, votes, seed=seed,
+                                     problem=self.problem)
 
     @property
     def t(self) -> int:
@@ -48,6 +52,10 @@ class NumpyEngine:
 
     def votes(self) -> np.ndarray:
         return self.sim.state.x.copy()
+
+    def data(self) -> np.ndarray:
+        """(n, D) quantized per-peer data plane (problem layer)."""
+        return self.sim.state.data.copy()
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
         self.sim.set_votes(np.asarray(idx), np.asarray(new_votes))
@@ -82,7 +90,8 @@ class NumpyEngine:
         run-to-quiescence — cost one flag read instead of an O(n) scan
         per cycle (the old per-cycle double dispatch of this path)."""
         if self.sim.dirty or self._conv_truth != truth:
-            self._conv_cache = bool((self.sim.state.outputs() == truth).all())
+            self._conv_cache = bool(self.problem.converged(
+                np, self.sim.state.outputs(), truth).all())
             self._conv_truth = truth
             self.sim.dirty = False
         return self._conv_cache

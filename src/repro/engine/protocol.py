@@ -3,8 +3,9 @@
 Every rule the paper states — the SEND construction, the DELIVER
 classification (with the R1/R2 repairs, DESIGN.md §Faithfulness), the
 Alg. 2 change-notification ALERT construction (`change_positions` /
-`alert_plan`) and the Alg. 3 threshold/violation algebra — lives here
-exactly once, written
+`alert_plan`) and the threshold/violation algebra (`threshold_rules`,
+generic over a `ThresholdProblem` — Alg. 3 majority is the default
+instance, DESIGN.md §Problems) — lives here exactly once, written
 against an explicit array namespace `xp` (``numpy`` or ``jax.numpy``).
 The numpy reference simulator (`repro.core.routing` / `.majority`) and
 the device engine (`repro.engine.jax_backend`) both consume these
@@ -175,16 +176,41 @@ def thr2(ones: Array, total: Array) -> Array:
     return 2 * ones - total
 
 
+def threshold_rules(problem, xp, in_pay: Array, out_pay: Array,
+                    x: Array) -> Tuple[Array, Array, Array]:
+    """The complete per-peer safe-zone test for ANY `ThresholdProblem`
+    (`repro.engine.problems`), vectorized over peers.
+
+    ``in_pay`` / ``out_pay`` are the (..., 3, P) received/sent payload
+    planes (P = D + 1: vector-sum columns then the count column) and
+    ``x`` the (..., D) own data. Returns (viol (..., 3) bool,
+    output (...,) int, pay (..., 3, P)) where pay = K - X_in is the
+    Send(v) payload restoring agreement A_{i,v} = K_i.
+
+    The Alg. 3 majority algebra is `problem=Majority()`; every step of
+    this function then reduces to `majority_rules` bit for bit (pinned
+    by tests). Pure arithmetic + the problem's margin — jit-safe, no
+    data-dependent control flow.
+    """
+    one = xp.ones_like(x[..., :1])
+    k = in_pay.sum(-2) + xp.concatenate([x, one], axis=-1)  # (..., P)
+    agg = in_pay + out_pay  # (..., 3, P)
+    viol, output = problem.test(xp, agg, k)
+    pay = k[..., None, :] - in_pay
+    return viol, output.astype(in_pay.dtype), pay
+
+
 def majority_rules(in_ones: Array, in_tot: Array, out_ones: Array,
                    out_tot: Array, x: Array) -> Tuple[Array, Array, Array, Array]:
-    """The complete per-peer Alg. 3 test, vectorized over peers.
+    """The per-peer Alg. 3 majority test, vectorized over peers — the
+    `threshold_rules` payload algebra unpacked into the (ones, total)
+    counter planes the Pallas ``majority_step`` kernel fuses.
 
     Inputs are the (N, 3) received/sent counter planes and the (N,) own
     votes. Returns (viol (N,3) bool, output (N,), pay_ones (N,3),
     pay_tot (N,3)) where pay = K - X_in is the Send(v) payload that
     restores agreement A_{i,v} = K_i. Pure arithmetic — works unchanged
-    on numpy and jnp arrays; the Pallas `majority_step` kernel is the
-    fused device implementation of exactly this function.
+    on numpy and jnp arrays.
     """
     k_ones = in_ones.sum(-1) + x  # (N,)
     k_tot = in_tot.sum(-1) + 1

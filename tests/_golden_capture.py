@@ -1,0 +1,114 @@
+"""Capture golden majority-engine trajectories from the CURRENT code.
+
+Run once against the pre-refactor engine to freeze its behaviour:
+
+    PYTHONPATH=src python tests/_golden_capture.py
+
+The frozen grid (tests/golden_majority.json) is what
+tests/test_problems.py compares the `ThresholdProblem`-routed Majority
+path against — cycles, message counts and full output vectors must stay
+bit-identical through the problem-layer refactor and beyond.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+
+from repro.core.dht import Ring
+from repro.engine import make_engine
+
+GRID = [
+    # (n, mu, ring_seed, eng_seed, backend, kernel)
+    (48, 0.3, 0, 1, "numpy", None),
+    (48, 0.3, 0, 1, "jax", "ref"),
+    (96, 0.55, 2, 3, "numpy", None),
+    (96, 0.55, 2, 3, "jax", "ref"),
+    (160, 0.45, 4, 5, "numpy", None),
+    (160, 0.45, 4, 5, "jax", "ref"),
+]
+
+BATCH = {"n": 96, "mus": (0.25, 0.6), "ring_seed": 7, "eng_seed": 11}
+
+
+def _votes(n, mu, rng):
+    v = np.zeros(n, np.int64)
+    v[rng.choice(n, int(round(n * mu)), replace=False)] = 1
+    return v
+
+
+def run_cell(n, mu, ring_seed, eng_seed, backend, kernel):
+    rng = np.random.default_rng(ring_seed + 100)
+    ring = Ring.random(n, 32, seed=ring_seed)
+    votes = _votes(n, mu, rng)
+    kw = {"kernel": kernel} if kernel else {}
+    eng = make_engine(backend, ring, votes, seed=eng_seed, **kw)
+    truth = int(2 * votes.sum() >= n)
+    res = eng.run_until_converged(truth=truth, max_cycles=20_000)
+    # vote flip exercises set_votes + reconvergence
+    new = _votes(n, 1.0 - mu, rng)
+    chg = np.nonzero(new != eng.votes())[0]
+    eng.set_votes(chg, new[chg])
+    truth2 = int(2 * new.sum() >= n)
+    res2 = eng.run_until_converged(truth=truth2, max_cycles=20_000)
+    # churn: one join + one leave, then reconverge
+    free = np.setdiff1d(
+        np.arange(1, 1 << 16, dtype=np.uint64), ring.addrs % (1 << 16)
+    )
+    eng.join(int(free[3]), vote=1)
+    eng.leave(0)
+    v = eng.votes()
+    truth3 = int(2 * v.sum() >= v.size)
+    res3 = eng.run_until_converged(truth=truth3, max_cycles=20_000)
+    return {
+        "cell": [n, mu, ring_seed, eng_seed, backend, kernel or ""],
+        "stages": [
+            {"cycles": int(res["cycles"]), "messages": int(res["messages"]),
+             "converged": res["converged"]},
+            {"cycles": int(res2["cycles"]), "messages": int(res2["messages"]),
+             "converged": res2["converged"]},
+            {"cycles": int(res3["cycles"]), "messages": int(res3["messages"]),
+             "converged": res3["converged"]},
+        ],
+        "outputs_sha": hashlib.sha256(
+            eng.outputs().astype(np.int64).tobytes()).hexdigest(),
+        "votes_sha": hashlib.sha256(
+            eng.votes().astype(np.int64).tobytes()).hexdigest(),
+    }
+
+
+def run_batch():
+    n = BATCH["n"]
+    rng = np.random.default_rng(BATCH["ring_seed"] + 100)
+    ring = Ring.random(n, 32, seed=BATCH["ring_seed"])
+    votes = np.stack([_votes(n, mu, rng) for mu in BATCH["mus"]])
+    truths = (2 * votes.sum(1) >= n).astype(np.int64)
+    eng = make_engine("jax", ring, votes, seed=BATCH["eng_seed"],
+                      batch=votes.shape[0], kernel="ref")
+    res = eng.run_until_converged(truths)
+    return {
+        "cell": [n, list(BATCH["mus"]), BATCH["ring_seed"], BATCH["eng_seed"]],
+        "results": [{"cycles": int(r["cycles"]),
+                     "messages": int(r["messages"]),
+                     "converged": r["converged"]} for r in res],
+        "outputs_sha": hashlib.sha256(
+            eng.outputs().astype(np.int64).tobytes()).hexdigest(),
+    }
+
+
+def main():
+    out = {
+        "comment": "pre-refactor majority engine trajectories (PR 3 HEAD)",
+        "cells": [run_cell(*c) for c in GRID],
+        "batched": run_batch(),
+    }
+    path = os.path.join(os.path.dirname(__file__), "golden_majority.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    for c in out["cells"]:
+        print(c["cell"], c["stages"], c["outputs_sha"][:12])
+
+
+if __name__ == "__main__":
+    main()

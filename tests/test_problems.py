@@ -1,0 +1,418 @@
+"""Problem layer (`repro.engine.problems`): the pluggable threshold
+decision rule behind Alg. 3.
+
+Four contracts, strongest first:
+  1. golden grid — `Majority` routed through the `ThresholdProblem`
+     path reproduces the PRE-REFACTOR engine trajectories bit for bit
+     (tests/golden_majority.json, captured at the PR 3 HEAD): cycles,
+     message counts and output vectors, both backends, serial and
+     batched, through vote flips AND churn;
+  2. rule level — `protocol.threshold_rules(Majority)` equals the
+     frozen pre-refactor majority algebra on hypothesis-driven and
+     seeded grids, numpy and jnp;
+  3. system level — `MeanMonitor` / `L2Thresh` converge to the correct
+     global decision on both backends with equal outputs, small-n fast
+     and the 1,024-peer churn acceptance runs (slow);
+  4. API — problem resolution, data validation, payload widths.
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dht import Ring
+from repro.engine import (L2Thresh, MAJORITY, Majority, MeanMonitor,
+                          get_problem, make_engine)
+from repro.engine import protocol as P
+
+from tests._hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_majority.json")
+
+
+def _votes(n, mu, rng):
+    v = np.zeros(n, np.int64)
+    v[rng.choice(n, int(round(n * mu)), replace=False)] = 1
+    return v
+
+
+def _sha(a):
+    return hashlib.sha256(np.asarray(a, np.int64).tobytes()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# 1. golden grid — bit-identical to the pre-refactor engine
+# ---------------------------------------------------------------------------
+
+def _run_golden_cell(cell):
+    n, mu, ring_seed, eng_seed, backend, kernel = cell["cell"]
+    rng = np.random.default_rng(ring_seed + 100)
+    ring = Ring.random(n, 32, seed=ring_seed)
+    votes = _votes(n, mu, rng)
+    kw = {"kernel": kernel} if kernel else {}
+    eng = make_engine(backend, ring, votes, seed=eng_seed, **kw)
+    truth = int(2 * votes.sum() >= n)
+    stages = [eng.run_until_converged(truth=truth, max_cycles=20_000)]
+    new = _votes(n, 1.0 - mu, rng)
+    chg = np.nonzero(new != eng.votes())[0]
+    eng.set_votes(chg, new[chg])
+    stages.append(eng.run_until_converged(truth=int(2 * new.sum() >= n),
+                                          max_cycles=20_000))
+    free = np.setdiff1d(
+        np.arange(1, 1 << 16, dtype=np.uint64), ring.addrs % (1 << 16)
+    )
+    eng.join(int(free[3]), vote=1)
+    eng.leave(0)
+    v = eng.votes()
+    stages.append(eng.run_until_converged(truth=int(2 * v.sum() >= v.size),
+                                          max_cycles=20_000))
+    for got, want in zip(stages, cell["stages"]):
+        assert got["converged"] == want["converged"]
+        assert int(got["cycles"]) == want["cycles"], (cell["cell"], got, want)
+        assert int(got["messages"]) == want["messages"], (cell["cell"], got)
+    assert _sha(eng.outputs()) == cell["outputs_sha"], cell["cell"]
+    assert _sha(eng.votes()) == cell["votes_sha"], cell["cell"]
+
+
+@pytest.mark.parametrize("idx", range(3))
+def test_golden_majority_numpy(idx):
+    cells = [c for c in json.load(open(GOLDEN))["cells"]
+             if c["cell"][4] == "numpy"]
+    _run_golden_cell(cells[idx])
+
+
+@pytest.mark.parametrize("idx", range(3))
+def test_golden_majority_jax(idx):
+    cells = [c for c in json.load(open(GOLDEN))["cells"]
+             if c["cell"][4] == "jax"]
+    _run_golden_cell(cells[idx])
+
+
+def test_golden_majority_batched():
+    g = json.load(open(GOLDEN))["batched"]
+    n, mus, ring_seed, eng_seed = g["cell"]
+    rng = np.random.default_rng(ring_seed + 100)
+    ring = Ring.random(n, 32, seed=ring_seed)
+    votes = np.stack([_votes(n, mu, rng) for mu in mus])
+    truths = (2 * votes.sum(1) >= n).astype(np.int64)
+    eng = make_engine("jax", ring, votes, seed=eng_seed,
+                      batch=votes.shape[0], kernel="ref")
+    res = eng.run_until_converged(truths)
+    for got, want in zip(res, g["results"]):
+        assert int(got["cycles"]) == want["cycles"]
+        assert int(got["messages"]) == want["messages"]
+        assert got["converged"] == want["converged"]
+    assert _sha(eng.outputs()) == g["outputs_sha"]
+
+
+# ---------------------------------------------------------------------------
+# 2. rule level — threshold_rules(Majority) == the pre-refactor algebra
+# ---------------------------------------------------------------------------
+
+def _pre_refactor_majority_rules(in_ones, in_tot, out_ones, out_tot, x):
+    """The PR 3 `protocol.majority_rules` body, frozen verbatim."""
+    k_ones = in_ones.sum(-1) + x
+    k_tot = in_tot.sum(-1) + 1
+    a_ones = in_ones + out_ones
+    a_tot = in_tot + out_tot
+    ta = 2 * a_ones - a_tot
+    tka = 2 * (k_ones[..., None] - a_ones) - (k_tot[..., None] - a_tot)
+    viol = ((ta >= 0) & (tka < 0)) | ((ta < 0) & (tka > 0))
+    output = (2 * k_ones - k_tot >= 0).astype(in_ones.dtype)
+    pay_ones = k_ones[..., None] - in_ones
+    pay_tot = k_tot[..., None] - in_tot
+    return viol, output, pay_ones, pay_tot
+
+
+def _assert_majority_equiv(io, it, oo, ot, x):
+    want = _pre_refactor_majority_rules(io, it, oo, ot, x)
+    in_pay = np.stack([io, it], axis=-1)
+    out_pay = np.stack([oo, ot], axis=-1)
+    viol, out, pay = P.threshold_rules(MAJORITY, np, in_pay, out_pay,
+                                       x[..., None])
+    np.testing.assert_array_equal(viol, want[0])
+    np.testing.assert_array_equal(out, want[1])
+    np.testing.assert_array_equal(pay[..., 0], want[2])
+    np.testing.assert_array_equal(pay[..., 1], want[3])
+    # and the jnp path produces the same bits
+    vj, oj, pj = P.threshold_rules(
+        MAJORITY, jnp, jnp.asarray(in_pay, jnp.int32),
+        jnp.asarray(out_pay, jnp.int32), jnp.asarray(x[..., None], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(vj), want[0])
+    np.testing.assert_array_equal(np.asarray(oj, np.int64), want[1])
+    np.testing.assert_array_equal(np.asarray(pj, np.int64),
+                                  np.asarray(pay, np.int64))
+
+
+def test_threshold_rules_majority_seeded_grid():
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        m = 500
+        io = rng.integers(0, 50, (m, 3))
+        it = io + rng.integers(0, 50, (m, 3))
+        oo = rng.integers(0, 50, (m, 3))
+        ot = oo + rng.integers(0, 50, (m, 3))
+        x = rng.integers(0, 2, m)
+        _assert_majority_equiv(io, it, oo, ot, x)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+def test_threshold_rules_majority_hypothesis(seed, m):
+    rng = np.random.default_rng(seed)
+    io = rng.integers(0, 1000, (m, 3))
+    it = io + rng.integers(0, 1000, (m, 3))
+    oo = rng.integers(0, 1000, (m, 3))
+    ot = oo + rng.integers(0, 1000, (m, 3))
+    x = rng.integers(0, 2, m)
+    _assert_majority_equiv(io, it, oo, ot, x)
+
+
+def test_majority_rules_shim_matches_threshold_rules():
+    """`protocol.majority_rules` (the kernel-facing unpacked form) and
+    `threshold_rules(Majority)` are the same algebra."""
+    rng = np.random.default_rng(3)
+    m = 1000
+    io = rng.integers(0, 50, (m, 3))
+    it = io + rng.integers(0, 50, (m, 3))
+    oo = rng.integers(0, 50, (m, 3))
+    ot = oo + rng.integers(0, 50, (m, 3))
+    x = rng.integers(0, 2, m)
+    v1, o1, po, pt = P.majority_rules(io, it, oo, ot, x)
+    v2, o2, pay = P.threshold_rules(MAJORITY, np, np.stack([io, it], -1),
+                                    np.stack([oo, ot], -1), x[:, None])
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(o1, o2)
+    np.testing.assert_array_equal(po, pay[..., 0])
+    np.testing.assert_array_equal(pt, pay[..., 1])
+
+
+# ---------------------------------------------------------------------------
+# 3. system level — MeanMonitor / L2Thresh on both backends
+# ---------------------------------------------------------------------------
+
+def _parity_run(problem, data, ring, seed, max_cycles=20_000):
+    truth = problem.global_output(problem.init_state(data))
+    jx = make_engine("jax", ring, data, seed=seed, problem=problem,
+                     kernel="ref")
+    nu = make_engine("numpy", ring, data, seed=seed, problem=problem)
+    r_j = jx.run_until_converged(truth=truth, max_cycles=max_cycles)
+    r_n = nu.run_until_converged(truth=truth, max_cycles=max_cycles)
+    assert r_j["converged"] == 1.0, (problem, r_j)
+    assert r_n["converged"] == 1.0, (problem, r_n)
+    assert jx.dropped == 0
+    np.testing.assert_array_equal(jx.outputs(), nu.outputs())
+    np.testing.assert_array_equal(jx.data(), nu.data())
+    return jx, nu, truth
+
+
+@pytest.mark.parametrize("center,tau", [(1.3, 0.5), (-0.2, 0.5), (0.5, 0.0)])
+def test_mean_monitor_converges_small(center, tau):
+    n = 96
+    ring = Ring.random(n, 32, seed=7)
+    rng = np.random.default_rng(11)
+    data = rng.normal(center, 1.0, n)
+    _parity_run(MeanMonitor(tau=tau), data, ring, seed=5)
+
+
+@pytest.mark.parametrize("center,tau", [
+    ([1.2, 0.9], 1.0), ([0.2, -0.1], 1.0), ([-1.0, -0.8], 1.0)])
+def test_l2_thresh_converges_small(center, tau):
+    n = 96
+    ring = Ring.random(n, 32, seed=8)
+    rng = np.random.default_rng(12)
+    data = rng.normal(center, 0.5, (n, 2))
+    _parity_run(L2Thresh(tau=tau, dim=2), data, ring, seed=6)
+
+
+def test_l2_dim1_two_sided():
+    """D = 1 L2 is the exact two-sided |mean| >= tau test."""
+    n = 64
+    ring = Ring.random(n, 32, seed=9)
+    rng = np.random.default_rng(13)
+    prob = L2Thresh(tau=1.0, dim=1)
+    for center in (-2.0, 0.1, 2.0):
+        data = rng.normal(center, 0.3, (n, 1))
+        q = prob.init_state(data)
+        want = int(abs(q.sum() / n) >= prob.tau * prob.scale)
+        assert prob.global_output(q) == want
+        _parity_run(prob, data, ring, seed=3)
+
+
+def test_problem_data_change_reconverges():
+    """set_votes with vector data: flip the statistic across tau."""
+    n = 96
+    ring = Ring.random(n, 32, seed=10)
+    rng = np.random.default_rng(14)
+    prob = MeanMonitor(tau=0.0)
+    data = rng.normal(-1.0, 0.5, n)
+    jx, nu, truth = _parity_run(prob, data, ring, seed=4)
+    assert truth == 0
+    new = rng.normal(1.0, 0.5, n)  # raw units: set_votes quantizes
+    for eng in (jx, nu):
+        eng.set_votes(np.arange(n), new)
+    r_j = jx.run_until_converged(truth=1, max_cycles=20_000)
+    r_n = nu.run_until_converged(truth=1, max_cycles=20_000)
+    assert r_j["converged"] == 1.0 and r_n["converged"] == 1.0
+    np.testing.assert_array_equal(jx.outputs(), nu.outputs())
+
+
+def test_problem_churn_parity_small():
+    """Join/leave under MeanMonitor: identical schedule on both
+    backends reconverges to the correct decision with equal outputs."""
+    from repro.core.churn import random_schedule
+
+    n = 64
+    ring = Ring.random(n, 32, seed=15)
+    rng = np.random.default_rng(16)
+    prob = MeanMonitor(tau=0.25)
+    data = rng.normal(0.8, 0.8, n)
+    jx, nu, truth = _parity_run(prob, data, ring, seed=7)
+    sched = random_schedule(ring, 6, 17)
+    for eng in (jx, nu):
+        for op in sched.ops:
+            if op[0] == "join":
+                eng.join(op[1], vote=op[2])
+            else:
+                eng.leave(op[1])
+            eng.step(25)
+    np.testing.assert_array_equal(jx.data(), nu.data())
+    truth2 = prob.global_output(nu.data())
+    r_j = jx.run_until_converged(truth=truth2, max_cycles=20_000)
+    r_n = nu.run_until_converged(truth=truth2, max_cycles=20_000)
+    assert r_j["converged"] == 1.0 and r_n["converged"] == 1.0
+    assert jx.dropped == 0
+    np.testing.assert_array_equal(jx.outputs(), nu.outputs())
+
+
+@pytest.mark.slow
+@pytest.mark.churn
+@pytest.mark.parametrize("problem", [
+    MeanMonitor(tau=0.3), L2Thresh(tau=1.0, dim=2)])
+def test_problem_parity_1024_peers_churn(problem):
+    """The acceptance-criterion run: 1,024 peers per problem, churn
+    events included — correct global decision, numpy/jax output
+    equality, no device drops."""
+    from repro.core.churn import random_schedule
+
+    n = 1024
+    ring = Ring.random(n, 32, seed=20)
+    rng = np.random.default_rng(21)
+    if problem.data_width == 1:
+        data = rng.normal(0.9, 1.0, n)
+    else:
+        data = rng.normal([0.9, 0.7], 0.6, (n, problem.data_width))
+    jx, nu, truth = _parity_run(problem, data, ring, seed=8)
+    assert truth == 1
+    sched = random_schedule(ring, 16, 22)
+    for eng in (jx, nu):
+        for op in sched.ops:
+            if op[0] == "join":
+                eng.join(op[1], vote=op[2])
+            else:
+                eng.leave(op[1])
+            eng.step(20)
+    np.testing.assert_array_equal(jx.data(), nu.data())
+    truth2 = problem.global_output(nu.data())
+    r_j = jx.run_until_converged(truth=truth2, max_cycles=30_000)
+    r_n = nu.run_until_converged(truth=truth2, max_cycles=30_000)
+    assert r_j["converged"] == 1.0 and r_n["converged"] == 1.0
+    assert jx.dropped == 0 and r_j["invalid"] == 0.0
+    np.testing.assert_array_equal(jx.outputs(), nu.outputs())
+
+
+def test_batched_problem_matches_serial():
+    """vmapped MeanMonitor trials == serial runs, trial for trial."""
+    B, n = 3, 96
+    ring = Ring.random(n, 32, seed=30)
+    rng = np.random.default_rng(31)
+    prob = MeanMonitor(tau=0.2)
+    data = rng.normal([[1.0], [-0.5], [0.4]], 1.0, (B, n))
+    truths = np.asarray([prob.global_output(prob.init_state(d))
+                         for d in data])
+    bat = make_engine("jax", ring, data, seed=40, batch=B, problem=prob,
+                      kernel="ref")
+    res_b = bat.run_until_converged(truths)
+    outs_b = bat.outputs()
+    for b in range(B):
+        ser = make_engine("jax", ring, data[b], seed=40 + b, problem=prob,
+                          kernel="ref")
+        res_s = ser.run_until_converged(int(truths[b]))
+        assert res_s == res_b[b], f"trial {b}"
+        np.testing.assert_array_equal(ser.outputs(), outs_b[b])
+    assert all(r["converged"] == 1.0 for r in res_b)
+
+
+# ---------------------------------------------------------------------------
+# 4. API surface
+# ---------------------------------------------------------------------------
+
+def test_get_problem_resolution():
+    assert get_problem(None) is MAJORITY
+    assert isinstance(get_problem("majority"), Majority)
+    assert isinstance(get_problem("mean", tau=0.5), MeanMonitor)
+    p = get_problem("l2", tau=2.0, dim=3)
+    assert isinstance(p, L2Thresh) and p.data_width == 3
+    assert get_problem(p) is p
+    with pytest.raises(ValueError):
+        get_problem("entropy")
+
+
+def test_problem_validation():
+    with pytest.raises(ValueError):
+        Majority().init_state(np.asarray([0, 2, 1]))
+    with pytest.raises(TypeError):
+        Majority().init_state(np.asarray([0.5, 1.0]))
+    with pytest.raises(ValueError):
+        L2Thresh(dim=2).init_state(np.zeros((5, 3)))
+    with pytest.raises(ValueError):
+        MeanMonitor().init_state(np.zeros((5, 2)))
+    assert Majority().payload_width == 2
+    assert L2Thresh(dim=3).payload_width == 4
+    np.testing.assert_array_equal(MeanMonitor(scale=100).peer_data(0.5), [50])
+    np.testing.assert_array_equal(L2Thresh(dim=2, scale=10).peer_data(1),
+                                  [10, 10])
+
+
+def test_set_votes_quantizes_like_join():
+    """The two data-change upcalls agree: set_votes takes RAW units and
+    quantizes through the problem, exactly like join's peer_data."""
+    n = 16
+    ring = Ring.random(n, 32, seed=40)
+    prob = MeanMonitor(tau=0.0, scale=256)
+    for backend in ("numpy", "jax"):
+        eng = make_engine(backend, ring, np.zeros(n), seed=1, problem=prob,
+                          **({"kernel": "ref"} if backend == "jax" else {}))
+        eng.set_votes(np.asarray([2]), np.asarray([0.7]))
+        assert eng.data()[2, 0] == round(0.7 * 256)
+        free = np.setdiff1d(np.arange(1, 1 << 12, dtype=np.uint64),
+                            ring.addrs % (1 << 12))
+        k = eng.join(int(free[1]), vote=0.7)
+        assert eng.data()[k, 0] == round(0.7 * 256)
+
+
+def test_problem_global_output():
+    assert MAJORITY.global_output(np.ones((10, 1), np.int64)) == 1
+    assert MAJORITY.global_output(np.zeros((10, 1), np.int64)) == 0
+    m = MeanMonitor(tau=0.5)
+    assert m.global_output(m.init_state(np.full(8, 0.9))) == 1
+    assert m.global_output(m.init_state(np.full(8, 0.1))) == 0
+    l2 = L2Thresh(tau=1.0, dim=2)
+    assert l2.global_output(l2.init_state(np.full((8, 2), 1.0))) == 1
+    assert l2.global_output(l2.init_state(np.full((8, 2), 0.1))) == 0
+
+
+def test_mean_is_weighted_majority():
+    """MeanMonitor(tau=1/2) on 0/1 data decides exactly like Majority
+    (the linear-threshold family containment)."""
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        v = rng.integers(0, 2, 30)
+        m = MeanMonitor(tau=0.5, scale=2)  # T = 1, data scale 2
+        assert (m.global_output(m.init_state(v.astype(np.float64)))
+                == MAJORITY.global_output(v[:, None].astype(np.int64)))

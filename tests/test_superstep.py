@@ -213,20 +213,19 @@ def test_wheel_occupancy_and_no_silent_loss():
 
 @pytest.mark.bench
 def test_engine_bench_smoke(tmp_path):
-    """Smoke-sized engine benchmark: records both backends, preserves a
-    baseline, and the regression checker consumes its own output."""
+    """Smoke-sized engine benchmark (the `--smoke` CI configuration):
+    records both backends, preserves a baseline, and the regression
+    checker consumes its own output."""
     from benchmarks import engine_bench
 
     out = tmp_path / "BENCH_engine.json"
     lines = []
-    engine_bench.run(lines.append, sizes=(256,), cycles=10,
-                     out_path=str(out))
+    engine_bench.run(lines.append, **engine_bench.SMOKE, out_path=str(out))
     data = json.loads(out.read_text())
     assert data["rows"][0]["jax"]["dropped"] == 0
     assert data["rows"][0]["jax"]["cycles_per_sec"] > 0
     # second run demotes the first rows to the baseline and reports speedup
-    engine_bench.run(lines.append, sizes=(256,), cycles=10,
-                     out_path=str(out))
+    engine_bench.run(lines.append, **engine_bench.SMOKE, out_path=str(out))
     data2 = json.loads(out.read_text())
     assert "baseline" in data2 and "jax_over_baseline" in data2["rows"][0]
     # regression checker: equal perf passes, an absurd committed value fails
@@ -244,10 +243,33 @@ def test_sweep_smoke(tmp_path):
 
     out = tmp_path / "BENCH_sweep.json"
     lines = []
-    sweep.run(lines.append, n=96, margins=(0.3, 0.7), trials=2,
-              max_cycles=5_000, out_path=str(out))
+    sweep.run(lines.append, **sweep.SMOKE, margins=(0.3, 0.7),
+              out_path=str(out))
     data = json.loads(out.read_text())
     assert data["batch"] == 4
     assert len(data["rows"]) == 2
     for row in data["rows"]:
         assert row["lsp_converge_rate"] == 1.0
+
+
+@pytest.mark.bench
+def test_sweep_problem_smoke(tmp_path):
+    """`--problem {mean,l2}` grids merge under `problems.<name>` while
+    the majority rows stay at the top level."""
+    from benchmarks import sweep
+
+    out = tmp_path / "BENCH_sweep.json"
+    lines = []
+    sweep.run(lines.append, **sweep.SMOKE, margins=(0.3, 0.7),
+              out_path=str(out))
+    for problem in ("mean", "l2"):
+        sweep.run(lines.append, **sweep.SMOKE, offsets=(-0.4, 0.4),
+                  problem=problem, out_path=str(out))
+    data = json.loads(out.read_text())
+    assert len(data["rows"]) == 2  # majority rows survived the merges
+    for problem in ("mean", "l2"):
+        grid = data["problems"][problem]
+        assert len(grid["rows"]) == 2
+        for row in grid["rows"]:
+            assert row["converge_rate"] == 1.0
+            assert row["msgs_per_peer"] > 0
