@@ -1,6 +1,13 @@
 """Engine throughput: numpy vs device backend cycles/sec at growing peer
 counts, recorded to ``results/BENCH_engine.json`` so the perf trajectory
-is tracked PR over PR.
+is tracked PR over PR. The mesh-sharded engine (`repro.engine.sharded`)
+is benchmarked in a SUBPROCESS with virtual host devices
+(``--xla_force_host_platform_device_count``, the tests/test_distributed
+pattern — the parent must keep seeing one device) and merged into the
+same JSON under ``sharded``; the committed section demonstrates an
+n=1e6-peer run on 8 devices finishing with dropped=0, which
+``check_regression`` re-asserts (plus a smoke-scale sharded re-run) on
+every CI pass.
 
 Methodology: start a fresh engine (initialization storm in flight),
 warm up a few cycles (includes jit compile for the device backend),
@@ -33,13 +40,33 @@ REGRESSION_TOLERANCE = 0.30  # fail --check-regression beyond this drop
 # `bench` marker smoke tests — one size, few cycles, finishes in seconds
 SMOKE = {"sizes": (256,), "cycles": 10}
 
+# sharded-engine rows (subprocess, 8 virtual host devices). The 1e6 row
+# is the scale demonstration: pad_to=2^20 (the natural pad would round
+# 1e6+headroom up to 2^21 and double every table), an explicit 64Ki
+# drain budget (the default pad/8 window would dominate the boundary
+# exchange), and capacity_per_peer=8 so the ~3e6-row initialization
+# storm (~310k rows/slot) plus slip traffic clears every slot arena —
+# dropped MUST stay 0 or the row is invalid. The smoke row is the same
+# engine at CI scale; check_regression re-runs it (subprocess) and
+# applies SHARDED_TOLERANCE to cycles/sec.
+SHARDED_ROWS = (
+    {"n": 4096, "cycles": 40, "reps": 2},
+    {"n": 1_000_000, "cycles": 4, "reps": 1, "pad_to": 1 << 20,
+     "work_budget": 1 << 16, "capacity_per_peer": 8},
+)
+SHARDED_DEVICES = 8
+SHARDED_SMOKE_MAX_N = 10_000  # check_regression re-runs rows up to this
+SHARDED_TOLERANCE = 0.5  # virtual-device subprocess timing is noisier
+
 
 def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
-                  seed: int = 0, reps: int = 5) -> dict:
+                  seed: int = 0, reps: int = 5, **engine_kw) -> dict:
     """Best-of-`reps` timing of the SAME cycle window (warmup..warmup+
     cycles of a fresh engine): the device state snapshots back to its
     initial value between reps, so every rep times identical work and
-    best-of samples out shared-host noise (2-3x swings observed)."""
+    best-of samples out shared-host noise (2-3x swings observed).
+    `engine_kw` flows to `make_engine` (the sharded rows pass `mesh=`
+    plus their table sizing)."""
     from repro.core.dht import Ring
     from repro.engine import make_engine
 
@@ -49,13 +76,13 @@ def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
     votes[rng.choice(n, int(n * 0.4), replace=False)] = 1
 
     t0 = time.time()
-    eng = make_engine(backend, ring, votes, seed=seed + 1)
+    eng = make_engine(backend, ring, votes, seed=seed + 1, **engine_kw)
     eng.step(warmup)
     eng.block_until_ready()
     t_setup = time.time() - t0
 
     snap = None
-    if backend == "jax":
+    if backend == "jax" and reps > 1:
         import jax
 
         snap = jax.tree.map(lambda x: x.copy(), eng._st)
@@ -68,7 +95,8 @@ def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
 
                 eng._st = jax.tree.map(lambda x: x.copy(), snap)
             else:
-                eng = make_engine(backend, ring, votes, seed=seed + 1)
+                eng = make_engine(backend, ring, votes, seed=seed + 1,
+                                  **engine_kw)
                 eng.step(warmup)
         t0 = time.time()
         eng.step(cycles)
@@ -94,6 +122,75 @@ def _load_previous(out_path: str):
             return json.load(f)
     except (OSError, ValueError):
         return None
+
+
+def bench_sharded_inprocess(n: int, cycles: int = 20, warmup: int = 3,
+                            seed: int = 0, reps: int = 1, **engine_kw) -> dict:
+    """Time the mesh-sharded engine over ALL devices this process sees —
+    `bench_backend`'s methodology with `mesh=` plus the sharded record
+    fields. Meant to run inside the `--sharded-child` subprocess
+    (virtual host devices); calling it in a one-device parent works but
+    shards nothing."""
+    import jax
+
+    devices = jax.device_count()
+    rec = bench_backend("jax", n, cycles=cycles, warmup=warmup, seed=seed,
+                        reps=reps, mesh=devices, **engine_kw)
+    rec.update(
+        backend="sharded", devices=devices,
+        engine_kw={k: int(v) for k, v in engine_kw.items()},
+    )
+    return rec
+
+
+def _spawn_sharded(row_cfg: dict, devices: int = SHARDED_DEVICES) -> dict:
+    """Run one sharded row in a subprocess with `devices` virtual host
+    devices and return its record."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    # append (not overwrite): inherited XLA flags must apply to the
+    # sharded rows too, or they are not comparable to the unsharded
+    # rows measured in the parent under those flags
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={devices}").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("PYTHONPATH", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.engine_bench",
+         "--sharded-child", json.dumps(row_cfg)],
+        capture_output=True, text=True, env=env, timeout=3600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    for line in r.stdout.splitlines():
+        if line.startswith("SHARDED_RESULT "):
+            return json.loads(line[len("SHARDED_RESULT "):])
+    raise RuntimeError(
+        f"sharded child produced no result:\n{r.stdout}\n{r.stderr}")
+
+
+def run_sharded(csv, rows=SHARDED_ROWS, devices: int = SHARDED_DEVICES,
+                out_path: str = OUT_PATH):
+    """Benchmark the sharded engine (one subprocess per row) and merge a
+    ``sharded`` section into the engine JSON — the rest of the file
+    (rows/baseline) is left untouched."""
+    recs = []
+    for cfg in rows:
+        rec = _spawn_sharded(cfg, devices=devices)
+        assert rec["dropped"] == 0, f"sharded run lost messages: {rec}"
+        recs.append(rec)
+        csv(f"engine_sharded,n={rec['n']},devices={rec['devices']},"
+            f"cycles/sec={rec['cycles_per_sec']},msgs={rec['messages']},"
+            f"dropped={rec['dropped']},deferred={rec['deferred']},"
+            f"setup_s={rec['setup_s']}")
+    merged = _load_previous(out_path) or {"bench": "engine_cycles_per_sec"}
+    merged["sharded"] = {"devices": devices, "rows": recs}
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1)
+    csv(f"engine_sharded_written,path={out_path}")
 
 
 def host_probe(reps: int = 5) -> float:
@@ -134,6 +231,11 @@ def run(csv, sizes=DEFAULT_SIZES, cycles: int = 20, out_path: str = OUT_PATH):
     }
     if baseline:
         results["baseline"] = baseline
+    if prev and "sharded" in prev:
+        # refreshed engine rows must not silently drop the committed
+        # sharded section (and with it the dropped=0 CI gate) —
+        # run_sharded merges symmetrically in the other direction
+        results["sharded"] = prev["sharded"]
     for n in sizes:
         row = {"n": n}
         for backend in ("numpy", "jax"):
@@ -163,10 +265,16 @@ def run(csv, sizes=DEFAULT_SIZES, cycles: int = 20, out_path: str = OUT_PATH):
 
 
 def check_regression(csv, out_path: str = OUT_PATH, max_n: int = 10_000,
-                     tolerance: float = REGRESSION_TOLERANCE) -> bool:
+                     tolerance: float = REGRESSION_TOLERANCE,
+                     sharded: bool = True) -> bool:
     """Fresh engine numbers vs the committed ``BENCH_engine.json``:
     returns False (and prints the offender) on a >`tolerance` cycles/sec
-    regression at any committed size <= `max_n`. CI hook:
+    regression at any committed size <= `max_n`. When the committed file
+    has a ``sharded`` section, its rows are additionally gated: every
+    committed row must show dropped=0, and the smoke-scale rows are
+    re-run in a virtual-device subprocess (functional: dropped stays 0;
+    perf: `SHARDED_TOLERANCE`, wider — subprocess timing on
+    oversubscribed virtual devices jitters more). CI hook:
     ``python -m benchmarks.run --check-regression``."""
     committed = _load_previous(out_path)
     if not committed or "rows" not in committed:
@@ -198,5 +306,48 @@ def check_regression(csv, out_path: str = OUT_PATH, max_n: int = 10_000,
                 f"ratio={ratio:.2f},verdict={verdict}")
             if ratio < 1.0 - tolerance:
                 ok = False
+    shard = committed.get("sharded")
+    if shard and sharded:
+        scale_devices = shard.get("devices", SHARDED_DEVICES)
+        for row in shard["rows"]:
+            if row["dropped"] != 0:
+                csv(f"check_regression,sharded_n={row['n']},"
+                    f"verdict=COMMITTED_ROW_INVALID,dropped={row['dropped']}")
+                ok = False
+            if row["n"] > SHARDED_SMOKE_MAX_N:
+                continue
+            cfg = {"n": row["n"], "cycles": row["cycles"], "reps": 2,
+                   **row.get("engine_kw", {})}
+            fresh = _spawn_sharded(cfg, devices=scale_devices)
+            expected = row["cycles_per_sec"] * scale
+            ratio = fresh["cycles_per_sec"] / max(expected, 1e-9)
+            bad = fresh["dropped"] != 0 or ratio < 1.0 - SHARDED_TOLERANCE
+            csv(f"check_regression,sharded_n={row['n']},"
+                f"devices={scale_devices},"
+                f"committed={row['cycles_per_sec']},"
+                f"expected_today={expected:.0f},"
+                f"fresh={fresh['cycles_per_sec']},"
+                f"dropped={fresh['dropped']},ratio={ratio:.2f},"
+                f"verdict={'REGRESSION' if bad else 'ok'}")
+            if bad:
+                ok = False
     csv(f"check_regression_done,pass={ok},tolerance={tolerance}")
     return ok
+
+
+if __name__ == "__main__":
+    # subprocess entry for the sharded rows: the parent sets XLA_FLAGS
+    # so THIS process sees the virtual host devices, runs one config and
+    # prints a single machine-readable result line
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded-child", required=True,
+                    help="JSON config for bench_sharded_inprocess")
+    _a = ap.parse_args()
+    if not os.environ.get("JAX_COMPILATION_CACHE_DIR"):
+        from benchmarks.run import enable_compilation_cache
+
+        enable_compilation_cache()
+    print("SHARDED_RESULT "
+          + json.dumps(bench_sharded_inprocess(**json.loads(_a.sharded_child))))

@@ -85,7 +85,8 @@ def main() -> None:
     if args.check_regression:
         section("check_regression")
         ok = engine_bench.check_regression(
-            csv, max_n=1_000 if args.smoke else 10_000)
+            csv, max_n=1_000 if args.smoke else 10_000,
+            sharded=not args.smoke)
         sys.exit(0 if ok else 1)
 
     b = args.backend
@@ -94,9 +95,18 @@ def main() -> None:
         os.makedirs(smoke_dir, exist_ok=True)
         sp = lambda name: os.path.join(smoke_dir, name)
         sections = [
+            ("tree_properties", lambda c: tree_properties.run(
+                c, **tree_properties.SMOKE, out_path=sp("BENCH_tree.json"))),
             ("kernel_bench", lambda c: kernel_bench.run(c)),
             ("engine", lambda c: engine_bench.run(
                 c, **engine_bench.SMOKE, out_path=sp("BENCH_engine.json"))),
+            # sharded engine at CI scale: one subprocess with 8 virtual
+            # host devices, merged into the smoke engine JSON (the same
+            # smoke row check_regression re-runs against the committed
+            # file — keep them one definition)
+            ("engine_sharded", lambda c: engine_bench.run_sharded(
+                c, rows=engine_bench.SHARDED_ROWS[:1],
+                out_path=sp("BENCH_engine.json"))),
             # numpy-only: the device engine's churn programs cost tens
             # of seconds of one-time jit — too slow for the smoke gate;
             # the full bench and the churn-marked tests cover the jax path
@@ -122,6 +132,7 @@ def main() -> None:
             ("kernel_bench", lambda c: kernel_bench.run(c)),
             ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
             ("engine", lambda c: engine_bench.run(c)),
+            ("engine_sharded", lambda c: engine_bench.run_sharded(c)),
             ("churn", lambda c: churn.run(c)),
             ("sweep", lambda c: sweep.run(c, backend=b)),
             ("sweep_mean", lambda c: sweep.run(c, backend=b, problem="mean")),

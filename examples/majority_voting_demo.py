@@ -12,6 +12,13 @@ sits above a threshold; ``l2`` thresholds the norm of a 2-D mean vector.
     PYTHONPATH=src python examples/majority_voting_demo.py --backend jax
     PYTHONPATH=src python examples/majority_voting_demo.py --problem mean
     PYTHONPATH=src python examples/majority_voting_demo.py --problem l2 --backend jax
+
+``--mesh K`` runs the mesh-sharded engine over K local devices
+(bit-identical trajectory — DESIGN.md §Sharding); on CPU, spawn virtual
+devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python examples/majority_voting_demo.py --backend jax --mesh 8
 """
 import argparse
 
@@ -41,7 +48,8 @@ def run_problem_demo(args):
     print(f"== {n} peers, problem: {prob!r} — {desc}, "
           f"backend: {args.backend} ==")
     t_lo = prob.global_output(prob.init_state(lo))
-    eng = make_engine(args.backend, ring, lo, seed=1, problem=prob)
+    eng = make_engine(args.backend, ring, lo, seed=1, problem=prob,
+                      **args.engine_kw)
     r = eng.run_until_converged(truth=t_lo)
     print(f"below-threshold data: decision {t_lo}, converged in "
           f"{r['cycles']} cycles, {r['messages']/n:.2f} messages/peer")
@@ -60,7 +68,13 @@ def main():
     ap.add_argument("--problem", default="majority",
                     choices=("majority", "mean", "l2"),
                     help="threshold decision rule (DESIGN.md §Problems)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the jax engine over this many local "
+                         "devices (0 = unsharded; DESIGN.md §Sharding)")
     args = ap.parse_args()
+    args.engine_kw = {"mesh": args.mesh} if args.mesh else {}
+    if args.mesh and args.backend != "jax":
+        ap.error("--mesh needs --backend jax")
 
     if args.problem != "majority":
         return run_problem_demo(args)
@@ -82,7 +96,8 @@ def main():
     votes = np.zeros(n, np.int64)
     votes[rng.choice(n, int(n * 0.35), replace=False)] = 1
     print("\n== local majority voting (Alg. 3) ==")
-    sim = make_engine(args.backend, ring, votes, seed=1)
+    sim = make_engine(args.backend, ring, votes, seed=1,
+                      **args.engine_kw)
     r = sim.run_until_converged(truth=0)
     print(f"converged in {r['cycles']} cycles, "
           f"{r['messages']/n:.2f} messages/peer")

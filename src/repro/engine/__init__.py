@@ -18,6 +18,10 @@ Since PR 3 the device engine executes *supersteps* (`step(K)` is one
 dispatch; `run_until_converged` checks convergence on device and syncs
 once per chunk), and ``batch=B`` vmaps the whole cycle over B stacked
 trials (`engine.batched`) — the paper's sweeps run as one program.
+Since PR 5 ``mesh=`` shards the superstep over a device mesh
+(`engine.sharded`): peer state partitioned by contiguous address
+blocks via shard_map, trajectory bit-identical to the single-device
+engine (DESIGN.md §Sharding).
 
     from repro.engine import make_engine
     eng = make_engine("jax", ring, votes, seed=0)
@@ -25,6 +29,8 @@ trials (`engine.batched`) — the paper's sweeps run as one program.
 
     sweep = make_engine("jax", ring, votes_Bn, seed=0, batch=B)
     results = sweep.run_until_converged(truths)   # B EngineResults
+
+    big = make_engine("jax", ring_1e6, votes_1e6, mesh=8)  # 8-way sharded
 """
 from __future__ import annotations
 
@@ -38,7 +44,7 @@ BACKENDS = ("numpy", "jax")
 
 
 def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
-                batch: int = 0, **kwargs):
+                batch: int = 0, mesh=None, **kwargs):
     """Construct a threshold-monitoring engine over `ring` with initial
     per-peer data `votes`.
 
@@ -54,10 +60,28 @@ def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
     are seed+i) or a (B,) array, and the result is a batched engine
     (`engine.batched`) running B independent trials — vmapped on the
     device backend, serial reference engines on numpy.
+
+    With ``mesh=`` (jax backend only: a one-axis `jax.sharding.Mesh`, a
+    local device count, or ``True`` for all local devices) the engine is
+    the mesh-sharded superstep engine (`engine.sharded`): peer state
+    partitioned by contiguous address-space row blocks via shard_map,
+    cross-shard traffic through a window-sized per-cycle boundary
+    exchange — trajectory bit-identical to the single-device engine
+    (DESIGN.md §Sharding).
     """
     if backend not in BACKENDS:
         raise ValueError(
             f"unknown engine backend {backend!r}; want one of {BACKENDS}")
+    if mesh is not None:
+        if backend != "jax":
+            raise ValueError("mesh= sharding needs backend='jax'")
+        if batch:
+            raise NotImplementedError(
+                "batch= and mesh= do not compose yet (vmapped trials of "
+                "the sharded superstep are a later PR)")
+        from .sharded import ShardedJaxEngine
+
+        return ShardedJaxEngine(ring, votes, seed=seed, mesh=mesh, **kwargs)
     if batch:
         if backend == "numpy":
             from .batched import BatchedNumpyEngine

@@ -61,7 +61,10 @@ def run_convergence_loop(
     convergence check is only recomputed when an event could have moved
     an output); the jax backend probes a whole device chunk per call —
     the check runs on device every cycle and the host syncs once per
-    chunk instead of twice per cycle.
+    chunk instead of twice per cycle. The mesh-sharded engine
+    (`engine.sharded`) inherits the jax probe unchanged: the chunk is
+    one shard_map program and the per-cycle check reduces across shards
+    with a scalar psum, so this loop stays backend- and mesh-agnostic.
     """
     remaining = int(max_cycles)
     done = False

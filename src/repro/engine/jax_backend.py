@@ -42,6 +42,12 @@ All RNG material (delay permutations, hash salts) lives inside
 `engine.batched.BatchedJaxEngine` runs B independent trials as one
 program on exactly this cycle body.
 
+Every cycle-body access to the O(n) peer state (x / inbox / out) flows
+through the `PeerPlane` layer below; `engine.sharded` swaps in
+collective implementations and runs this same cycle body under
+`shard_map` with the peer plane block-sharded over a device mesh —
+trajectory bit-identical by construction (DESIGN.md §Sharding).
+
 Dynamic membership (Alg. 2, DESIGN.md §Churn): the ring lives *inside*
 `DeviceState` as padded sorted-prefix tables — rows [0, n_live) hold the
 occupied addresses ascending, rows above are 0xFFFFFFFF sentinels (the
@@ -231,6 +237,97 @@ class DeviceState(NamedTuple):
     deferred: jnp.ndarray       # () int32 deliveries pushed past the budget
 
 
+class PeerPlane:
+    """Access layer for the peer plane — the O(n) per-peer state leaves
+    (`x`, `inbox`, `out`) plus the occupancy/convergence reductions over
+    them. Every read or write the cycle body performs against those
+    leaves goes through this object, and NOTHING else in the cycle does
+    (the wheel, the ring tables and the counters are control plane).
+
+    This is the single-device implementation: plain gathers/scatters,
+    global row indices ARE array indices. `repro.engine.sharded`
+    substitutes `ShardedPlane`, where each device holds one contiguous
+    row block and the same methods become masked local ops plus a
+    window-sized psum/pmax boundary exchange — the cycle body itself is
+    shared verbatim, which is what makes the sharded engine trajectory
+    bit-identical to this one (DESIGN.md §Sharding).
+
+    Index contract: `idx` arguments are GLOBAL row indices (peer rows
+    for `*_peer`, flat peer*NDIR+dir links for `*_link`); scatter
+    sentinels at `pad` / `pad * NDIR` drop. Gather `idx` must be valid
+    rows — callers mask results instead (matching the historical code).
+    """
+
+    def __init__(self, eng: "JaxEngine"):
+        self.eng = eng
+
+    # -- gathers (window-sized replicated idx -> replicated values) ---------
+    def take_peer(self, arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        return arr[idx]
+
+    def take_link(self, arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        return arr[idx]
+
+    # -- scatters (window-sized rows into the plane; sentinel drops) --------
+    def put_peer(self, arr: jnp.ndarray, idx: jnp.ndarray,
+                 val: jnp.ndarray) -> jnp.ndarray:
+        return arr.at[idx].set(val, mode="drop")
+
+    def put_link(self, arr: jnp.ndarray, idx: jnp.ndarray,
+                 val: jnp.ndarray) -> jnp.ndarray:
+        return arr.at[idx].set(val, mode="drop")
+
+    # -- per-link scatter-max dedup plane (accept winner election) ----------
+    def link_max(self, idx: jnp.ndarray, val: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+        """Dense per-link max of `val` over the masked window rows
+        (fill -1). The returned handle is only ever read back through
+        `link_read` / `link_read3` / `peer_dirmax` — its layout is the
+        plane's business (the sharded plane returns a local block)."""
+        nl = self.eng.pad * NDIR
+        return jnp.full(nl, -1, _I32).at[jnp.where(mask, idx, nl)].max(
+            jnp.where(mask, val, -1), mode="drop")
+
+    def link_floor(self) -> jnp.ndarray:
+        """The all-(-1) dedup plane (the no-alerts branch)."""
+        return jnp.full(self.eng.pad * NDIR, -1, _I32)
+
+    def link_read(self, dense: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        return dense[idx]
+
+    def link_read3(self, dense: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+        """All three link cells of peer `rows`: (m, NDIR)."""
+        return dense.reshape(-1, NDIR)[rows]
+
+    def peer_dirmax(self, dense: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+        """Per-peer max over the NDIR link cells, read at `rows`."""
+        return dense.reshape(-1, NDIR).max(1)[rows]
+
+    # -- occupancy / reductions ---------------------------------------------
+    def occ(self, st: "DeviceState") -> jnp.ndarray:
+        """Occupancy mask over the plane's local rows (global row index
+        < n_live — rows here are global)."""
+        return jnp.arange(st.x.shape[0]) < st.n_live
+
+    def all_true(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Scalar AND over a per-row predicate (replicated result)."""
+        return v.all()
+
+    # -- event path (full-width reacts) -------------------------------------
+    def local_tables(self, st: "DeviceState"):
+        """The (pos, addrs, prev) rows matching the plane's local x
+        rows (identity here; the sharded plane slices its block out of
+        the replicated tables)."""
+        return st.pos, st.addrs, st.prev
+
+    def gather_events(self, *arrs: jnp.ndarray):
+        """Assemble per-plane-row event rows into the GLOBAL row order
+        the wheel append ranks over (identity here; the sharded plane
+        all_gathers the shard blocks, which concatenate in block =
+        global order)."""
+        return arrs
+
+
 class JaxEngine:
     """Device-backed `MajorityEngine` (see `repro.engine.base`)."""
 
@@ -274,6 +371,7 @@ class JaxEngine:
         if self.pad < self.n:
             raise ValueError(f"pad_to={pad_to} below ring size {self.n}")
         self._size_tables()
+        self._plane = self._make_plane()
         self._make_programs()
 
         if _defer_state:  # engine.batched builds (stacked) state itself
@@ -311,6 +409,9 @@ class JaxEngine:
         # few percent of the window is still descending (measured); the
         # while_loop tail runs at this width instead of the window's
         self.narrow = max(64, self.work_budget // 8)
+
+    def _make_plane(self) -> PeerPlane:
+        return PeerPlane(self)
 
     def _make_programs(self):
         self._react = jax.jit(self._react_impl, donate_argnums=(0,))
@@ -434,11 +535,14 @@ class JaxEngine:
 
     def _outputs_match(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
         """Threshold convergence predicate, on device (the superstep's
-        per-cycle early-exit check — output column only, no rule set)."""
+        per-cycle early-exit check — output column only, no rule set).
+        Works on the plane's local rows — under the sharded plane this is
+        a per-shard scan plus one scalar psum."""
         pd = st.x.shape[0]
         out = knowledge_outputs(self.problem, st.inbox, st.x, pd).astype(_I32)
-        occ = jnp.arange(pd) < st.n_live
-        return (self.problem.converged(jnp, out, truth) | ~occ).all()
+        occ = self._plane.occ(st)
+        return self._plane.all_true(
+            self.problem.converged(jnp, out, truth) | ~occ)
 
     # -- event-path enqueue (scatter append; any width, per-row hash delay) --
 
@@ -487,23 +591,31 @@ class JaxEngine:
     def _react_impl(self, st: DeviceState, touched: jnp.ndarray) -> DeviceState:
         """Threshold test() + Send(v) for all `touched` peers (full-width
         event path: initialization and data changes). Elementwise
-        full-width X_out/seq updates, one event append for the sends."""
-        pd, d = st.x.shape[0], self.d
+        full-width X_out/seq updates over the plane's local rows, then
+        one event append for the sends — assembled into global row
+        order through `plane.gather_events` (identity on one device, an
+        all_gather on the sharded plane)."""
+        pd, d = st.x.shape[0], self.d  # pd: plane-local rows
         viol, pay = self._test_phase(st)  # (pd,3), (pd,3,P)
         eff = viol & touched[:, None]
         seq = st.out[:, NDIR * self.pw] + eff.any(1).astype(_I32)
         new_pay = jnp.where(eff[..., None], pay, self._out_pay(st.out))
         st = st._replace(out=self._pack_out(new_pay, seq))
+        pos_l, addrs_l, prev_l = self._plane.local_tables(st)
         dirs = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (pd, NDIR))
         bc = lambda a: jnp.broadcast_to(a[:, None], (pd, NDIR))
         valid, origin, dest, edge, has_edge = P.send_fields(
-            jnp, bc(st.pos), dirs, bc(st.addrs), bc(st.prev), d
+            jnp, bc(pos_l), dirs, bc(addrs_l), bc(prev_l), d
         )
         cand = (eff & valid).reshape(-1)
+        (cand, origin, dest, edge, has_edge, pay_g, seq_g) = \
+            self._plane.gather_events(
+                cand, origin.reshape(-1), dest.reshape(-1),
+                edge.reshape(-1), has_edge.reshape(-1),
+                pay.reshape(-1, self.pw), bc(seq).reshape(-1))
         return self._enqueue_events(
-            st, cand, origin.reshape(-1), dest.reshape(-1), edge.reshape(-1),
-            has_edge.reshape(-1), pay.reshape(-1, self.pw),
-            bc(seq).reshape(-1), alert=False,
+            st, cand, origin, dest, edge, has_edge, pay_g, seq_g,
+            alert=False,
         )
 
     # -- the cycle (superstep body) ------------------------------------------
@@ -511,7 +623,8 @@ class JaxEngine:
     def _cycle_impl(self, st: DeviceState) -> DeviceState:
         """One simulation cycle: drain the due wheel slot, route, accept,
         react, append forwards/sends to their due slots."""
-        pd, d = st.x.shape[0], self.d
+        pd, d = self.pad, self.d  # GLOBAL pad: sentinel/index space (the
+        # plane's x rows may be a shard-local block of it)
         B, W, cap = self.work_budget, self.slot_width, self.slot_cap
         WW = ALERT_W + B  # drain-window width (alerts always ride ahead)
 
@@ -616,53 +729,54 @@ class JaxEngine:
         flat = recv * NDIR + vdir
         acc_d = acc & ~is_alert
         acc_a = acc & is_alert
-        sent = pd * NDIR  # scatter sentinel
-        best = jnp.full(pd * NDIR, -1, _I32).at[
-            jnp.where(acc_d, flat, sent)
-        ].max(jnp.where(acc_d, wi, -1), mode="drop")
+        pl = self._plane  # all peer-plane access below goes through it
+        sent = pd * NDIR  # scatter sentinel (owned by no plane row/shard)
+        best = pl.link_max(flat, wi, acc_d)
         abest = jax.lax.cond(
             has_alerts,
-            lambda: jnp.full(pd * NDIR, -1, _I32).at[
-                jnp.where(acc_a, flat, sent)
-            ].max(jnp.where(acc_a, wi, -1), mode="drop"),
-            lambda: jnp.full(pd * NDIR, -1, _I32),
+            lambda: pl.link_max(flat, wi, acc_a),
+            lambda: pl.link_floor(),
         )
-        winner = acc_d & (wi == best[flat])
+        best_w = pl.link_read(best, flat)
+        abest_w = pl.link_read(abest, flat)
+        winner = acc_d & (wi == best_w)
         loser = acc_d & ~winner
-        floor = jnp.where(abest[flat] >= 0, 0, st.inbox[flat, self.pw])
+        floor = jnp.where(abest_w >= 0, 0,
+                          pl.take_link(st.inbox, flat)[:, self.pw])
         fresh = winner & (w_seq > floor)
         # one width-WW scatter: a window row is either a fresh data write
         # or an alert zeroing a link with no data winner (disjoint rows
         # AND disjoint links, so no duplicate indices)
-        alert_write = acc_a & (best[flat] < 0)
+        alert_write = acc_a & (best_w < 0)
         data_idx = jnp.where(fresh | alert_write, flat, sent)
         data_val = jnp.where(
             alert_write[:, None], 0,
             jnp.concatenate([w_pay.astype(_I32), w_seq[:, None]], axis=1),
         )
-        inbox = st.inbox.at[data_idx].set(data_val, mode="drop")
+        inbox = pl.put_link(st.inbox, data_idx, data_val)
         st = st._replace(inbox=inbox)
 
         # ---- react: gather-based test() + Send on the touched peers
         # (one representative window row per peer; work ∝ window, not pad)
-        rep = jnp.maximum(best, abest).reshape(pd, NDIR).max(1)  # (pd,)
-        is_rep = acc & (wi == rep[recv])
+        rep_w = pl.peer_dirmax(jnp.maximum(best, abest), recv)  # (WW,)
+        is_rep = acc & (wi == rep_w)
         reps_w, _ = self._compact(is_rep, WW)
         rvalid = reps_w < WW
         rp = jnp.where(rvalid, recv[jnp.where(rvalid, reps_w, 0)], 0)
         link = rp[:, None] * NDIR + jnp.arange(NDIR, dtype=_I32)[None, :]
-        rin = inbox[link]                      # (WW, 3, P+1)
-        ro = st.out[rp]                        # (WW, 3P+1)
+        rin = pl.take_link(inbox, link)        # (WW, 3, P+1)
+        ro = pl.take_peer(st.out, rp)          # (WW, 3P+1)
         viol, _, pay = P.threshold_rules(
-            self.problem, jnp, rin[..., :self.pw], self._out_pay(ro), st.x[rp]
+            self.problem, jnp, rin[..., :self.pw], self._out_pay(ro),
+            pl.take_peer(st.x, rp)
         )
-        force = (abest.reshape(pd, NDIR)[rp] >= 0) & has_alerts
+        force = (pl.link_read3(abest, rp) >= 0) & has_alerts
         eff = (viol | force) & rvalid[:, None]
         seq2 = ro[:, NDIR * self.pw] + eff.any(1).astype(_I32)
         ro2 = self._pack_out(
             jnp.where(eff[..., None], pay, self._out_pay(ro)), seq2)
-        st = st._replace(out=st.out.at[jnp.where(rvalid, rp, pd)].set(
-            ro2, mode="drop"))
+        st = st._replace(out=pl.put_peer(
+            st.out, jnp.where(rvalid, rp, pd), ro2))
 
         dirs3 = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (WW, NDIR))
         bc = lambda a: jnp.broadcast_to(a[:, None], (WW, NDIR))

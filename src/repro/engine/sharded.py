@@ -1,0 +1,266 @@
+"""Mesh-sharded superstep engine: the cycle body of `engine.jax_backend`
+partitioned over a JAX device mesh with `shard_map`.
+
+The paper's protocol needs no global context — every peer talks only to
+its parent and two descendants — which is exactly what makes the
+simulation shardable. `ShardedJaxEngine` partitions the **peer plane**
+(the O(n) per-peer state: own data `x`, the per-link `inbox`, the
+`out` rows) by contiguous address-space row blocks over a one-axis
+device mesh; the **control plane** (the delivery wheel, the sorted
+address/position tables, the counters and RNG material) is replicated,
+so the wheel arithmetic — due-scan, routing, budget/slip bookkeeping,
+delay-permutation appends — is the *same deterministic computation on
+every device*, byte for byte the single-device cycle body.
+
+What crosses shards each cycle is window-sized, never O(n): the cycle's
+reads and writes of the peer plane all flow through the `PeerPlane`
+access layer (`jax_backend.PeerPlane`), and `ShardedPlane` implements
+them as a **boundary exchange** —
+
+  * gathers (`take_peer` / `take_link` / `link_read*`): each device
+    gathers the window rows it owns, masks the rest to the op identity
+    (0 for payload sums, -1 for the dedup maxima) and one `psum` /
+    `pmax` over the mesh axis makes the result replicated;
+  * scatters (`put_peer` / `put_link`, the dedup `link_max`): global
+    row indices translate to the local block; rows owned elsewhere
+    drop. Disjoint-index scatters stay disjoint per shard, so no
+    cross-shard write ever conflicts;
+  * the convergence predicate reduces each shard's occupancy-masked
+    output scan with one scalar `psum`.
+
+Because every exchanged value is an exact integer (or a -1-filled max),
+the sharded trajectory is **bit-identical** to the single-device jax
+engine — same cycles, same message counts, same outputs, for every
+problem and through churn — and therefore invariant in the mesh size
+(tests/test_sharded.py pins 1/2/4/8 devices against each other and
+against the unsharded engine; tests/_diff_harness.py replays fuzzed
+event schedules across numpy/jax/sharded).
+
+Event paths (initialization / `set_votes` reacts, Alg. 2 join/leave)
+are occasional and O(n): they reuse the *inherited* global jitted
+programs unchanged — XLA's SPMD partitioner splits them across the same
+mesh (same jaxpr, same integers), with output shardings pinned so the
+state never migrates. Only the per-cycle hot path needs the hand-written
+exchange.
+
+    from repro.engine import make_engine
+    eng = make_engine("jax", ring, votes, mesh=8)   # 8-way sharded
+    res = eng.run_until_converged(truth=1)
+
+`mesh=` accepts a one-axis `jax.sharding.Mesh`, a device count, or
+``True`` (all local devices); `launch.mesh.make_engine_mesh` builds the
+canonical ("shard",) mesh. Constraints: `pad % n_devices == 0` (pad is
+a power of two, so any power-of-two mesh divides it) and no `batch=`
+(vmapped trials and mesh sharding compose in a later PR). See DESIGN.md
+§Sharding for the partition layout and the boundary-exchange
+invariants.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.core.dht import Ring
+from repro.core.tree_collectives import shard_map
+from repro.engine.jax_backend import (DeviceState, JaxEngine, NDIR, PeerPlane,
+                                      _I32)
+
+AXIS = "shard"  # the canonical engine mesh axis name
+
+
+def as_engine_mesh(mesh: Union[Mesh, int, bool, None]) -> Mesh:
+    """Resolve the `mesh=` engine kwarg to a one-axis Mesh: an existing
+    one-axis Mesh passes through; an int takes the first that many local
+    devices (`launch.mesh.make_engine_mesh`); True/None take all of
+    them."""
+    if isinstance(mesh, Mesh):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"engine mesh must have ONE axis, got {mesh.axis_names}")
+        return mesh
+    from repro.launch.mesh import make_engine_mesh
+
+    return make_engine_mesh(0 if (mesh is None or mesh is True) else int(mesh))
+
+
+class ShardedPlane(PeerPlane):
+    """Collective `PeerPlane`: block-sharded rows + window-sized psum/
+    pmax boundary exchange (module docstring). Instantiated inside the
+    shard_map trace — `axis_index` is only meaningful there."""
+
+    def __init__(self, eng: "ShardedJaxEngine", axis: str):
+        super().__init__(eng)
+        self.axis = axis
+
+    def _loc(self, nloc: int, idx: jnp.ndarray):
+        """Global row index -> (clamped local index, ownership mask)."""
+        lo = jax.lax.axis_index(self.axis) * nloc
+        loc = idx.astype(_I32) - lo
+        ok = (loc >= 0) & (loc < nloc)
+        return jnp.where(ok, loc, 0), ok
+
+    def _take(self, arr, idx):
+        loc, ok = self._loc(arr.shape[0], idx)
+        v = arr[loc]
+        okb = ok.reshape(ok.shape + (1,) * (v.ndim - ok.ndim))
+        return jax.lax.psum(jnp.where(okb, v, 0), self.axis)
+
+    take_peer = _take
+    take_link = _take
+
+    def _put(self, arr, idx, val):
+        nloc = arr.shape[0]
+        lo = jax.lax.axis_index(self.axis) * nloc
+        loc = idx.astype(_I32) - lo
+        ok = (loc >= 0) & (loc < nloc)
+        return arr.at[jnp.where(ok, loc, nloc)].set(val, mode="drop")
+
+    put_peer = _put
+    put_link = _put
+
+    @property
+    def _nlinks_local(self) -> int:
+        return self.eng.pad * NDIR // self.eng.n_shards
+
+    def link_max(self, idx, val, mask):
+        nloc = self._nlinks_local
+        loc, owned = self._loc(nloc, idx)
+        ok = mask & owned
+        return jnp.full(nloc, -1, _I32).at[jnp.where(ok, loc, nloc)].max(
+            jnp.where(ok, val, -1), mode="drop")
+
+    def link_floor(self):
+        return jnp.full(self._nlinks_local, -1, _I32)
+
+    def link_read(self, dense, idx):
+        loc, ok = self._loc(dense.shape[0], idx)
+        return jax.lax.pmax(jnp.where(ok, dense[loc], -1), self.axis)
+
+    def link_read3(self, dense, rows):
+        per = dense.reshape(-1, NDIR)
+        loc, ok = self._loc(per.shape[0], rows)
+        return jax.lax.pmax(jnp.where(ok[:, None], per[loc], -1), self.axis)
+
+    def peer_dirmax(self, dense, rows):
+        per = dense.reshape(-1, NDIR).max(1)
+        loc, ok = self._loc(per.shape[0], rows)
+        return jax.lax.pmax(jnp.where(ok, per[loc], -1), self.axis)
+
+    def occ(self, st):
+        pd_l = st.x.shape[0]
+        lo = jax.lax.axis_index(self.axis) * pd_l
+        return (lo + jnp.arange(pd_l)) < st.n_live
+
+    def all_true(self, v):
+        miss = (~v).any().astype(_I32)
+        return jax.lax.psum(miss, self.axis) == 0
+
+    def local_tables(self, st):
+        """This shard's block of the replicated ring tables — the rows
+        matching its local x/out/inbox blocks."""
+        pd_l = st.x.shape[0]
+        lo = jax.lax.axis_index(self.axis) * pd_l
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, lo, pd_l)
+        return sl(st.pos), sl(st.addrs), sl(st.prev)
+
+    def gather_events(self, *arrs):
+        """All_gather the shard blocks of an event (tiled): contiguous
+        block sharding makes the concatenation exactly the global row
+        order, so the wheel append ranks — and therefore the delay hash
+        and slot offsets — are bit-identical to the single-device
+        enqueue."""
+        return tuple(
+            jax.lax.all_gather(a, self.axis, axis=0, tiled=True)
+            for a in arrs)
+
+
+class ShardedJaxEngine(JaxEngine):
+    """`JaxEngine` over a device mesh (module docstring). Same
+    `MajorityEngine` contract, same trajectories, bit for bit."""
+
+    backend = "jax"
+    sharded = True
+
+    def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
+                 mesh: Union[Mesh, int, bool, None] = None, **kwargs):
+        mesh = as_engine_mesh(mesh)
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.n_shards = int(mesh.devices.size)
+        if self.n_shards & (self.n_shards - 1):
+            raise ValueError(
+                f"engine mesh size must be a power of two, got "
+                f"{self.n_shards}")
+        super().__init__(ring, votes, seed=seed, **kwargs)
+
+    # -- program construction -----------------------------------------------
+
+    def _state_specs(self) -> DeviceState:
+        """PartitionSpec per DeviceState leaf: peer plane sharded by row
+        blocks, control plane replicated."""
+        S, R = PS(self.axis), PS()
+        return DeviceState(
+            x=S, inbox=S, out=S,
+            addrs=R, prev=R, pos=R, n_live=R,
+            wheel=R, wcnt=R, awheel=R, acnt=R,
+            perms=R, salt_enq=R,
+            t=R, messages_sent=R, dropped=R, deferred=R,
+        )
+
+    def _with_plane(self, fn):
+        """Trace `fn` with the collective plane installed (shard_map
+        bodies trace inside jit, so the swap must wrap the traced call,
+        not the program construction)."""
+        def inner(st, *args):
+            prev = self._plane
+            self._plane = ShardedPlane(self, self.axis)
+            try:
+                return fn(st, *args)
+            finally:
+                self._plane = prev
+        return inner
+
+    def _make_programs(self):
+        assert self.pad % self.n_shards == 0, (self.pad, self.n_shards)
+        specs = self._state_specs()
+        self._shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, PS))
+        R = PS()
+        sm = lambda fn, in_extra, out: shard_map(
+            self._with_plane(fn), mesh=self.mesh,
+            in_specs=(specs, *in_extra), out_specs=out, check_vma=False)
+        # the hot path: superstep + convergence chunk under shard_map
+        self._steps = jax.jit(sm(self._steps_impl, (R,), specs),
+                              donate_argnums=(0,))
+        self._chunk_run = jax.jit(
+            sm(self._chunk_impl, (R, R, R, R), (specs, R, R, R)),
+            donate_argnums=(0,))
+        self._conv = jax.jit(sm(self._outputs_match, (R,), R))
+        # full-width event reacts (init storm, set_votes): shard_map too
+        # — per-shard elementwise test + an all_gather boundary into the
+        # replicated wheel append (GSPMD partitioning of the O(n) event
+        # scatter was observed to compile pathologically at pad=2^20)
+        self._react = jax.jit(sm(self._react_impl, (PS(self.axis),), specs),
+                              donate_argnums=(0,))
+        # churn paths: inherited global programs, SPMD-partitioned by
+        # XLA (small-n fuzz-tested; output shardings pinned so the
+        # state never migrates)
+        self._join = jax.jit(self._join_impl, donate_argnums=(0,),
+                             out_shardings=self._shardings)
+        self._leave = jax.jit(self._leave_impl, donate_argnums=(0,),
+                              out_shardings=self._shardings)
+
+    def _initial_state(self, ring: Ring, votes: np.ndarray,
+                       seed: int) -> DeviceState:
+        st = super()._initial_state(ring, votes, seed)
+        return jax.device_put(st, self._shardings)
+
+    def _grow(self, need_n: int) -> None:
+        super()._grow(need_n)  # re-sizes, re-builds programs + shardings
+        self._st = jax.device_put(self._st, self._shardings)

@@ -22,6 +22,23 @@ def make_mesh(dp: int, tp: int, pods: int = 1):
     return jax.make_mesh((dp, tp), ("data", "model"))
 
 
+def make_engine_mesh(n_shards: int = 0):
+    """One-axis ("shard",) mesh for the sharded superstep engine
+    (`repro.engine.sharded`): the first `n_shards` local devices (all of
+    them when 0). Power-of-two sizes only — the engine's padded tables
+    split into contiguous power-of-two row blocks."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    k = int(n_shards) or len(devs)
+    if not 1 <= k <= len(devs):
+        raise ValueError(f"need 1..{len(devs)} local devices, got {k}")
+    if k & (k - 1):
+        raise ValueError(f"engine mesh size must be a power of two, got {k}")
+    return Mesh(np.array(devs[:k]), ("shard",))
+
+
 # TPU v5e hardware model used by the roofline analysis (per chip)
 HW = dict(
     peak_bf16_flops=197e12,  # FLOP/s

@@ -1,0 +1,303 @@
+"""Differential-fuzz harness: seeded random event schedules replayed on
+every engine, with bit-parity assertions.
+
+One seed deterministically generates a *schedule* — an initial ring +
+data plane plus a sequence of events (`step`, `set_votes`, `join`,
+`leave`, mid-run convergence waits) for one `ThresholdProblem` — and
+`replay` drives any engine through it, finishing with a
+run-to-quiescence against the problem's ground-truth decision. Parity
+levels:
+
+  * `assert_state_parity` (numpy vs jax): identical final outputs, data
+    planes, membership and dropped counts, both converged. The backends
+    draw message delays from different RNGs, so cycle/message counts
+    legitimately differ — but quantization, membership bookkeeping and
+    the decision itself may not.
+  * `assert_trajectory_parity` (jax vs sharded, any mesh size): all of
+    the above PLUS identical cycle and message counts — the sharded
+    engine must be bit-identical in trajectory (DESIGN.md §Sharding).
+
+Consumed three ways: tests/test_sharded.py runs the fixed CI grid
+in-process (numpy vs jax) and via subprocess on 8 virtual devices
+(jax vs sharded at mesh sizes 1/2/4/8); hypothesis (through
+tests/_hypothesis_shim) drives extra random seeds when installed; and
+CI's sharded-engine job runs this file as a script:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python tests/_diff_harness.py --engines numpy jax \
+        sharded --mesh-sizes 1 2 4 8 --seeds 101 202
+
+Schedules converge by construction (data stays away from razor-thin
+threshold margins); a non-converging replay is a harness bug, not a
+tolerated outcome — `replay` asserts it.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+MAX_CYCLES = 40_000
+
+# the fixed seeded grid CI replays (problem coverage incl. churn; l2
+# churn rides the slow tier — its device churn programs jit slowly)
+CI_GRID: Tuple[Tuple[str, int], ...] = (
+    ("majority", 101),
+    ("mean", 202),
+    ("l2", 303),
+)
+SLOW_GRID: Tuple[Tuple[str, int], ...] = (
+    ("majority", 111),
+    ("mean", 212),
+    ("l2", 313),
+    ("majority", 121),
+)
+
+
+def make_problem(name: str):
+    from repro.engine import get_problem
+
+    if name == "mean":
+        return get_problem("mean", tau=0.0)
+    if name == "l2":
+        return get_problem("l2", tau=1.0, dim=2)
+    return get_problem(name)
+
+
+def make_schedule(problem_name: str, seed: int, churn: bool = True) -> Dict:
+    """Deterministic random schedule for (problem, seed).
+
+    Returns {"problem", "seed", "n", "ring_seed", "eng_seed", "data",
+    "events"} where events is a list of ("step", k) / ("set", idx, vals)
+    / ("join", addr, val) / ("leave", idx) / ("settle",) tuples. Join
+    addresses are drawn from the free space and never collide; leave
+    indices are valid at replay time (the generator tracks membership).
+    """
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(48, 97))
+    d = 32
+
+    def raw(k):
+        if problem_name == "majority":
+            return rng.integers(0, 2, size=k).astype(np.int64)
+        if problem_name == "mean":
+            # keep the mean comfortably off tau=0 (sign drawn per seed)
+            off = float(rng.choice([-0.6, 0.6]))
+            return rng.normal(off, 0.8, size=k)
+        # l2: cluster either well inside or well outside the tau=1 ball
+        c = rng.normal(size=2)
+        c *= float(rng.choice([0.2, 1.8])) / max(np.linalg.norm(c), 1e-9)
+        return rng.normal(c, 0.25, size=(k, 2))
+
+    data = raw(n)
+    from repro.core.dht import Ring
+
+    ring_seed = int(rng.integers(0, 2**31))
+    ring = Ring.random(n, d, seed=ring_seed)
+    occupied = set(int(a) for a in ring.addrs)
+    n_cur = n
+    events: List[Tuple] = []
+    n_events = int(rng.integers(3, 7))
+    kinds = ["step", "set"] + (["join", "leave"] if churn else []) + ["settle"]
+    for _ in range(n_events):
+        kind = str(rng.choice(kinds))
+        if kind == "step":
+            events.append(("step", int(rng.integers(1, 41))))
+        elif kind == "set":
+            k = int(rng.integers(1, max(2, n_cur // 4)))
+            idx = np.sort(rng.choice(n_cur, size=k, replace=False))
+            events.append(("set", idx.astype(np.int64), raw(k)))
+        elif kind == "join":
+            while True:
+                addr = int(rng.integers(1, 1 << 16))
+                if addr not in occupied:
+                    break
+            occupied.add(addr)
+            events.append(("join", addr, raw(1)[0]))
+            n_cur += 1
+        elif kind == "leave":
+            if n_cur <= 8:
+                continue
+            events.append(("leave", int(rng.integers(0, n_cur))))
+            n_cur -= 1
+        else:
+            events.append(("settle",))
+    return {
+        "problem": problem_name, "seed": seed, "n": n, "d": d,
+        "ring_seed": ring_seed, "eng_seed": seed + 7, "data": data,
+        "events": events,
+    }
+
+
+def replay(schedule: Dict, factory: Callable) -> Dict:
+    """Drive one engine through `schedule`; `factory(ring, data,
+    problem, seed)` builds it. Returns the comparable end state."""
+    from repro.core.dht import Ring
+
+    problem = make_problem(schedule["problem"])
+    ring = Ring.random(schedule["n"], schedule["d"],
+                       seed=schedule["ring_seed"])
+    eng = factory(ring, schedule["data"], problem, schedule["eng_seed"])
+
+    def truth() -> int:
+        return problem.global_output(eng.data())
+
+    for ev in schedule["events"]:
+        if ev[0] == "step":
+            eng.step(ev[1])
+        elif ev[0] == "set":
+            eng.set_votes(ev[1], ev[2])
+        elif ev[0] == "join":
+            eng.join(ev[1], vote=ev[2])
+        elif ev[0] == "leave":
+            eng.leave(ev[1])
+        else:  # settle: quiesce mid-schedule
+            res = eng.run_until_converged(truth(), max_cycles=MAX_CYCLES)
+            assert res["converged"] == 1.0, (schedule["problem"],
+                                             schedule["seed"], ev, res)
+    res = eng.run_until_converged(truth(), max_cycles=MAX_CYCLES)
+    assert res["converged"] == 1.0, (schedule["problem"], schedule["seed"],
+                                     res)
+    return {
+        "backend": getattr(eng, "backend", "?"),
+        "sharded": bool(getattr(eng, "sharded", False)),
+        "n": int(eng.n if hasattr(eng, "n") else eng.ring.n),
+        "outputs": np.asarray(eng.outputs(), np.int64),
+        "data": np.asarray(eng.data(), np.int64),
+        "dropped": int(np.asarray(eng.dropped)),
+        "cycles": int(res["cycles"]),
+        "messages": int(res["messages"]),
+        "truth": truth(),
+    }
+
+
+# -- engine factories --------------------------------------------------------
+
+def numpy_factory(ring, data, problem, seed):
+    from repro.engine import make_engine
+
+    return make_engine("numpy", ring, data, seed=seed, problem=problem)
+
+
+def jax_factory(ring, data, problem, seed):
+    from repro.engine import make_engine
+
+    return make_engine("jax", ring, data, seed=seed, problem=problem)
+
+
+def sharded_factory(mesh):
+    def f(ring, data, problem, seed):
+        from repro.engine import make_engine
+
+        return make_engine("jax", ring, data, seed=seed, problem=problem,
+                           mesh=mesh)
+    return f
+
+
+# -- parity assertions -------------------------------------------------------
+
+def assert_state_parity(a: Dict, b: Dict, ctx=""):
+    """Bit-parity on everything RNG-independent: outputs, data plane,
+    membership, dropped counts, the decision itself."""
+    assert a["n"] == b["n"], (ctx, a["n"], b["n"])
+    assert a["truth"] == b["truth"], (ctx, a["truth"], b["truth"])
+    assert a["dropped"] == b["dropped"] == 0, (ctx, a["dropped"], b["dropped"])
+    np.testing.assert_array_equal(a["outputs"], b["outputs"], err_msg=ctx)
+    np.testing.assert_array_equal(a["data"], b["data"], err_msg=ctx)
+
+
+def assert_trajectory_parity(a: Dict, b: Dict, ctx=""):
+    """State parity PLUS identical cycle/message counts — the sharded
+    contract (same program, partitioned)."""
+    assert_state_parity(a, b, ctx)
+    assert a["cycles"] == b["cycles"], (ctx, a["cycles"], b["cycles"])
+    assert a["messages"] == b["messages"], (ctx, a["messages"], b["messages"])
+
+
+def digest(result: Dict) -> str:
+    """Stable cross-process fingerprint of a replay end state."""
+    h = hashlib.sha256()
+    h.update(np.int64(result["n"]).tobytes())
+    h.update(np.int64(result["truth"]).tobytes())
+    h.update(np.int64(result["dropped"]).tobytes())
+    h.update(result["outputs"].tobytes())
+    h.update(result["data"].tobytes())
+    return h.hexdigest()
+
+
+def run_grid(grid, engines, mesh_sizes=(0,), churn=True,
+             log=print) -> None:
+    """Replay `grid` cells on every requested engine and assert parity.
+    `engines` ⊆ {numpy, jax, sharded}; sharded runs once per mesh size
+    (0 = all local devices) and is trajectory-checked against jax."""
+    for problem_name, seed in grid:
+        sched = make_schedule(problem_name, seed, churn=churn)
+        results = {}
+        if "numpy" in engines:
+            results["numpy"] = replay(sched, numpy_factory)
+        if "jax" in engines:
+            results["jax"] = replay(sched, jax_factory)
+        if "sharded" in engines:
+            for m in mesh_sizes:
+                # NB: mesh size 0 must stay truthy-sharded — make_engine
+                # only shards when mesh is not None, and mesh=0 resolves
+                # to "all local devices" (a `m or None` here would
+                # silently compare plain jax against itself)
+                results[f"sharded{m or ''}"] = replay(
+                    sched, sharded_factory(m))
+        ctx = f"{problem_name}/seed={seed}"
+        base_key = "jax" if "jax" in results else next(iter(results))
+        base = results[base_key]
+        for key, r in results.items():
+            if key == base_key:
+                continue
+            # trajectory parity holds between any two members of the
+            # device-engine family (jax + sharded at every mesh size);
+            # only numpy legitimately differs in cycle/message counts
+            device_pair = (key.startswith("sharded")
+                           and base_key != "numpy")
+            if device_pair:
+                assert_trajectory_parity(base, r, f"{ctx}:{base_key}vs{key}")
+            else:
+                assert_state_parity(base, r, f"{ctx}:{base_key}vs{key}")
+        log(f"diff_harness,cell={ctx},engines={sorted(results)},"
+            f"digest={digest(base)[:12]},cycles="
+            f"{ {k: v['cycles'] for k, v in results.items()} }")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engines", nargs="+",
+                    default=["numpy", "jax", "sharded"],
+                    choices=["numpy", "jax", "sharded"])
+    ap.add_argument("--mesh-sizes", nargs="+", type=int, default=[0],
+                    help="sharded mesh sizes (0 = all local devices)")
+    ap.add_argument("--grid", choices=["ci", "slow"], default="ci")
+    ap.add_argument("--seeds", nargs="+", type=int, default=None,
+                    help="override: fuzz these seeds on every problem")
+    ap.add_argument("--problems", nargs="+", default=None,
+                    choices=["majority", "mean", "l2"],
+                    help="restrict the grid to these problems")
+    ap.add_argument("--no-churn", action="store_true")
+    args = ap.parse_args()
+
+    if args.seeds:
+        probs = args.problems or [p for p, _ in CI_GRID]
+        grid = [(p, s) for p in probs for s in args.seeds]
+    else:
+        grid = list(CI_GRID if args.grid == "ci" else CI_GRID + SLOW_GRID)
+        if args.problems:
+            grid = [(p, s) for p, s in grid if p in args.problems]
+    run_grid(grid, args.engines, mesh_sizes=tuple(args.mesh_sizes),
+             churn=not args.no_churn)
+    print("DIFF_HARNESS_OK")
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

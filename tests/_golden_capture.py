@@ -1,13 +1,22 @@
-"""Capture golden majority-engine trajectories from the CURRENT code.
+"""Capture golden engine trajectories from the CURRENT code.
 
-Run once against the pre-refactor engine to freeze its behaviour:
+Run once to freeze behaviour:
 
     PYTHONPATH=src python tests/_golden_capture.py
 
-The frozen grid (tests/golden_majority.json) is what
-tests/test_problems.py compares the `ThresholdProblem`-routed Majority
-path against — cycles, message counts and full output vectors must stay
-bit-identical through the problem-layer refactor and beyond.
+Two frozen grids live in tests/golden_majority.json:
+
+  * ``cells`` / ``batched`` — the majority engine, captured at the
+    PR 3 HEAD (pre-problem-layer). tests/test_problems.py replays them:
+    cycles, message counts and full output vectors must stay
+    bit-identical through every later refactor (the problem layer, the
+    peer-plane/sharding rework, ...). Re-running this script must
+    reproduce them EXACTLY — a changed majority cell means the engine's
+    trajectory drifted and the capture must not be committed.
+  * ``problems`` — `MeanMonitor` and `L2Thresh` trajectories (captured
+    at the PR 5 HEAD), so every SHIPPED problem is pinned across
+    versions, not just majority: initial convergence, a full-width data
+    flip, then churn, on both backends.
 """
 import hashlib
 import json
@@ -16,7 +25,7 @@ import os
 import numpy as np
 
 from repro.core.dht import Ring
-from repro.engine import make_engine
+from repro.engine import L2Thresh, MeanMonitor, make_engine
 
 GRID = [
     # (n, mu, ring_seed, eng_seed, backend, kernel)
@@ -29,6 +38,14 @@ GRID = [
 ]
 
 BATCH = {"n": 96, "mus": (0.25, 0.6), "ring_seed": 7, "eng_seed": 11}
+
+PROBLEM_GRID = [
+    # (problem, n, ring_seed, eng_seed, backend)
+    ["mean", 96, 6, 7, "numpy"],
+    ["mean", 96, 6, 7, "jax"],
+    ["l2", 96, 8, 9, "numpy"],
+    ["l2", 96, 8, 9, "jax"],
+]
 
 
 def _votes(n, mu, rng):
@@ -77,6 +94,62 @@ def run_cell(n, mu, ring_seed, eng_seed, backend, kernel):
     }
 
 
+def _problem_instance(name):
+    """Fixed-parameter instances — the golden values pin THESE."""
+    return (MeanMonitor(tau=0.0, scale=256) if name == "mean"
+            else L2Thresh(tau=1.0, dim=2))
+
+
+def _problem_data(name, n, rng, phase):
+    """Raw data plane for (problem, phase): phase 0 decides one way,
+    phase 1 flips the global decision."""
+    if name == "mean":
+        off = -0.6 if phase == 0 else 0.6
+        return rng.normal(off, 0.8, size=n)
+    # l2: mean outside / inside the tau=1 ball, but with enough spread
+    # that many INDIVIDUAL peers start on the wrong side — the protocol
+    # must actually move knowledge (a tight cluster converges in 0
+    # cycles and pins nothing)
+    r = 1.3 if phase == 0 else 0.45
+    c = np.array([0.6, -0.8]) * r
+    return rng.normal(c, 0.9, size=(n, 2))
+
+
+def run_problem_cell(cell):
+    """One mean/l2 golden cell: converge, full-width data flip, churn —
+    shared verbatim by the capture (writes) and the test (compares)."""
+    name, n, ring_seed, eng_seed, backend = cell
+    problem = _problem_instance(name)
+    rng = np.random.default_rng(ring_seed + 200)
+    ring = Ring.random(n, 32, seed=ring_seed)
+    data = _problem_data(name, n, rng, 0)
+    eng = make_engine(backend, ring, data, seed=eng_seed, problem=problem)
+    stages = [eng.run_until_converged(
+        truth=problem.global_output(eng.data()), max_cycles=20_000)]
+    # full-width data flip: every peer's data changes, decision flips
+    eng.set_votes(np.arange(n), _problem_data(name, n, rng, 1))
+    stages.append(eng.run_until_converged(
+        truth=problem.global_output(eng.data()), max_cycles=20_000))
+    # churn: one join + one leave, then reconverge
+    free = np.setdiff1d(
+        np.arange(1, 1 << 16, dtype=np.uint64), ring.addrs % (1 << 16))
+    eng.join(int(free[3]), vote=_problem_data(name, 1, rng, 1)[0])
+    eng.leave(0)
+    stages.append(eng.run_until_converged(
+        truth=problem.global_output(eng.data()), max_cycles=20_000))
+    return {
+        "cell": list(cell),
+        "stages": [
+            {"cycles": int(s["cycles"]), "messages": int(s["messages"]),
+             "converged": s["converged"]} for s in stages
+        ],
+        "outputs_sha": hashlib.sha256(
+            eng.outputs().astype(np.int64).tobytes()).hexdigest(),
+        "data_sha": hashlib.sha256(
+            eng.data().astype(np.int64).tobytes()).hexdigest(),
+    }
+
+
 def run_batch():
     n = BATCH["n"]
     rng = np.random.default_rng(BATCH["ring_seed"] + 100)
@@ -97,16 +170,31 @@ def run_batch():
 
 
 def main():
+    path = os.path.join(os.path.dirname(__file__), "golden_majority.json")
     out = {
-        "comment": "pre-refactor majority engine trajectories (PR 3 HEAD)",
+        "comment": "pre-refactor majority engine trajectories (PR 3 HEAD)"
+                   " + mean/l2 problem trajectories (PR 5 HEAD)",
         "cells": [run_cell(*c) for c in GRID],
         "batched": run_batch(),
+        "problems": [run_problem_cell(c) for c in PROBLEM_GRID],
     }
-    path = os.path.join(os.path.dirname(__file__), "golden_majority.json")
+    # a capture that moves a frozen cell is a drifted engine, not new
+    # goldens — refuse to overwrite silently. Every grid already in the
+    # committed file (majority, batched, AND the problem cells) must be
+    # reproduced exactly; only genuinely new cells may appear.
+    if os.path.exists(path):
+        old = json.load(open(path))
+        for key in ("cells", "problems"):
+            olds = old.get(key, [])
+            assert len(out[key]) >= len(olds), f"{key}: grid shrank"
+            for got, want in zip(out[key], olds):
+                assert got == want, (
+                    f"{key} golden drift!\n got: {got!r}\nwant: {want!r}")
+        assert out["batched"] == old.get("batched"), "batched golden drift!"
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {path}")
-    for c in out["cells"]:
+    for c in out["cells"] + out["problems"]:
         print(c["cell"], c["stages"], c["outputs_sha"][:12])
 
 

@@ -109,6 +109,20 @@ def test_golden_majority_batched():
     assert _sha(eng.outputs()) == g["outputs_sha"]
 
 
+@pytest.mark.parametrize("idx", range(4))
+def test_golden_problem_cells(idx):
+    """MeanMonitor / L2Thresh pinned across versions, like majority:
+    the committed `problems` grid (captured at the PR 5 HEAD) must
+    reproduce bit for bit — cycles, messages, output and data-plane
+    hashes, through a full-width data flip and churn, both backends."""
+    from tests._golden_capture import run_problem_cell
+
+    cells = json.load(open(GOLDEN))["problems"]
+    want = cells[idx]
+    got = run_problem_cell(want["cell"])
+    assert got == want, (got, want)
+
+
 # ---------------------------------------------------------------------------
 # 2. rule level — threshold_rules(Majority) == the pre-refactor algebra
 # ---------------------------------------------------------------------------

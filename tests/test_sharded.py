@@ -1,0 +1,125 @@
+"""Sharded superstep engine (`repro.engine.sharded`): device-count
+invariance and differential-fuzz parity.
+
+The sharded engine's contract is *trajectory bit-parity*: on the same
+(ring, data, seed, schedule) it must reproduce the single-device jax
+engine exactly — outputs, data plane, cycle and message counts, dropped
+counts — for every mesh size, every shipped problem, through churn.
+Multi-device runs spawn a subprocess with 8 virtual host devices (the
+`tests/test_distributed.py` pattern — the parent process must keep
+seeing one device); the harness itself lives in `tests/_diff_harness.py`
+and is shared with the CI sharded-engine job.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_shim import given, settings, st
+
+from tests import _diff_harness as H
+
+
+def _sub_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def _run_harness(args, timeout=1500):
+    script = os.path.join(os.path.dirname(__file__), "_diff_harness.py")
+    r = subprocess.run([sys.executable, script, *args],
+                       capture_output=True, text=True, env=_sub_env(),
+                       timeout=timeout)
+    assert "DIFF_HARNESS_OK" in r.stdout, r.stdout + r.stderr
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# in-process: a 1-device mesh exercises the whole shard_map path cheaply
+# ---------------------------------------------------------------------------
+
+def test_mesh_one_trajectory_parity():
+    """mesh=1 sharded vs plain jax engine: bit-identical trajectory
+    through set_votes + churn + reconvergence (no subprocess — the
+    boundary-exchange code path is live even on one device)."""
+    sched = H.make_schedule("majority", seed=2024, churn=True)
+    plain = H.replay(sched, H.jax_factory)
+    shard = H.replay(sched, H.sharded_factory(1))
+    H.assert_trajectory_parity(plain, shard, "mesh1")
+
+
+def test_mesh_validation():
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+    from repro.engine.sharded import as_engine_mesh
+
+    ring = Ring.random(16, 32, seed=0)
+    votes = np.zeros(16, np.int64)
+    with pytest.raises(ValueError):
+        make_engine("numpy", ring, votes, mesh=1)
+    with pytest.raises(NotImplementedError):
+        make_engine("jax", ring, votes, mesh=1, batch=2)
+    with pytest.raises(ValueError):  # not a power of two / too many
+        as_engine_mesh(3)
+    with pytest.raises(ValueError):  # multi-axis mesh rejected
+        import jax
+        from jax.sharding import Mesh
+
+        as_engine_mesh(Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                            ("a", "b")))
+
+
+# ---------------------------------------------------------------------------
+# subprocess (8 virtual devices): device-count invariance + fuzz grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_device_count_invariance():
+    """One fuzzed majority schedule (churn included) on mesh sizes
+    1/2/4/8 — every size bit-identical to the unsharded jax engine.
+    Slow tier: 5 engine builds worth of jit in a subprocess, and the CI
+    sharded-engine job runs this exact harness command on every push
+    anyway (the fast suite keeps the in-process mesh=1 parity test)."""
+    out = _run_harness(["--engines", "jax", "sharded",
+                        "--mesh-sizes", "1", "2", "4", "8",
+                        "--problems", "majority", "--seeds", "101"])
+    assert "diff_harness,cell=majority/seed=101" in out
+
+
+@pytest.mark.slow
+def test_sharded_fuzz_grid_all_problems():
+    """The full CI fuzz grid (majority + mean + l2, churn) across
+    numpy, jax and the 8-way sharded engine."""
+    _run_harness(["--engines", "numpy", "jax", "sharded",
+                  "--mesh-sizes", "8", "--grid", "ci"], timeout=2400)
+
+
+@pytest.mark.slow
+def test_sharded_fuzz_extra_seeds():
+    """Extra fuzz seeds, mean + l2, 2- and 8-way meshes."""
+    _run_harness(["--engines", "jax", "sharded", "--mesh-sizes", "2", "8",
+                  "--problems", "mean", "l2", "--seeds", "404"],
+                 timeout=2400)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven schedules (numpy vs jax, in-process; the fixed CI
+# grid keeps coverage when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**20))
+def test_fuzz_numpy_vs_jax_majority(seed):
+    """Random schedules beyond the fixed grid (skips without
+    hypothesis — the seeded CI grid keeps the coverage floor)."""
+    sched = H.make_schedule("majority", seed=seed, churn=True)
+    a = H.replay(sched, H.numpy_factory)
+    b = H.replay(sched, H.jax_factory)
+    H.assert_state_parity(a, b, f"hyp/seed={seed}")

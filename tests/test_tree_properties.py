@@ -1,0 +1,51 @@
+"""Fig 4.1 regression gate: the tree-properties benchmark is persisted
+(results/BENCH_tree.json) and BOUNDED, not just printed.
+
+Two layers: the committed JSON must satisfy the paper's envelopes (a
+stale or hand-edited file fails here), and a small fresh recompute must
+satisfy them too (a regression in the addressing/tree layer fails even
+if nobody re-ran the full benchmark). Bounds live next to the benchmark
+(`benchmarks.tree_properties.check_bounds`) so the writer and the gate
+can never drift apart.
+"""
+import json
+import os
+
+from benchmarks import tree_properties as TP
+
+COMMITTED = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "BENCH_tree.json")
+
+
+def test_committed_tree_bench_satisfies_fig41_bounds():
+    with open(COMMITTED) as f:
+        results = json.load(f)
+    # the full-size committed run must cover the paper's figure range
+    assert {r["n"] for r in results["depth"]} >= {10_000, 100_000, 1_000_000}
+    bad = TP.check_bounds(results)
+    assert not bad, "; ".join(bad)
+    # Fig 4.1a headline: full levels track floor(log2 n) - 2 at scale
+    for r in results["depth"]:
+        if r["n"] >= 10_000:
+            assert r["full_levels"] >= int(r["log2n"]) - 2, r
+
+
+def test_fresh_recompute_satisfies_fig41_bounds():
+    """Small fresh run through the same gate (seconds, not minutes)."""
+    lines = []
+    TP.run(lines.append, out_path=os.devnull, **TP.SMOKE)
+    assert any(line.startswith("tree_depth") for line in lines)
+
+
+def test_gate_actually_detects_violations():
+    assert TP.full_levels_floor(10_000) == 13 - 2
+    assert TP.full_levels_floor(4096) == 12 - 3
+    bad = TP.check_bounds({
+        "depth": [{"n": 10_000, "full_levels": 1, "max_depth": 25,
+                   "log2n": 13.3}],
+        "stretch": [{"n": 10_000, "mean_tree_hops": 5.0}],
+        "hop_distance": [{"n": 10_000,
+                          "symmetric": {"mean": 6.0, "p_le_2": 0.2},
+                          "chord": {"mean": 6.0}}],
+    })
+    assert len(bad) == 6, bad
