@@ -59,6 +59,15 @@ SHARDED_SMOKE_MAX_N = 10_000  # check_regression re-runs rows up to this
 SHARDED_TOLERANCE = 0.5  # virtual-device subprocess timing is noisier
 
 
+# device engines already warmed up in THIS process, keyed by their full
+# bench config: a repeat measurement (run + check_regression in one
+# process, the bench smoke tests, warm-path assertions) restores the
+# post-warmup state snapshot instead of paying construction + jit again.
+# The snapshot restore keeps the methodology identical — every timing
+# still covers the same warmup..warmup+cycles window of a fresh engine.
+_ENGINE_CACHE: dict = {}
+
+
 def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
                   seed: int = 0, reps: int = 5, **engine_kw) -> dict:
     """Best-of-`reps` timing of the SAME cycle window (warmup..warmup+
@@ -76,16 +85,27 @@ def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
     votes[rng.choice(n, int(n * 0.4), replace=False)] = 1
 
     t0 = time.time()
-    eng = make_engine(backend, ring, votes, seed=seed + 1, **engine_kw)
-    eng.step(warmup)
-    eng.block_until_ready()
-    t_setup = time.time() - t0
-
+    reused = False
     snap = None
-    if backend == "jax" and reps > 1:
+    if backend == "jax":
         import jax
 
-        snap = jax.tree.map(lambda x: x.copy(), eng._st)
+        key = (n, seed, warmup, tuple(sorted(engine_kw.items())))
+        hit = _ENGINE_CACHE.get(key)
+        if hit is None:
+            eng = make_engine("jax", ring, votes, seed=seed + 1, **engine_kw)
+            eng.step(warmup)
+            eng.block_until_ready()
+            snap = jax.tree.map(lambda x: x.copy(), eng._st)
+            _ENGINE_CACHE[key] = (eng, snap)
+        else:
+            eng, snap = hit
+            eng._st = jax.tree.map(lambda x: x.copy(), snap)
+            reused = True
+    else:
+        eng = make_engine(backend, ring, votes, seed=seed + 1, **engine_kw)
+        eng.step(warmup)
+    t_setup = time.time() - t0
 
     best = 0.0
     for rep in range(reps):
@@ -113,6 +133,9 @@ def bench_backend(backend: str, n: int, cycles: int = 20, warmup: int = 3,
     if backend == "jax":
         rec["dropped"] = eng.dropped
         rec["deferred"] = eng.deferred
+        rec["deferral_rate"] = round(eng.deferral_rate, 4)
+        if reused:
+            rec["engine_reused"] = True
     return rec
 
 
@@ -345,9 +368,10 @@ if __name__ == "__main__":
     ap.add_argument("--sharded-child", required=True,
                     help="JSON config for bench_sharded_inprocess")
     _a = ap.parse_args()
-    if not os.environ.get("JAX_COMPILATION_CACHE_DIR"):
-        from benchmarks.run import enable_compilation_cache
+    # always through enable_compilation_cache: it respects an inherited
+    # cache dir AND pins the non-thunk CPU runtime the cache requires
+    from benchmarks.run import enable_compilation_cache
 
-        enable_compilation_cache()
+    enable_compilation_cache()
     print("SHARDED_RESULT "
           + json.dumps(bench_sharded_inprocess(**json.loads(_a.sharded_child))))

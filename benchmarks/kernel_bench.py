@@ -1,7 +1,20 @@
 """Kernel microbenchmarks (CPU wall-time is indicative only; correctness +
-throughput trends; the TPU numbers come from the roofline analysis)."""
+throughput trends; the TPU numbers come from the roofline analysis).
+
+The delivery-wheel kernels (`kernels.wheel`) get their own JSON,
+``results/BENCH_kernels.json``: per-kernel µs and µs/row of the XLA
+reference path (the engine's CPU fallback — the Pallas forms run
+interpret-only off-TPU, which is a parity surface, not a timing one)
+plus the TPU-model roofline attribution
+(`repro.analysis.roofline.wheel_kernel_roofline`): analytic ideal
+bytes/FLOPs, the memory/compute floor, and how far the measured
+fallback sits above it. ``check_regression_kernels`` gates the committed
+file the same way the engine bench is gated (host-probe normalized,
+wider tolerance — µs-scale CPU timings jitter)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -14,6 +27,12 @@ from repro.kernels.majority_step.ops import majority_step
 from repro.kernels.rglru.ref import linear_scan_reference
 from repro.kernels.threshold_gate.ops import threshold_gate
 
+KERNELS_OUT_PATH = os.path.join("results", "BENCH_kernels.json")
+# µs-scale CPU micro-timings jitter ~2x on shared 1-vCPU hosts even
+# best-of-N; the gate exists to catch algorithmic blowups (an O(n^2)
+# path reappearing), so it fails only beyond 1 + tolerance = 3x
+KERNELS_TOLERANCE = 2.0
+
 
 def _time(f, *args, reps=3):
     f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
@@ -22,6 +41,18 @@ def _time(f, *args, reps=3):
     for _ in range(reps):
         jax.block_until_ready(f(*args))
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _time_best(f, *args, reps=7):
+    """Best-of-`reps` µs — the right statistic for µs-scale dispatches
+    on shared hosts, where the mean is dominated by scheduler noise."""
+    jax.block_until_ready(f(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def run(csv):
@@ -62,3 +93,162 @@ def run(csv):
     us = _time(f, io, it, oo, ot, x)
     csv(f"kernel_majority_step,n={n},us={us:.0f},"
         f"peers_per_s={n/(us*1e-6):.2e}")
+
+
+# -- delivery-wheel kernels -> results/BENCH_kernels.json -----------------
+
+def _wheel_cases(ww: int, pad: int, narrow: int, pw: int = 2):
+    """One bench case per wheel kernel, sized like the engine at the
+    given (window, pad) — returns [(name, rows, jitted_fn, args,
+    bytes_hbm, flops)]. bytes/flops are the ANALYTIC ideal stream and
+    arithmetic of the kernel form (roofline attribution inputs), not
+    measurements."""
+    from repro.engine.jax_backend import JaxEngine, deliver_network_step
+    from repro.engine.problems import get_problem
+    from repro.engine import protocol as proto
+    from repro.core.dht import Ring
+    from repro.kernels.wheel import (due_dedup_reference,
+                                     enqueue_stage_reference)
+
+    rng = np.random.default_rng(0)
+    roww = 6 + pw
+    cases = []
+
+    # due_dedup: WW-row window election (kernel form: blocked all-pairs)
+    nl = pad * 3
+    flat = jnp.asarray(rng.integers(0, nl, ww), jnp.int32)
+    acc = rng.random(ww) < 0.6
+    alert = rng.random(ww) < 0.05
+    args = (flat, jnp.asarray(acc & ~alert), jnp.asarray(acc & alert),
+            jnp.asarray(rng.integers(0, 50, ww), jnp.int32),
+            jnp.asarray(rng.integers(0, 50, ww), jnp.int32))
+    f = jax.jit(lambda *a: due_dedup_reference(*a, nl=nl))
+    cases.append(("due_dedup", ww, f, args,
+                  11.0 * ww * 4, 10.0 * ww * ww))
+
+    # enqueue_stage: M=4*WW dense rows through 10 delay classes (DMA)
+    m = 4 * ww
+    mp = m + (-m % 10)
+    dense = np.zeros((mp, roww), np.uint32)
+    dense[:m] = rng.integers(0, 2**32, (m, roww), dtype=np.uint64)
+    args = (jnp.asarray(dense), jnp.asarray(rng.permutation(10) + 1,
+                                            jnp.int32),
+            jnp.asarray(7, jnp.int32), jnp.asarray(m - 3, jnp.int32))
+    f = jax.jit(lambda *a: enqueue_stage_reference(*a, dt_col=roww - 1))
+    cases.append(("enqueue_stage", mp, f, args,
+                  2.0 * mp * roww * 4, 1.0 * mp * roww))
+
+    # descent tail: `narrow` survivors x data-dependent R1 depth
+    n_ring = 256
+    ring = Ring.random(n_ring, 20, seed=3)
+    eng = JaxEngine(ring, rng.integers(0, 2, n_ring), seed=1, kernel="ref")
+    st = eng._st
+    dest = jnp.asarray(rng.integers(0, 2**20, narrow, dtype=np.uint64)
+                       .astype(np.uint32))
+    owner = eng._owner_of(st.addrs, st.n_live, dest)
+    origin = jnp.asarray(np.asarray(st.addrs)[rng.integers(0, n_ring,
+                                                           narrow)])
+    a_prev, a_self = st.prev[owner], st.addrs[owner]
+    kw = dict(
+        origin=origin, dest=dest,
+        edge=jnp.asarray(rng.integers(0, 2**20, narrow, dtype=np.uint64)
+                         .astype(np.uint32)),
+        has_edge=jnp.asarray(rng.random(narrow) < 0.7),
+        live=jnp.asarray(rng.random(narrow) < 0.8),
+        entry=jnp.zeros(narrow, bool),
+        pos_i=st.pos[owner], a_prev=a_prev, a_self=a_self,
+        self_seg=JaxEngine._in_segment(origin, a_prev, a_self),
+        max_addr=st.addrs[st.n_live - 1],
+    )
+    f = jax.jit(lambda: deliver_network_step(d=20, **kw))
+    cases.append(("descent_tail", narrow, f, (),
+                  16.0 * narrow * 4, 60.0 * 20 * narrow))
+
+    # threshold_step: full-pad fused margin/test/Send per problem
+    for pname in ("majority", "mean", "l2"):
+        p = get_problem(pname)
+        ppw, dw = p.payload_width, p.data_width
+        ip = jnp.asarray(rng.integers(-40, 41, (pad, 3, ppw)), jnp.int32)
+        op = jnp.asarray(rng.integers(-40, 41, (pad, 3, ppw)), jnp.int32)
+        x = jnp.asarray(rng.integers(-200, 201, (pad, dw)), jnp.int32)
+        f = jax.jit(lambda ip, op, x, _p=p: proto.threshold_rules(
+            _p, jnp, ip, op, x))
+        # l2 projects (3+1+3) payload planes onto the M-direction cover
+        fl = (7.0 * p.U.shape[0] * (2 * dw + 2) * pad if pname == "l2"
+              else 8.0 * 3 * ppw * pad)
+        cases.append((f"threshold_step[{pname}]", pad, f, (ip, op, x),
+                      (3.0 * 3 * ppw + dw + 4) * pad * 4, fl))
+    return cases
+
+
+def run_wheel(csv, ww: int = 2112, pad: int = 16384, narrow: int = 256,
+              out_path: str = KERNELS_OUT_PATH):
+    """Bench the wheel kernels' XLA reference paths (sized like the
+    engine at n=1e4: work_budget 2048 -> WW 2112) and write the gated
+    BENCH_kernels.json with roofline attribution."""
+    from benchmarks.engine_bench import host_probe
+    from repro.analysis.roofline import wheel_kernel_roofline
+
+    rows = []
+    for name, n_rows, f, args, bytes_hbm, flops in _wheel_cases(
+            ww, pad, narrow):
+        us = _time_best(f, *args)
+        row = wheel_kernel_roofline(name, n_rows, bytes_hbm, flops,
+                                    measured_us=us)
+        row["path"] = "xla_ref"  # see module docstring: CPU fallback
+        rows.append(row)
+        csv(f"kernel_wheel,{name},rows={n_rows},us={us:.0f},"
+            f"us_per_row={row['us_per_row']},"
+            f"tpu_ideal_us={row['tpu_ideal_us']},"
+            f"dominant={row['dominant']}")
+    out = {
+        "bench": "wheel_kernels_us_per_row",
+        "device": jax.default_backend(),
+        "sizes": {"ww": ww, "pad": pad, "narrow": narrow},
+        "host_probe": host_probe(),
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(out, fh, indent=1)
+    csv(f"kernel_wheel_written,path={out_path}")
+
+
+def check_regression_kernels(csv, out_path: str = KERNELS_OUT_PATH,
+                             tolerance: float = KERNELS_TOLERANCE) -> bool:
+    """Fresh wheel-kernel timings vs the committed BENCH_kernels.json
+    (host-probe normalized, per-kernel µs/row; same contract as the
+    engine gate)."""
+    from benchmarks.engine_bench import host_probe
+
+    try:
+        with open(out_path) as fh:
+            committed = json.load(fh)
+    except (OSError, ValueError):
+        csv(f"check_kernels_skipped,reason=no committed {out_path}")
+        return True
+    scale = 1.0
+    if committed.get("host_probe"):
+        # probe measures ops/sec; µs scale INVERSELY with host speed
+        scale = committed["host_probe"] / host_probe()
+    sizes = committed.get("sizes", {})
+    fresh = {}
+    for name, n_rows, f, args, _b, _f in _wheel_cases(
+            sizes.get("ww", 2112), sizes.get("pad", 16384),
+            sizes.get("narrow", 256)):
+        fresh[name] = _time_best(f, *args) / max(n_rows, 1)
+    ok = True
+    for row in committed["rows"]:
+        name = row["kernel"]
+        if name not in fresh:
+            continue
+        expected = row["us_per_row"] * scale
+        ratio = fresh[name] / max(expected, 1e-9)
+        bad = ratio > 1.0 + tolerance
+        csv(f"check_kernels,{name},committed={row['us_per_row']},"
+            f"expected_today={expected:.4f},fresh={fresh[name]:.4f},"
+            f"ratio={ratio:.2f},verdict={'REGRESSION' if bad else 'ok'}")
+        if bad:
+            ok = False
+    csv(f"check_kernels_done,pass={ok},tolerance={tolerance}")
+    return ok

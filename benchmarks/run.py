@@ -5,6 +5,7 @@ systems layer. Prints ``name,key=value,...`` CSV lines.
   static_convergence Fig 4.2  (messages to convergence, local vs gossip)
   stationary         Fig 4.3  (accuracy/cost under churn; budget sweep)
   kernel_bench       Pallas-kernel oracles microbench (CPU-indicative)
+  kernel_wheel       delivery-wheel kernels -> BENCH_kernels.json (gated)
   sync_comparison    trainer-level sync families (paper mode vs baselines)
   engine             numpy-vs-device engine cycles/sec -> BENCH_engine.json
   churn              Alg. 2 join/leave reconvergence    -> BENCH_churn.json
@@ -48,9 +49,26 @@ def section(name):
 def enable_compilation_cache(cache_dir: str = CACHE_DIR):
     """Persistent XLA compilation cache: the engine's superstep programs
     are ~4s of jit per (backend, size) — cache them across benchmark
-    invocations. Must run before the first jit call."""
+    invocations. Must run before the first jit call (before the CPU
+    client initializes, for the XLA_FLAGS injection below to apply).
+
+    The XLA:CPU *thunk* runtime (this jaxlib's default) is excluded:
+    its serialized executables can deserialize into code that spins
+    forever (observed ~1-in-3 cache-hit runs hung with the busy thread
+    executing inside JIT'd code pages; 0 hangs with the flag). The
+    non-thunk runtime also runs the superstep ~2x faster on CPU, so
+    every run.py measurement — committed baselines and the
+    check-regression re-measurements alike — shares this basis. The
+    flag goes through the environment so sharded-row subprocesses
+    (which append their virtual-device flag to inherited XLA_FLAGS)
+    stay on the same runtime as the parent."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_cpu_use_thunk_runtime" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_cpu_use_thunk_runtime=false").strip()
     import jax
 
+    cache_dir = os.environ.get("JAX_COMPILATION_CACHE_DIR", cache_dir)
     os.makedirs(cache_dir, exist_ok=True)
     jax.config.update("jax_compilation_cache_dir", os.path.abspath(cache_dir))
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
@@ -87,7 +105,8 @@ def main() -> None:
         ok = engine_bench.check_regression(
             csv, max_n=1_000 if args.smoke else 10_000,
             sharded=not args.smoke)
-        sys.exit(0 if ok else 1)
+        ok_k = kernel_bench.check_regression_kernels(csv)
+        sys.exit(0 if (ok and ok_k) else 1)
 
     b = args.backend
     if args.smoke:
@@ -98,6 +117,9 @@ def main() -> None:
             ("tree_properties", lambda c: tree_properties.run(
                 c, **tree_properties.SMOKE, out_path=sp("BENCH_tree.json"))),
             ("kernel_bench", lambda c: kernel_bench.run(c)),
+            ("kernel_wheel", lambda c: kernel_bench.run_wheel(
+                c, ww=576, pad=2048, narrow=64,
+                out_path=sp("BENCH_kernels.json"))),
             ("engine", lambda c: engine_bench.run(
                 c, **engine_bench.SMOKE, out_path=sp("BENCH_engine.json"))),
             # sharded engine at CI scale: one subprocess with 8 virtual
@@ -130,6 +152,7 @@ def main() -> None:
              lambda c: static_convergence.run(c, backend=b)),
             ("stationary", lambda c: stationary.run(c, backend=b)),
             ("kernel_bench", lambda c: kernel_bench.run(c)),
+            ("kernel_wheel", lambda c: kernel_bench.run_wheel(c)),
             ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
             ("engine", lambda c: engine_bench.run(c)),
             ("engine_sharded", lambda c: engine_bench.run_sharded(c)),

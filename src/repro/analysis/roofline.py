@@ -48,6 +48,41 @@ WIRE_MULT = {
 }
 
 
+def wheel_kernel_roofline(name: str, rows: int, bytes_hbm: float,
+                          flops: float, measured_us: Optional[float] = None
+                          ) -> Dict:
+    """Roofline attribution for one delivery-wheel kernel invocation
+    (`benchmarks.kernel_bench` -> results/BENCH_kernels.json).
+
+    `bytes_hbm` / `flops` are the analytic per-invocation totals of the
+    kernel's ideal stream (inputs + outputs once) and arithmetic; the
+    TPU hardware model above prices them into memory/compute terms. The
+    dominant term's time is the kernel's TPU-model floor (`ideal_us`) —
+    the number the Pallas build is accountable to; `measured_us`, when
+    given, is the XLA *reference* path on the bench host (CPU), and the
+    ratio records how far the fallback sits above the floor."""
+    t_mem = bytes_hbm / HBM_BW
+    t_comp = flops / PEAK_FLOPS
+    dominant = "memory" if t_mem >= t_comp else "compute"
+    ideal_us = max(t_mem, t_comp) * 1e6
+    row = {
+        "kernel": name,
+        "rows": int(rows),
+        "bytes_hbm": float(bytes_hbm),
+        "flops": float(flops),
+        "t_mem_us": round(t_mem * 1e6, 4),
+        "t_compute_us": round(t_comp * 1e6, 4),
+        "dominant": dominant,
+        "tpu_ideal_us": round(ideal_us, 4),
+    }
+    if measured_us is not None:
+        row["measured_us"] = round(float(measured_us), 2)
+        row["us_per_row"] = round(float(measured_us) / max(rows, 1), 4)
+        row["measured_over_ideal"] = round(
+            float(measured_us) / max(ideal_us, 1e-9), 1)
+    return row
+
+
 def active_params(cfg) -> float:
     """Matmul parameters touched per token (MoE: top-k + shared only)."""
     from repro.models.model import abstract_params

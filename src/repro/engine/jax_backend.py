@@ -21,8 +21,14 @@ programs:
     ``work_budget`` rows of the due bucket (ALERT side-wheel rows always
     ride ahead of data). Over-budget rows slip one cycle into the next
     bucket; pathological bursts beyond that stay in place and are
-    revisited a wheel revolution later (both counted in ``deferred`` —
-    the protocol tolerates arbitrary delays by design);
+    revisited a wheel revolution later (both counted ONCE per row in
+    ``deferred`` via the LATE row bit — the protocol tolerates
+    arbitrary delays by design);
+  * the cycle's hot loops have Pallas kernel forms (`kernels.wheel`:
+    fused due-scan/dedup election, enqueue class staging, the blocked
+    R1 descent tail, and the problem-generic fused threshold step) —
+    each behind an individual `use_kernel` fallback flag, bit-identical
+    to the XLA paths that remain THE semantic reference;
   * routing uses the jnp path of `core.addressing`'s bit algebra through
     the same `engine.protocol.deliver_rules` the numpy backend consumes;
     the R1 internal-descent loop is a `lax.while_loop` over live masks;
@@ -81,6 +87,8 @@ from repro.engine import protocol as P
 from repro.engine.base import EngineResult, run_convergence_loop
 from repro.engine.problems import Majority, get_problem
 from repro.kernels.majority_step.ops import _on_tpu, majority_step
+from repro.kernels.wheel import (WHEEL_KERNELS, descent_tail, due_dedup,
+                                 enqueue_stage, threshold_step)
 
 NDIR = 3
 _I32 = jnp.int32
@@ -97,6 +105,11 @@ PAY_ONES, PAY_TOT, SEQ, DELIVER_T = 4, 5, 6, 7  # majority (P = 2) layout
 # a row whose R1 internal descent outran the narrow-loop budget re-enters
 # the wheel mid-descent with its network-entry already consumed
 CONT = np.uint32(2)
+# bit 2: the row already missed a drain window once (slipped a cycle or
+# waited out a revolution). Pure accounting — the router never reads it;
+# it keeps the deferral counter from recounting the same standing
+# backlog row every cycle it sits over budget
+LATE = np.uint32(4)
 NO_MSG = np.uint32(0xFFFFFFFF)  # deliver_t sentinel: row is dead (fenced)
 NO_ADDR = np.uint32(0xFFFFFFFF)  # padded-ring sentinel: row is vacant
 
@@ -336,7 +349,8 @@ class JaxEngine:
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
                  capacity_per_peer: int = 6, work_budget: int = 0,
                  kernel: str = "auto", pad_to: int = 0, chunk: int = 256,
-                 problem=None, _defer_state: bool = False):
+                 problem=None, wheel_kernels="auto",
+                 _defer_state: bool = False):
         if ring.d > 32:
             raise ValueError(
                 f"jax engine needs d <= 32 (uint32 addresses), got d={ring.d}"
@@ -363,9 +377,27 @@ class JaxEngine:
         # parity tests, not throughput). The fused kernel implements the
         # majority rule only — other problems run the jnp rules.
         self._is_majority = isinstance(self.problem, Majority)
-        self._use_kernel = (
-            kernel == "pallas" or (kernel == "auto" and _on_tpu())
-        ) and self._is_majority
+        kernel_on = kernel == "pallas" or (kernel == "auto" and _on_tpu())
+        self._use_kernel = kernel_on and self._is_majority
+        # delivery-wheel kernels (kernels.wheel): each has an individual
+        # XLA fallback; `wheel_kernels` selects the enabled subset by
+        # name ("auto" = all of WHEEL_KERNELS, "none"/() = pure XLA).
+        # Off-TPU the kernels run in interpret mode — parity surface,
+        # not throughput — so the same kernel=pallas|auto policy gates
+        # them as the majority kernel.
+        if wheel_kernels in ("auto", None):
+            wk_names = WHEEL_KERNELS
+        elif wheel_kernels == "none":
+            wk_names = ()
+        else:
+            wk_names = tuple(wheel_kernels)
+        bad = set(wk_names) - set(WHEEL_KERNELS)
+        if bad:
+            raise ValueError(
+                f"unknown wheel kernels {sorted(bad)}; "
+                f"pick from {WHEEL_KERNELS}")
+        self._wk = frozenset(wk_names) if kernel_on else frozenset()
+        self._wk_interp = not _on_tpu()
 
         self.pad = int(pad_to) or _next_pow2(max(self.n + max(8, self.n // 8), 64))
         if self.pad < self.n:
@@ -513,13 +545,25 @@ class JaxEngine:
         comps = [pay[..., c] for c in range(self.pw)]
         return jnp.concatenate(comps + [seq[..., None]], axis=-1)
 
+    def _rules(self, in_pay, out_pay, x):
+        """Problem-generic threshold rules dispatch: the fused Pallas
+        `threshold_step` kernel when enabled (any problem — the kernel
+        traces the problem's own `test`), else the shared jnp rules.
+        Returns (viol, out, pay) — bit-identical either way."""
+        if "threshold" in self._wk:
+            return threshold_step(self.problem, in_pay, out_pay, x,
+                                  use_kernel=True, interpret=self._wk_interp)
+        return P.threshold_rules(self.problem, jnp, in_pay, out_pay, x)
+
     def _test_phase(self, st: DeviceState):
         """Full-width threshold rules (event paths + parity surface):
         the fused Pallas kernel for the majority problem on TPU, the
-        shared jnp rules elsewhere. Returns (viol (pd,3), pay (pd,3,P))."""
+        problem-generic `threshold_step` kernel when wheel kernels are
+        on, the shared jnp rules elsewhere. Returns (viol (pd,3),
+        pay (pd,3,P))."""
         pd = st.x.shape[0]
         pw = self.pw
-        if self._is_majority:
+        if self._is_majority and "threshold" not in self._wk:
             io = st.inbox[:, 0].reshape(pd, NDIR)
             it = st.inbox[:, 1].reshape(pd, NDIR)
             viol, _, po, pt = majority_step(
@@ -528,9 +572,7 @@ class JaxEngine:
             )
             return viol, jnp.stack([po, pt], axis=-1)
         in_pay = st.inbox[:, :pw].reshape(pd, NDIR, pw)
-        viol, _, pay = P.threshold_rules(
-            self.problem, jnp, in_pay, self._out_pay(st.out), st.x
-        )
+        viol, _, pay = self._rules(in_pay, self._out_pay(st.out), st.x)
         return viol, pay
 
     def _outputs_match(self, st: DeviceState, truth: jnp.ndarray) -> jnp.ndarray:
@@ -697,12 +739,20 @@ class JaxEngine:
         spill = lv & (scum > NW)  # beyond the narrow budget: defer
         sok = sidx < WW
         sp = jnp.where(sok, sidx, 0)
-        acc2, drop2, od2, oe2, ohe2 = deliver_network_step(
-            origin=w_origin[sp], dest=cur_d[sp], edge=cur_e[sp],
-            has_edge=cur_h[sp], live=sok, pos_i=pos_i[sp], a_prev=a_prev[sp],
-            a_self=a_self[sp], self_seg=self_seg[sp], max_addr=max_addr, d=d,
-            entry=jnp.zeros(NW, bool),
-        )
+        if "descent" in self._wk:
+            acc2, drop2, od2, oe2, ohe2 = descent_tail(
+                w_origin[sp], cur_d[sp], cur_e[sp], cur_h[sp], sok,
+                jnp.zeros(NW, bool), pos_i[sp], a_prev[sp], a_self[sp],
+                self_seg[sp], max_addr, d,
+                use_kernel=True, interpret=self._wk_interp,
+            )
+        else:
+            acc2, drop2, od2, oe2, ohe2 = deliver_network_step(
+                origin=w_origin[sp], dest=cur_d[sp], edge=cur_e[sp],
+                has_edge=cur_h[sp], live=sok, pos_i=pos_i[sp],
+                a_prev=a_prev[sp], a_self=a_self[sp], self_seg=self_seg[sp],
+                max_addr=max_addr, d=d, entry=jnp.zeros(NW, bool),
+            )
         pack = jnp.stack(
             [acc2.astype(_U32) | (drop2.astype(_U32) << 1), od2, oe2,
              ohe2.astype(_U32)], axis=1,
@@ -731,23 +781,39 @@ class JaxEngine:
         acc_a = acc & is_alert
         pl = self._plane  # all peer-plane access below goes through it
         sent = pd * NDIR  # scatter sentinel (owned by no plane row/shard)
-        best = pl.link_max(flat, wi, acc_d)
-        abest = jax.lax.cond(
-            has_alerts,
-            lambda: pl.link_max(flat, wi, acc_a),
-            lambda: pl.link_floor(),
-        )
-        best_w = pl.link_read(best, flat)
-        abest_w = pl.link_read(abest, flat)
-        winner = acc_d & (wi == best_w)
-        loser = acc_d & ~winner
-        floor = jnp.where(abest_w >= 0, 0,
-                          pl.take_link(st.inbox, flat)[:, self.pw])
-        fresh = winner & (w_seq > floor)
+        if "dedup" in self._wk:
+            # window-local fused election: all decisions (including the
+            # react representative and the alert force mask) come from an
+            # O(WW^2) blocked all-pairs kernel over *replicated* window
+            # data — no O(pad) plane, and on the sharded plane no
+            # link_max/link_read collectives for this phase
+            link_seq = pl.take_link(st.inbox, flat)[:, self.pw]
+            (winner, loser, fresh, alert_write, is_rep, aforce) = due_dedup(
+                flat, acc_d, acc_a, w_seq, link_seq, nl=sent,
+                use_kernel=True, interpret=self._wk_interp,
+            )
+            abest = None
+        else:
+            best = pl.link_max(flat, wi, acc_d)
+            abest = jax.lax.cond(
+                has_alerts,
+                lambda: pl.link_max(flat, wi, acc_a),
+                lambda: pl.link_floor(),
+            )
+            best_w = pl.link_read(best, flat)
+            abest_w = pl.link_read(abest, flat)
+            winner = acc_d & (wi == best_w)
+            loser = acc_d & ~winner
+            floor = jnp.where(abest_w >= 0, 0,
+                              pl.take_link(st.inbox, flat)[:, self.pw])
+            fresh = winner & (w_seq > floor)
+            alert_write = acc_a & (best_w < 0)
+            rep_w = pl.peer_dirmax(jnp.maximum(best, abest), recv)  # (WW,)
+            is_rep = acc & (wi == rep_w)
+            aforce = None
         # one width-WW scatter: a window row is either a fresh data write
         # or an alert zeroing a link with no data winner (disjoint rows
         # AND disjoint links, so no duplicate indices)
-        alert_write = acc_a & (best_w < 0)
         data_idx = jnp.where(fresh | alert_write, flat, sent)
         data_val = jnp.where(
             alert_write[:, None], 0,
@@ -758,19 +824,20 @@ class JaxEngine:
 
         # ---- react: gather-based test() + Send on the touched peers
         # (one representative window row per peer; work ∝ window, not pad)
-        rep_w = pl.peer_dirmax(jnp.maximum(best, abest), recv)  # (WW,)
-        is_rep = acc & (wi == rep_w)
         reps_w, _ = self._compact(is_rep, WW)
         rvalid = reps_w < WW
-        rp = jnp.where(rvalid, recv[jnp.where(rvalid, reps_w, 0)], 0)
+        reps_safe = jnp.where(rvalid, reps_w, 0)
+        rp = jnp.where(rvalid, recv[reps_safe], 0)
         link = rp[:, None] * NDIR + jnp.arange(NDIR, dtype=_I32)[None, :]
         rin = pl.take_link(inbox, link)        # (WW, 3, P+1)
         ro = pl.take_peer(st.out, rp)          # (WW, 3P+1)
-        viol, _, pay = P.threshold_rules(
-            self.problem, jnp, rin[..., :self.pw], self._out_pay(ro),
-            pl.take_peer(st.x, rp)
+        viol, _, pay = self._rules(
+            rin[..., :self.pw], self._out_pay(ro), pl.take_peer(st.x, rp)
         )
-        force = (pl.link_read3(abest, rp) >= 0) & has_alerts
+        if aforce is None:
+            force = (pl.link_read3(abest, rp) >= 0) & has_alerts
+        else:  # per-peer alert mask already elected window-locally
+            force = aforce[reps_safe] & has_alerts
         eff = (viol | force) & rvalid[:, None]
         seq2 = ro[:, NDIR * self.pw] + eff.any(1).astype(_I32)
         ro2 = self._pack_out(
@@ -792,17 +859,28 @@ class JaxEngine:
         slip_avail = jnp.clip(dcnt - B, 0, B)
         slip_k = jnp.minimum(slip_avail, cap - st.wcnt[s1])
         leftover = jnp.clip(dcnt - B - slip_k, 0, W - 2 * B)
+        # honest over-budget accounting: count each backlog row ONCE, the
+        # first cycle it misses the drain window, then brand it LATE so a
+        # standing backlog doesn't recount every cycle it sits over
+        # budget (the historical `dcnt - B` recount inflated `deferred`
+        # by the backlog's residence time)
+        tail = sbuf[B:]  # rows past the window: slip block + leftovers
+        tail_live = jnp.arange(W - B, dtype=_I32) < (dcnt - B)
+        n_late_new = (tail_live
+                      & ((tail[:, HAS_EDGE] & LATE) == 0)).sum().astype(_I32)
         shifted = jax.lax.dynamic_slice(
             sbuf, (B + slip_k, 0), (W - 2 * B, roww))
+        shifted = shifted.at[:, HAS_EDGE].set(shifted[:, HAS_EDGE] | LATE)
         wheel = jax.lax.dynamic_update_slice(
             st.wheel, shifted[None], (s, 0, 0))
         wcnt = st.wcnt.at[s].set(leftover)
         acnt = st.acnt.at[s].set(0)
         # slip block: rows [B, 2B) of the drained slot, due next cycle
+        slip_rows = dbuf[B:].at[:, self._DT].set((st.t + 1).astype(_U32))
+        slip_rows = slip_rows.at[:, HAS_EDGE].set(
+            slip_rows[:, HAS_EDGE] | LATE)
         wheel = jax.lax.dynamic_update_slice(
-            wheel, dbuf[B:].at[:, self._DT].set(
-                (st.t + 1).astype(_U32))[None],
-            (s1, wcnt[s1], 0))
+            wheel, slip_rows[None], (s1, wcnt[s1], 0))
         wcnt = wcnt.at[s1].add(slip_k)
 
         # ALERT forwards: side-wheel, exactly one cycle per hop
@@ -866,20 +944,23 @@ class JaxEngine:
         h = ((st.t + 1).astype(_U32) * _U32(0x9E3779B1) + st.salt_enq)
         perm = st.perms[(h >> _U32(28)).astype(_I32)]  # (10,) delays 1..10
         CW_ = -(-M // 10)  # ceil(M / 10): strided class width
+        if 10 * CW_ > M:  # zero-pad the ragged last classes once, up front
+            dense = jnp.concatenate(
+                [dense, jnp.zeros((10 * CW_ - M, roww), _U32)])
+        # fused class gather + DELIVER_T stamping (kernels.wheel.enqueue);
+        # both paths are bit-identical to the historical dense[c::10]
+        # slicing, dead ragged-tail pad rows included
+        staged, k_cs = enqueue_stage(
+            dense, perm, st.t, k_tot, dt_col=self._DT,
+            use_kernel="enqueue" in self._wk, interpret=self._wk_interp,
+        )
         for c in range(10):
-            rows_c = dense[c::10]
-            if rows_c.shape[0] < CW_:  # pad the ragged last class
-                rows_c = jnp.concatenate(
-                    [rows_c, jnp.zeros((CW_ - rows_c.shape[0], roww), _U32)])
-            delay_c = perm[c]
-            slot_c = (st.t + delay_c) % SLOTS
-            k_c = jnp.clip((k_tot - c + 9) // 10, 0, CW_)
-            k_eff = jnp.minimum(k_c, jnp.maximum(cap - wcnt[slot_c], 0))
-            rows_c = rows_c.at[:, self._DT].set((st.t + delay_c).astype(_U32))
+            slot_c = (st.t + perm[c]) % SLOTS
+            k_eff = jnp.minimum(k_cs[c], jnp.maximum(cap - wcnt[slot_c], 0))
             wheel = jax.lax.dynamic_update_slice(
-                wheel, rows_c[None], (slot_c, wcnt[slot_c], 0))
+                wheel, staged[c][None], (slot_c, wcnt[slot_c], 0))
             wcnt = wcnt.at[slot_c].add(k_eff)
-            dropped = dropped + (k_c - k_eff)
+            dropped = dropped + (k_cs[c] - k_eff)
 
         # accounting: every first-entry live window row is one consumed
         # network delivery; continuations (mid-descent spills and
@@ -890,7 +971,7 @@ class JaxEngine:
         return st._replace(
             wheel=wheel, wcnt=wcnt, awheel=awheel, acnt=acnt,
             messages_sent=st.messages_sent + n_live_rows - n_cont,
-            deferred=st.deferred + jnp.maximum(dcnt - B, 0) + n_defer,
+            deferred=st.deferred + n_late_new + n_defer,
             dropped=dropped,
             t=st.t + 1,
         )
@@ -1086,10 +1167,19 @@ class JaxEngine:
     @property
     def deferred(self) -> int:
         """Deliveries pushed past their due time: over-budget rows slip
-        one cycle (bursts beyond the slip block wait one wheel
-        revolution and are re-counted), and same-link collision losers
-        re-deliver later."""
+        one cycle or wait a wheel revolution (each row counted ONCE, the
+        first cycle it misses its drain window — the LATE row bit stops
+        recounts while a backlog stands), and same-link collision losers
+        / mid-descent spills re-deliver later."""
         return int(self._st.deferred)
+
+    @property
+    def deferral_rate(self) -> float:
+        """Cumulative deferral events per consumed network delivery —
+        the honest congestion figure for sizing `work_budget` (an
+        init-storm transient shows up here, then decays)."""
+        m = int(self._st.messages_sent)
+        return float(self._st.deferred) / m if m else 0.0
 
     def outputs(self) -> np.ndarray:
         out = knowledge_outputs(self.problem, self._st.inbox, self._st.x,

@@ -97,6 +97,21 @@ class ThresholdProblem:
         send = ((ta >= 0) & (tka < 0)) | ((ta < 0) & (tka > 0))
         return send, self.margin(xp, k) >= 0
 
+    # -- kernel support ------------------------------------------------------
+    def test_consts(self, xp) -> Tuple[Array, ...]:
+        """Array constants `test` closes over (none for the linear
+        problems). Pallas kernel bodies may not capture array constants,
+        so the fused `threshold_step` kernel fetches these, passes them
+        in as explicit kernel inputs and routes them back through
+        `test_with_consts` — bit-identical to `test` by contract."""
+        return ()
+
+    def test_with_consts(self, xp, agg: Array, k: Array,
+                         consts: Tuple[Array, ...]) -> Tuple[Array, Array]:
+        """`test`, with the `test_consts` arrays supplied by the caller
+        (the default has none to thread through)."""
+        return self.test(xp, agg, k)
+
     # -- convergence ---------------------------------------------------------
     def converged(self, xp, outputs: Array, truth: Array) -> Array:
         """Per-peer convergence predicate (engines mask occupancy and
@@ -244,9 +259,10 @@ class L2Thresh(ThresholdProblem):
                 f"l2 data must be (n, {self.data_width}), got {a.shape}")
         return np.round(a * self.scale).astype(np.int64)
 
-    def _proj(self, xp, pay: Array) -> Array:
+    def _proj(self, xp, pay: Array, U: Array = None) -> Array:
         """(..., M) tangent-half-space margins f_m = <s, u_m> - T*c."""
-        U = xp.asarray(self.U)
+        if U is None:
+            U = xp.asarray(self.U)
         acc = pay[..., 0].astype(xp.float32)[..., None] * U[:, 0]
         for j in range(1, self.data_width):  # unrolled, fixed op order
             acc = acc + pay[..., j].astype(xp.float32)[..., None] * U[:, j]
@@ -256,7 +272,13 @@ class L2Thresh(ThresholdProblem):
     def margin(self, xp, pay: Array) -> Array:
         return self._proj(xp, pay).max(-1)
 
-    def test(self, xp, agg: Array, k: Array):
+    def test_consts(self, xp):
+        return (xp.asarray(self.U),)
+
+    def test_with_consts(self, xp, agg: Array, k: Array, consts):
+        return self.test(xp, agg, k, U=consts[0])
+
+    def test(self, xp, agg: Array, k: Array, U: Array = None):
         """Region-wise safe-zone test. Each tangent functional f_m is
         *linear and additive*, so the paper's quiescence argument holds
         per functional; the nonlinearity lives only in which functionals
@@ -279,11 +301,11 @@ class L2Thresh(ThresholdProblem):
         Alg. 3: empty agreements wake inside-deciding peers, exhausted
         residuals never re-violate (a symmetric region-membership test
         storms there — observed)."""
-        pk = self._proj(xp, k)                     # (..., M)
+        pk = self._proj(xp, k, U)                  # (..., M)
         out = pk.max(-1) >= 0
         m_star = pk.argmax(-1)                     # (...,)
-        pa = self._proj(xp, agg)                   # (..., 3, M)
-        pka = self._proj(xp, k[..., None, :] - agg)
+        pa = self._proj(xp, agg, U)                # (..., 3, M)
+        pka = self._proj(xp, k[..., None, :] - agg, U)
         viol_m = ((pa >= 0) & (pka < 0)) | ((pa < 0) & (pka > 0))
         sel = m_star[..., None, None]
         viol_out = xp.take_along_axis(viol_m, sel, -1)[..., 0]  # (..., 3)

@@ -1,0 +1,113 @@
+"""Strided-permutation enqueue staging kernel for wheel appends.
+
+Each cycle the engine appends one dense block of rows (data forwards,
+deferred collision losers, mid-descent spills, react sends) to the
+wheel in 10 delay classes: class c takes the strided rows
+``dense[c::10]``, is stamped due ``t + perm[c]`` (a per-cycle
+pseudorandom permutation of 1..10 — distinct delays, so distinct target
+slots), and lands as ONE contiguous dynamic-update-slice append per
+slot. This kernel fuses the strided class gather and the DELIVER_T
+column stamp into a single blocked pass over the dense block, emitting
+the staged ``(10, CW, ROWW)`` class blocks plus the per-class append
+count ``k_c = clip(ceil((k_tot - c) / 10), 0, CW)``; the slot
+dynamic-update-slice writes (dynamic slot indices — DMA territory, not
+vector compute) stay in XLA on both paths.
+
+The input dense block must be pre-padded to ``10 * CW`` rows with
+zeros; rows past the compaction count ``k_tot`` are then bit-identical
+between the two paths (the reference reproduces the historical
+per-class slicing exactly, zero ragged-tail pad included), so the wheel
+arenas — live prefix AND dead slack — match bit for bit.
+
+TPU layout note: ROWW (6 + P) rides the lane axis, far under the
+128-lane tile — the kernel is DMA-shaped, not FLOP-shaped, which is
+fine for what is a pure data-movement fusion (see DESIGN.md §Kernels).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.wheel._common import compiler_params, on_tpu
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+NCLASS = 10
+
+
+def enqueue_stage_reference(dense: jnp.ndarray, delays: jnp.ndarray,
+                            t: jnp.ndarray, k_tot: jnp.ndarray,
+                            dt_col: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """XLA path: (staged (10, CW, ROWW) uint32, k_c (10,) int32) from the
+    zero-padded dense block (10*CW, ROWW). `staged[c]` equals the
+    historical ``dense[c::10]`` class slice with DELIVER_T stamped
+    ``t + delays[c]`` on every row (ragged-tail zero pads included)."""
+    cw = dense.shape[0] // NCLASS
+    roww = dense.shape[1]
+    staged = dense.reshape(cw, NCLASS, roww).transpose(1, 0, 2)
+    due = (t + delays).astype(_U32)                     # (10,)
+    col = jnp.arange(roww)
+    staged = jnp.where(col[None, None, :] == dt_col,
+                       due[:, None, None], staged)
+    k_c = jnp.clip((k_tot - jnp.arange(NCLASS, dtype=_I32) + 9) // NCLASS,
+                   0, cw)
+    return staged, k_c
+
+
+def enqueue_stage_kernel(dense: jnp.ndarray, delays: jnp.ndarray,
+                         t: jnp.ndarray, k_tot: jnp.ndarray, dt_col: int,
+                         interpret: bool = True):
+    cw = dense.shape[0] // NCLASS
+    roww = dense.shape[1]
+    dv = dense.reshape(cw, NCLASS, roww)  # [i, c] is dense[i*10 + c]
+
+    def kern(dense_ref, delays_ref, t_ref, kt_ref, staged_ref, kc_ref):
+        c = pl.program_id(0)
+        rows = dense_ref[...][:, 0, :]                  # (CW, ROWW)
+        delay = delays_ref[0, c]
+        due = (t_ref[0, 0] + delay).astype(_U32)
+        col = jax.lax.broadcasted_iota(_I32, (cw, roww), 1)
+        rows = jnp.where(col == dt_col, due, rows)
+        staged_ref[...] = rows[None]
+        kc_ref[0, 0] = jnp.clip((kt_ref[0, 0] - c + 9) // NCLASS, 0, cw)
+
+    staged, k_c = pl.pallas_call(
+        kern,
+        grid=(NCLASS,),
+        in_specs=[
+            pl.BlockSpec((cw, 1, roww), lambda c: (0, c, 0)),
+            pl.BlockSpec((1, NCLASS), lambda c: (0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cw, roww), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((NCLASS, cw, roww), _U32),
+            jax.ShapeDtypeStruct((1, NCLASS), _I32),
+        ],
+        interpret=interpret,
+        compiler_params=compiler_params(interpret),
+    )(dv, jnp.asarray(delays, _I32).reshape(1, NCLASS),
+      jnp.asarray(t, _I32).reshape(1, 1),
+      jnp.asarray(k_tot, _I32).reshape(1, 1))
+    return staged, k_c[0]
+
+
+def enqueue_stage(dense, delays, t, k_tot, dt_col: int,
+                  use_kernel: bool = True, interpret=None):
+    """Dispatch: Pallas class staging, or the XLA reference. `dense`
+    must be zero-padded to a multiple of 10 rows."""
+    assert dense.shape[0] % NCLASS == 0, "dense block must pad to 10*CW rows"
+    if use_kernel and dense.shape[0] >= NCLASS:
+        if interpret is None:
+            interpret = not on_tpu()
+        return enqueue_stage_kernel(dense, delays, t, k_tot, dt_col,
+                                    interpret=interpret)
+    return enqueue_stage_reference(dense, jnp.asarray(delays, _I32), t,
+                                   k_tot, dt_col)

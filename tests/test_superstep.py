@@ -238,6 +238,70 @@ def test_engine_bench_smoke(tmp_path):
 
 
 @pytest.mark.bench
+def test_engine_bench_warm_reuse():
+    """A repeat `bench_backend` call with an identical config must hit
+    the in-process engine cache: no reconstruction/re-jit (the cold
+    ~2.5s setup_s), just a state-snapshot restore."""
+    from benchmarks import engine_bench
+
+    engine_bench._ENGINE_CACHE.clear()
+    cold = engine_bench.bench_backend("jax", 256, cycles=5, reps=1)
+    warm = engine_bench.bench_backend("jax", 256, cycles=5, reps=1)
+    assert "engine_reused" not in cold
+    assert warm.get("engine_reused") is True
+    assert warm["setup_s"] < max(cold["setup_s"], 0.05)
+    # both records carry the deferral-rate counter next to deferred
+    for rec in (cold, warm):
+        assert rec["deferral_rate"] == pytest.approx(
+            rec["deferred"] / max(rec["messages"], 1), abs=1e-4)
+    # identical measured work either way
+    assert warm["messages"] == cold["messages"]
+    assert warm["deferred"] == cold["deferred"]
+
+
+@pytest.mark.bench
+@pytest.mark.slow
+def test_run_smoke_xla_cache_warm(tmp_path):
+    """`benchmarks.run --only engine --smoke` twice from a fresh
+    working dir: the first run populates the persistent XLA cache, the
+    second must fully hit it (no new cache entries) and set up faster."""
+    import os
+    import re
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = repo + os.pathsep + os.path.join(repo, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    # the run must use its own cache under tmp_path (run.py respects an
+    # inherited cache dir, e.g. on CI)
+    env.pop("JAX_COMPILATION_CACHE_DIR", None)
+
+    def smoke():
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", "engine",
+             "--smoke"],
+            capture_output=True, text=True, env=env, cwd=str(tmp_path),
+            timeout=1200,
+        )
+        assert r.returncode == 0, r.stdout + r.stderr
+        m = re.search(r"engine,n=\d+,backend=jax,.*setup_s=([\d.]+)",
+                      r.stdout)
+        assert m, r.stdout
+        return float(m.group(1))
+
+    cache = tmp_path / "results" / ".jax_cache"
+    cold_setup = smoke()
+    entries = set(os.listdir(cache))
+    assert entries, "first --smoke left no persistent XLA cache entries"
+    warm_setup = smoke()
+    assert set(os.listdir(cache)) == entries, \
+        "second --smoke missed the persistent XLA cache (new entries)"
+    assert warm_setup < max(cold_setup, 0.1)
+
+
+@pytest.mark.bench
 def test_sweep_smoke(tmp_path):
     from benchmarks import sweep
 
