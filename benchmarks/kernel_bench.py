@@ -108,7 +108,7 @@ def _wheel_cases(ww: int, pad: int, narrow: int, pw: int = 2):
     from repro.engine import protocol as proto
     from repro.core.dht import Ring
     from repro.kernels.wheel import (due_dedup_reference,
-                                     enqueue_stage_reference)
+                                     stage_rows_reference)
 
     rng = np.random.default_rng(0)
     roww = 6 + pw
@@ -126,17 +126,19 @@ def _wheel_cases(ww: int, pad: int, narrow: int, pw: int = 2):
     cases.append(("due_dedup", ww, f, args,
                   11.0 * ww * 4, 10.0 * ww * ww))
 
-    # enqueue_stage: M=4*WW dense rows through 10 delay classes (DMA)
+    # stage_rows: M=4*WW staged rows, ordinal-ranked DELIVER_T stamp
     m = 4 * ww
-    mp = m + (-m % 10)
-    dense = np.zeros((mp, roww), np.uint32)
-    dense[:m] = rng.integers(0, 2**32, (m, roww), dtype=np.uint64)
-    args = (jnp.asarray(dense), jnp.asarray(rng.permutation(10) + 1,
-                                            jnp.int32),
-            jnp.asarray(7, jnp.int32), jnp.asarray(m - 3, jnp.int32))
-    f = jax.jit(lambda *a: enqueue_stage_reference(*a, dt_col=roww - 1))
-    cases.append(("enqueue_stage", mp, f, args,
-                  2.0 * mp * roww * 4, 1.0 * mp * roww))
+    dense = jnp.asarray(
+        rng.integers(0, 2**32, (m, roww), dtype=np.uint64), jnp.uint32)
+    mask = rng.random(m) < 0.8
+    ordinal = np.cumsum(mask) - 1
+    args = (dense, jnp.asarray(rng.random(m) < 0.05),
+            jnp.asarray(ordinal, jnp.int32),
+            jnp.asarray(rng.permutation(10) + 1, jnp.int32),
+            jnp.asarray(7, jnp.int32))
+    f = jax.jit(lambda *a: stage_rows_reference(*a, dt_col=roww - 1))
+    cases.append(("stage_rows", m, f, args,
+                  2.0 * m * roww * 4, 12.0 * m))
 
     # descent tail: `narrow` survivors x data-dependent R1 depth
     n_ring = 256

@@ -129,11 +129,12 @@ def main() -> None:
             ("engine_sharded", lambda c: engine_bench.run_sharded(
                 c, rows=engine_bench.SHARDED_ROWS[:1],
                 out_path=sp("BENCH_engine.json"))),
-            # numpy-only: the device engine's churn programs cost tens
-            # of seconds of one-time jit — too slow for the smoke gate;
-            # the full bench and the churn-marked tests cover the jax path
+            # device churn re-enabled: the grow/re-pad path no longer
+            # rebuilds the jitted programs (jax.jit retraces per shape),
+            # so jax churn is one join/leave trace + reuse, not a per-
+            # event re-jit storm
             ("churn", lambda c: churn.run(
-                c, sizes=(256,), events=4, backends=("numpy",),
+                c, sizes=(256,), events=4, backends=("numpy", "jax"),
                 out_path=sp("BENCH_churn.json"))),
             ("sweep", lambda c: sweep.run(
                 c, **sweep.SMOKE, margins=(0.3, 0.7), backend=b,

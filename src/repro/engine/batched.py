@@ -114,15 +114,17 @@ class BatchedJaxEngine:
 
     @property
     def messages_sent(self) -> np.ndarray:
-        return np.asarray(self._st.messages_sent)
+        # counters are per-lane (B, L) under the partitioned wheel —
+        # the trial-level figure is the lane sum
+        return np.asarray(self._st.messages_sent).sum(-1)
 
     @property
     def dropped(self) -> np.ndarray:
-        return np.asarray(self._st.dropped)
+        return np.asarray(self._st.dropped).sum(-1)
 
     @property
     def deferred(self) -> np.ndarray:
-        return np.asarray(self._st.deferred)
+        return np.asarray(self._st.deferred).sum(-1)
 
     def outputs(self) -> np.ndarray:
         """(B, n) current 0/1 outputs, all trials."""

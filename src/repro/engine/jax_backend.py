@@ -11,24 +11,30 @@ programs:
     evaluates the Alg. 3 convergence predicate on device every cycle and
     early-exits through the loop carry, syncing with the host once per
     *chunk* (default 256 cycles) instead of twice per cycle;
-  * the message store is a **delivery wheel**: messages bucketed by
+  * the message store is an **owner-partitioned delivery wheel**: the
+    peer rows are cut into ``lanes`` equal row blocks (the owner lanes),
+    and each lane keeps its own wheel — messages bucketed by
     ``deliver_t mod (MAX_DELAY+1)`` into 11 dense per-slot row arenas
-    (plus a small ALERT side-wheel), so the per-cycle due-scan is a
-    contiguous slice of one bucket — not a mask over all C rows — and
-    enqueues are contiguous dynamic-update-slice appends, not row
-    scatters (DESIGN.md §Engine, delivery-wheel invariants);
-  * per-cycle work is *budgeted*: the drain window is the first
-    ``work_budget`` rows of the due bucket (ALERT side-wheel rows always
-    ride ahead of data). Over-budget rows slip one cycle into the next
-    bucket; pathological bursts beyond that stay in place and are
-    revisited a wheel revolution later (both counted ONCE per row in
-    ``deferred`` via the LATE row bit — the protocol tolerates
-    arbitrary delays by design);
+    (plus a small ALERT side-wheel) *of the lane that owns the
+    destination address*. The per-cycle due-scan, the accept dedup
+    election, the ALERT drain and the deferral accounting are all
+    lane-local; the only lane-crossing step is the staged **boundary
+    exchange** that routes freshly appended rows to their owner lane
+    (identity on one device; one all-gather per cycle on a mesh, where
+    `engine.sharded` shards the lane axis so per-device wheel memory is
+    O(n/devices) — DESIGN.md §Sharding);
+  * per-cycle work is *budgeted per lane*: the drain window is the first
+    ``work_budget / lanes`` rows of each lane's due bucket (ALERT
+    side-wheel rows always ride ahead of data). Over-budget rows slip
+    one cycle into the next bucket; pathological bursts beyond that stay
+    in place and are revisited a wheel revolution later (both counted
+    ONCE per row in ``deferred`` via the LATE row bit — the protocol
+    tolerates arbitrary delays by design);
   * the cycle's hot loops have Pallas kernel forms (`kernels.wheel`:
-    fused due-scan/dedup election, enqueue class staging, the blocked
-    R1 descent tail, and the problem-generic fused threshold step) —
-    each behind an individual `use_kernel` fallback flag, bit-identical
-    to the XLA paths that remain THE semantic reference;
+    fused due-scan/dedup election, the staged-row delay stamp, the
+    blocked R1 descent tail, and the problem-generic fused threshold
+    step) — each behind an individual `use_kernel` fallback flag,
+    bit-identical to the XLA paths that remain THE semantic reference;
   * routing uses the jnp path of `core.addressing`'s bit algebra through
     the same `engine.protocol.deliver_rules` the numpy backend consumes;
     the R1 internal-descent loop is a `lax.while_loop` over live masks;
@@ -38,10 +44,12 @@ programs:
     serves the full-width event paths (init, vote changes) and stays the
     TPU fast path there;
   * message delays are a per-cycle pseudorandom *permutation* of 1..10
-    assigned by position within the cycle's append block (event-path
-    enqueues keep the per-row splitmix hash). Either way the delay only
-    has to decorrelate peers (paper §4); seeds still make runs
-    reproducible and independent of numpy's global RNG state.
+    assigned by each staged row's ordinal WITHIN ITS LANE's append
+    block (event-path enqueues keep the per-row splitmix hash). The
+    lane-relative ordinal is what makes the delay assignment — and
+    therefore the whole trajectory — independent of how many lanes are
+    co-resident on a device (mesh-size invariance). Seeds still make
+    runs reproducible and independent of numpy's global RNG state.
 
 All RNG material (delay permutations, hash salts) lives inside
 `DeviceState`, so the whole superstep `vmap`s over stacked states —
@@ -49,22 +57,33 @@ All RNG material (delay permutations, hash salts) lives inside
 program on exactly this cycle body.
 
 Every cycle-body access to the O(n) peer state (x / inbox / out) flows
-through the `PeerPlane` layer below; `engine.sharded` swaps in
-collective implementations and runs this same cycle body under
-`shard_map` with the peer plane block-sharded over a device mesh —
-trajectory bit-identical by construction (DESIGN.md §Sharding).
+through the `PeerPlane` layer below, and every lane-crossing wheel move
+flows through its `exchange` / `lane_base` hooks; `engine.sharded`
+swaps in collective implementations and runs this same cycle body under
+`shard_map` with the peer plane AND the wheel's lane axis block-sharded
+over a device mesh — trajectory bit-identical by construction
+(DESIGN.md §Sharding).
 
 Dynamic membership (Alg. 2, DESIGN.md §Churn): the ring lives *inside*
 `DeviceState` as padded sorted-prefix tables — rows [0, n_live) hold the
 occupied addresses ascending, rows above are 0xFFFFFFFF sentinels (the
 occupancy mask is the prefix predicate `arange < n_live`) — so `join` /
 `leave` are jitted gather-shifts plus one row scatter, and the owner
-lookup stays a single padded binary search. ALERT messages ride the
-side-wheel at one cycle per hop (control plane: an alert is always
-processed before any data due the same cycle, so along the identical
-route it strictly precedes the data its event re-sent). Re-jit
-(recompilation) happens only when a join outgrows the padded capacity
-and the tables are rebuilt one size up.
+lookup stays a single padded binary search. A membership change moves
+the owner-row boundaries, so the churn tail re-fences AND re-lanes the
+in-flight wheel rows through the same boundary exchange (rows whose
+destination now belongs to another lane migrate; stale-origin data rows
+drop, per R3). ALERT messages ride the side-wheel at one cycle per hop.
+Re-jit (recompilation) happens only when a join outgrows the padded
+capacity and the tables are rebuilt one size up — the jitted program
+objects are built ONCE and retrace per shape, so repeated churn at a
+stable pad never recompiles.
+
+Conservation invariant (checked by `check_conservation`): summed over
+lanes, ``enqueued == retired + in_flight + dropped`` — every row ever
+appended to a wheel arena is eventually drained (retired), still live,
+or accounted as dropped. Per-lane counters make the sum exact with no
+cross-shard double counting.
 
 Addresses are uint32 on device (JAX default config has no uint64), so
 rings must use d <= 32 bits. Counters are int32. Cross-backend
@@ -88,7 +107,7 @@ from repro.engine.base import EngineResult, run_convergence_loop
 from repro.engine.problems import Majority, get_problem
 from repro.kernels.majority_step.ops import _on_tpu, majority_step
 from repro.kernels.wheel import (WHEEL_KERNELS, descent_tail, due_dedup,
-                                 enqueue_stage, threshold_step)
+                                 stage_rows, threshold_step)
 
 NDIR = 3
 _I32 = jnp.int32
@@ -115,7 +134,11 @@ NO_ADDR = np.uint32(0xFFFFFFFF)  # padded-ring sentinel: row is vacant
 
 SLOTS = MAX_DELAY + 1   # delivery-wheel slots; delays 1..10 never wrap a slot
 NPERM = 16              # per-cycle delay permutations kept in DeviceState
-ALERT_W = 64            # ALERT side-wheel rows per slot (<= 6 per churn event)
+ALERT_W = 64            # ALERT side-wheel row baseline (per-lane floor below)
+MAX_LANES = 8           # owner-lane count cap (= max supported mesh size)
+# staged boundary-exchange meta column bits (row is live / is an ALERT)
+META_LIVE = np.uint32(1)
+META_ALERT = np.uint32(2)
 
 
 def _next_pow2(v: int) -> int:
@@ -220,65 +243,86 @@ class DeviceState(NamedTuple):
     """Complete simulation state; every leaf is a device array.
 
     Peer rows are padded to `pad` entries; the occupied rows are the
-    sorted prefix [0, n_live) (vacant address rows hold NO_ADDR).
-    `engine.batched` stacks a leading batch axis over every leaf and
-    vmaps the cycle body — all RNG material is therefore state, not
-    Python closure.
+    sorted prefix [0, n_live) (vacant address rows hold NO_ADDR). The
+    wheel arenas and the wheel counters carry a leading owner-lane axis
+    (L = `JaxEngine.lanes`; a row lives in the lane owning its DEST
+    address) — `engine.sharded` shards exactly that axis, everything
+    without it is replicated. `engine.batched` stacks a leading batch
+    axis over every leaf and vmaps the cycle body — all RNG material is
+    therefore state, not Python closure.
     """
 
     # Alg. 3 peer state (P = problem payload width; majority: D=1, P=2)
     x: jnp.ndarray      # (pad, D)      int32 own data (majority: votes)
     inbox: jnp.ndarray  # (pad*3, P+1)  int32 per-link [X_in payload, last_seq]
     out: jnp.ndarray    # (pad, 3P+1)   int32 [X_out component c per dir]*P, seq
-    # ring membership (sorted-prefix padded tables)
+    # ring membership (sorted-prefix padded tables; replicated)
     addrs: jnp.ndarray  # (pad,) uint32, ascending prefix then NO_ADDR
     prev: jnp.ndarray   # (pad,) uint32 predecessor addresses (cyclic)
     pos: jnp.ndarray    # (pad,) uint32 tree positions
     n_live: jnp.ndarray  # ()    int32 occupied row count
-    # delivery wheel: dense per-slot arenas bucketed by deliver_t mod SLOTS
-    wheel: jnp.ndarray   # (SLOTS, W, ROWW)       uint32 data rows
-    wcnt: jnp.ndarray    # (SLOTS,)                int32 live rows per slot
-    awheel: jnp.ndarray  # (SLOTS, ALERT_W, ROWW)  uint32 Alg. 2 ALERT rows
-    acnt: jnp.ndarray    # (SLOTS,)            int32
+    # owner-partitioned delivery wheel: per-lane dense per-slot arenas
+    # bucketed by deliver_t mod SLOTS
+    wheel: jnp.ndarray   # (L, SLOTS, W_l, roww)  uint32 data rows
+    wcnt: jnp.ndarray    # (L, SLOTS)             int32 live rows per slot
+    awheel: jnp.ndarray  # (L, SLOTS, A_l, roww)  uint32 Alg. 2 ALERT rows
+    acnt: jnp.ndarray    # (L, SLOTS)             int32
     # RNG material (state, so the superstep vmaps)
     perms: jnp.ndarray     # (NPERM, 10) int32 delay permutations of 1..10
     salt_enq: jnp.ndarray  # ()          uint32 event-path delay salt
-    # counters
-    t: jnp.ndarray              # () int32
-    messages_sent: jnp.ndarray  # () int32 network deliveries consumed
-    dropped: jnp.ndarray        # () int32 arena overflow (should stay 0)
-    deferred: jnp.ndarray       # () int32 deliveries pushed past the budget
+    evt_ctr: jnp.ndarray   # ()          int32 event counter (delay decorrelator)
+    # counters (per lane where the work is lane-local; hosts read sums)
+    t: jnp.ndarray              # ()   int32
+    messages_sent: jnp.ndarray  # (L,) int32 network deliveries consumed
+    dropped: jnp.ndarray        # (L,) int32 arena overflow (should stay 0)
+    deferred: jnp.ndarray       # (L,) int32 deliveries pushed past the budget
+    enq: jnp.ndarray            # (L,) int32 rows ever appended (conservation)
+    ret: jnp.ndarray            # (L,) int32 rows ever drained/retired
 
 
 class PeerPlane:
-    """Access layer for the peer plane — the O(n) per-peer state leaves
-    (`x`, `inbox`, `out`) plus the occupancy/convergence reductions over
-    them. Every read or write the cycle body performs against those
-    leaves goes through this object, and NOTHING else in the cycle does
-    (the wheel, the ring tables and the counters are control plane).
+    """Access layer for the partitioned planes — the O(n) per-peer state
+    leaves (`x`, `inbox`, `out`), the occupancy/convergence reductions
+    over them, AND the owner-lane boundary hooks of the delivery wheel
+    (`lane_base` / `exchange` / `shift_rows`). Every read or write the
+    cycle body performs against those leaves goes through this object,
+    and NOTHING else in the cycle does (the replicated ring tables and
+    the scalar counters are read directly).
 
     This is the single-device implementation: plain gathers/scatters,
-    global row indices ARE array indices. `repro.engine.sharded`
-    substitutes `ShardedPlane`, where each device holds one contiguous
-    row block and the same methods become masked local ops plus a
-    window-sized psum/pmax boundary exchange — the cycle body itself is
-    shared verbatim, which is what makes the sharded engine trajectory
-    bit-identical to this one (DESIGN.md §Sharding).
+    global row indices ARE array indices, the exchange is the identity.
+    `repro.engine.sharded` substitutes `ShardedPlane`, where each device
+    holds one contiguous peer-row block plus the matching owner lanes,
+    and the same methods become local ops plus the staged lane exchange
+    — the cycle body itself is shared verbatim, which is what makes the
+    sharded engine trajectory bit-identical to this one (DESIGN.md
+    §Sharding).
 
     Index contract: `idx` arguments are GLOBAL row indices (peer rows
     for `*_peer`, flat peer*NDIR+dir links for `*_link`); scatter
     sentinels at `pad` / `pad * NDIR` drop. Gather `idx` must be valid
     rows — callers mask results instead (matching the historical code).
+    Since every in-flight wheel row sits in the lane of its DEST owner,
+    all drain-path peer/link accesses are lane-local by invariant; on
+    the sharded plane they need no collective at all.
     """
 
     def __init__(self, eng: "JaxEngine"):
         self.eng = eng
 
-    # -- gathers (window-sized replicated idx -> replicated values) ---------
+    # -- gathers (window-sized idx -> values) -------------------------------
     def take_peer(self, arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
         return arr[idx]
 
     def take_link(self, arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        return arr[idx]
+
+    def take_peer_rep(self, arr: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+        """Gather peer rows at GLOBAL indices with a REPLICATED result
+        (churn movers — the rows may be owned by any shard, unlike the
+        lane-local drain path). Identity gather here; masked local
+        gather + one psum on the sharded plane. Event path only, never
+        per-cycle."""
         return arr[idx]
 
     # -- scatters (window-sized rows into the plane; sentinel drops) --------
@@ -296,7 +340,8 @@ class PeerPlane:
         """Dense per-link max of `val` over the masked window rows
         (fill -1). The returned handle is only ever read back through
         `link_read` / `link_read3` / `peer_dirmax` — its layout is the
-        plane's business (the sharded plane returns a local block)."""
+        plane's business (the sharded plane returns a local block; the
+        drain path only ever reads links it owns, so no collective)."""
         nl = self.eng.pad * NDIR
         return jnp.full(nl, -1, _I32).at[jnp.where(mask, idx, nl)].max(
             jnp.where(mask, val, -1), mode="drop")
@@ -325,6 +370,27 @@ class PeerPlane:
     def all_true(self, v: jnp.ndarray) -> jnp.ndarray:
         """Scalar AND over a per-row predicate (replicated result)."""
         return v.all()
+
+    # -- owner-lane boundary (wheel partition) ------------------------------
+    def lane_base(self, n_loc: int) -> jnp.ndarray:
+        """Global lane index of this plane's first local lane."""
+        return jnp.zeros((), _I32)
+
+    def exchange(self, arr: jnp.ndarray) -> jnp.ndarray:
+        """Lane boundary exchange: (L_local, ...) staged per-lane blocks
+        -> the (L, ...) GLOBAL lane-major concatenation, identical on
+        every participant. Identity on one device; one tiled all_gather
+        over the mesh axis on the sharded plane. Every appended wheel
+        row rides this exactly once, so append ranks — and therefore
+        slot offsets — are bit-identical at every mesh size."""
+        return arr
+
+    def shift_rows(self, arr: jnp.ndarray, src: jnp.ndarray) -> jnp.ndarray:
+        """Gather-shift a peer-indexed table by the global source map
+        `src` (join/leave row recompaction). The sharded plane routes
+        this through an explicit all_gather + local slice — an event
+        path, never per-cycle."""
+        return arr[src]
 
     # -- event path (full-width reacts) -------------------------------------
     def local_tables(self, st: "DeviceState"):
@@ -404,6 +470,10 @@ class JaxEngine:
             raise ValueError(f"pad_to={pad_to} below ring size {self.n}")
         self._size_tables()
         self._plane = self._make_plane()
+        # jitted program objects are built ONCE; jax.jit retraces per
+        # input shape, so a later `_grow` (pad change) compiles the new
+        # shape on first use without discarding anything — no per-churn
+        # re-jit storm
         self._make_programs()
 
         if _defer_state:  # engine.batched builds (stacked) state itself
@@ -413,34 +483,47 @@ class JaxEngine:
         self._st = self._react(st, occ)
 
     def _size_tables(self):
+        # owner-lane partition of the peer rows: lane = row // lane_rows.
+        # The lane count is the largest power-of-two divisor of the pad,
+        # capped at MAX_LANES (power-of-two pads — the default — always
+        # get the full MAX_LANES; explicit odd pads degrade gracefully).
+        # A sharded mesh must divide the lane count evenly.
+        self.lanes = min(MAX_LANES, self.pad & -self.pad)
+        self.lane_rows = self.pad // self.lanes
+        L = self.lanes
         # drain-window budget: downstream scatter/deliver work per cycle
         # scales with this, so it tracks the steady active-phase due rate
-        # (well under n/8 with 1..10-cycle delays); overflow only defers
-        self.work_budget = self._wb_req or max(512, self.pad // 8)
-        # per-slot arena capacity; the wheel totals SLOTS*cap live rows
-        # (comparable to the old flat table's capacity_per_peer*pad, and
-        # several times the observed steady in-flight row count). The
-        # 128-row floor (scaled down with an explicitly tiny
-        # capacity_per_peer — the overflow tests rely on small caps)
-        # absorbs the full-width data-change storms of the mean/L2
-        # problems at small pads (majority flips stay well under it;
-        # capacity never alters a non-overflowing trajectory).
-        self.slot_cap = max(min(128, 32 * self._cpp),
-                            self._cpp * self.pad // 16)
-        # physical slot width: capacity + slack for the widest contiguous
-        # append — the one-cycle slip block (B rows) or a delay-class
-        # block (ceil(4*window/10) rows, which EXCEEDS B for small
-        # budgets since the window includes the alert side-rows). Slack
-        # below the widest write would let dynamic_update_slice clamp
-        # its start backwards over live rows — silent corruption.
-        class_w = -(-4 * (ALERT_W + self.work_budget) // 10)
-        slack = max(self.work_budget, class_w)
-        self.slot_width = max(self.slot_cap, self.work_budget) + slack
-        self.capacity = SLOTS * (self.slot_cap + ALERT_W)
-        # R1 narrow-tail width: after two full-width descent steps only a
-        # few percent of the window is still descending (measured); the
-        # while_loop tail runs at this width instead of the window's
-        self.narrow = max(64, self.work_budget // 8)
+        # (well under n/8 with 1..10-cycle delays); overflow only defers.
+        # Budgeted PER LANE so the drain is lane-local and mesh-invariant
+        b_req = self._wb_req or max(512, self.pad // 8)
+        self.lane_budget = max(1, b_req // L)
+        self.work_budget = self.lane_budget * L  # effective global budget
+        # per-lane per-slot arena capacity; the wheel totals
+        # L*SLOTS*cap live data rows (comparable to the historical global
+        # slot_cap — the floors keep the tiny-capacity overflow tests
+        # and the small-pad event storms behaving as before)
+        self.lane_cap = max(4, min(128, 32 * self._cpp) // min(L, 4),
+                            self._cpp * self.pad // (16 * L))
+        self.slot_cap = self.lane_cap  # per-lane per-slot bound (tests)
+        # ALERT side-wheel rows per lane per slot: >= 16 so two
+        # back-to-back churn events (<= 12 routed alerts) never overflow
+        # even if every alert lands in one lane's slot
+        self.lane_alert_w = max(16, ALERT_W // L)
+        # physical lane-slot width: capacity + slack for the widest
+        # contiguous write — the one-cycle slip block (lane_budget rows).
+        # Appends are ranked scatters bounded by `lane_cap`, so the slip
+        # dynamic-update-slice is the only writer that needs slack
+        self.lane_width = max(self.lane_cap, self.lane_budget) + self.lane_budget
+        self.capacity = L * SLOTS * (self.lane_cap + self.lane_alert_w)
+        # per-lane drain-window width (alerts ride ahead of data)
+        self.window_l = self.lane_alert_w + self.lane_budget
+        # R1 narrow-tail width PER LANE: after two full-width descent
+        # steps only a few percent of the window is still descending
+        # (measured); >= lane_alert_w + 8 so ALERTs can never spill into
+        # the data wheel (they must forward at one cycle per hop)
+        self.narrow_l = max(self.lane_alert_w + 8, self.window_l // 8)
+        # churn-migration staging rows per lane (boundary re-lane)
+        self.mig_w = max(32, self.lane_cap // 4)
 
     def _make_plane(self) -> PeerPlane:
         return PeerPlane(self)
@@ -458,7 +541,7 @@ class JaxEngine:
         """Fresh `DeviceState` for (ring, votes, seed) — before the
         initialization react. Host-side so `engine.batched` can stack B
         of them cheaply."""
-        pd, W = self.pad, self.slot_width
+        pd, L = self.pad, self.lanes
         rng = np.random.default_rng(seed)
         salt = np.uint32(rng.integers(0, 2**32, dtype=np.uint64))
         perms = np.stack([rng.permutation(10) + MIN_DELAY
@@ -475,14 +558,17 @@ class JaxEngine:
             addrs=jnp.asarray(addrs),
             prev=jnp.zeros(pd, _U32), pos=jnp.zeros(pd, _U32),
             n_live=jnp.asarray(self.n, _I32),
-            wheel=jnp.zeros((SLOTS, W, self.roww), _U32),
-            wcnt=jnp.zeros(SLOTS, _I32),
-            awheel=jnp.zeros((SLOTS, ALERT_W, self.roww), _U32),
-            acnt=jnp.zeros(SLOTS, _I32),
+            wheel=jnp.zeros((L, SLOTS, self.lane_width, self.roww), _U32),
+            wcnt=jnp.zeros((L, SLOTS), _I32),
+            awheel=jnp.zeros((L, SLOTS, self.lane_alert_w, self.roww), _U32),
+            acnt=jnp.zeros((L, SLOTS), _I32),
             perms=jnp.asarray(perms),
             salt_enq=jnp.asarray(salt, _U32),
-            t=jnp.zeros((), _I32), messages_sent=jnp.zeros((), _I32),
-            dropped=jnp.zeros((), _I32), deferred=jnp.zeros((), _I32),
+            evt_ctr=jnp.zeros((), _I32),
+            t=jnp.zeros((), _I32),
+            messages_sent=jnp.zeros(L, _I32),
+            dropped=jnp.zeros(L, _I32), deferred=jnp.zeros(L, _I32),
+            enq=jnp.zeros(L, _I32), ret=jnp.zeros(L, _I32),
         )
         return st._replace(**self._ring_views(st.addrs, st.n_live))
 
@@ -496,6 +582,13 @@ class JaxEngine:
         sentinels sort above every query)."""
         return (jnp.searchsorted(addrs, q, side="left").astype(_I32)
                 % n_live.astype(_I32))
+
+    def _lane_of(self, addrs: jnp.ndarray, n_live: jnp.ndarray,
+                 dest: jnp.ndarray) -> jnp.ndarray:
+        """Owner lane of each destination address: the ownership rule of
+        the partitioned wheel (DESIGN.md §8)."""
+        return (self._owner_of(addrs, n_live, dest)
+                // self.lane_rows).astype(_I32)
 
     def _ring_views(self, addrs: jnp.ndarray, n_live: jnp.ndarray) -> dict:
         """Recompute prev/pos from the padded address table (vacant rows
@@ -530,6 +623,56 @@ class JaxEngine:
             cum, jnp.arange(1, budget + 1, dtype=_I32), side="left"
         ).astype(_I32)
         return idx, cum
+
+    @staticmethod
+    def _group_ranks(g: jnp.ndarray, live: jnp.ndarray, n_groups: int):
+        """Stable within-group ranks + per-group counts for a flat row
+        batch: rank[i] = #live rows j < i with g[j] == g[i]. One stable
+        argsort over the group keys (dead rows key to `n_groups`), a
+        searchsorted for the group starts, and a scatter back — the
+        deterministic multi-append primitive of the partitioned wheel
+        (ranks depend only on the GLOBAL row order, which the boundary
+        exchange fixes lane-major, so appends are mesh-invariant)."""
+        m = g.shape[0]
+        key = jnp.where(live, g, n_groups).astype(_I32)
+        order = jnp.argsort(key, stable=True).astype(_I32)
+        ks = key[order]
+        first = jnp.searchsorted(ks, ks, side="left").astype(_I32)
+        rank_sorted = jnp.arange(m, dtype=_I32) - first
+        rank = jnp.zeros(m, _I32).at[order].set(rank_sorted)
+        counts = jnp.zeros(n_groups + 1, _I32).at[key].add(1)[:n_groups]
+        return rank, counts
+
+    def _append_rows(self, buf, cnt, rows, lane, slot, live, cap, base):
+        """Append the GLOBAL `rows` batch into the local lane arenas.
+
+        `buf` (Ln, SLOTS, width, roww) / `cnt` (Ln, SLOTS) are the LOCAL
+        lane block starting at global lane `base`; `rows` (m, roww) with
+        per-row `lane`/`slot`/`live` describe the whole (replicated)
+        exchange output. Rows land at cnt + stable-rank within their
+        (lane, slot) group; overflow past `cap` drops. Returns
+        (buf, cnt, attempted (Ln,), dropped (Ln,)) — attempted counts
+        every live row destined to a local lane (conservation `enq`),
+        dropped the overflowed ones."""
+        Ln, width, roww = cnt.shape[0], buf.shape[2], buf.shape[3]
+        ng = self.lanes * SLOTS
+        g = lane * SLOTS + slot
+        rank, counts = self._group_ranks(g, live, ng)
+        lloc = lane - base
+        owned = live & (lloc >= 0) & (lloc < Ln)
+        lsafe = jnp.where(owned, lloc, 0)
+        off = cnt[lsafe, slot] + rank
+        ok = owned & (off < cap)
+        flat = jnp.where(ok, (lsafe * SLOTS + slot) * width + off,
+                         Ln * SLOTS * width)
+        nbuf = buf.reshape(Ln * SLOTS * width, roww).at[flat].set(
+            rows, mode="drop").reshape(buf.shape)
+        counts_loc = jax.lax.dynamic_slice_in_dim(
+            counts.reshape(self.lanes, SLOTS), base, Ln, axis=0)  # (Ln, SLOTS)
+        added = jnp.minimum(counts_loc, cap - cnt)
+        ncnt = cnt + added
+        attempted = counts_loc.sum(1)
+        return nbuf, ncnt, attempted, attempted - added.sum(1)
 
     def _out_pay(self, out: jnp.ndarray) -> jnp.ndarray:
         """(..., 3P+1) out rows -> (..., 3, P) X_out payload planes
@@ -586,49 +729,46 @@ class JaxEngine:
         return self._plane.all_true(
             self.problem.converged(jnp, out, truth) | ~occ)
 
-    # -- event-path enqueue (scatter append; any width, per-row hash delay) --
+    # -- event-path enqueue (ranked append; any width, per-row hash delay) --
 
     def _enqueue_events(self, st: DeviceState, cand, origin, dest, edge,
                         has_edge, pay, seq,
                         alert: bool = False) -> DeviceState:
         """Append the `cand` rows of an *event* (init / data change /
-        churn) to the wheel: slot = deliver_t mod SLOTS, offset = current
-        count + rank-within-slot. One flat row scatter — event paths are
-        occasional, so the scatter cost is paid per event, not per cycle.
-        ALERT rows go to the side-wheel, due immediately. All args are
-        flat: (m,) meta columns and (m, P) payload."""
+        churn) to the wheel of the DEST owner's lane. The inputs are the
+        GLOBAL event block (callers `gather_events` first), so the
+        within-group append ranks are mesh-invariant; each plane appends
+        only the rows whose owner lane it holds. ALERT rows go to the
+        side-wheel, due immediately. All args are flat: (m,) meta
+        columns and (m, P) payload."""
         m = cand.shape[0]
-        roww = self.roww
         u = lambda a: a.astype(_U32)
         if alert:
-            buf, cnt, cap, width = st.awheel, st.acnt, ALERT_W, ALERT_W
             due = jnp.broadcast_to(st.t, (m,))
         else:
-            buf, cnt, cap, width = st.wheel, st.wcnt, self.slot_cap, self.slot_width
             due = st.t + _hash_delay(
-                jnp.arange(m, dtype=_I32), st.t + st.messages_sent, st.salt_enq
+                jnp.arange(m, dtype=_I32), st.t + st.evt_ctr, st.salt_enq
             )
-        slot = due % SLOTS
-        onehot = (slot[:, None] == jnp.arange(SLOTS)[None, :]) & cand[:, None]
-        rank = jnp.take_along_axis(
-            jnp.cumsum(onehot.astype(_I32), axis=0), slot[:, None], axis=1
-        )[:, 0] - 1
-        off = cnt[slot] + rank
-        ok = cand & (off < cap)
         rows = jnp.stack(
             [u(origin), u(dest), u(edge), u(has_edge)]
             + [u(pay[:, c]) for c in range(self.pw)]
             + [u(seq), u(due)],
             axis=1,
         )  # (m, roww)
-        flat = jnp.where(ok, slot * width + off, SLOTS * width)
-        nbuf = buf.reshape(SLOTS * width, roww).at[flat].set(
-            rows, mode="drop").reshape(SLOTS, width, roww)
-        ncnt = cnt + (onehot & ok[:, None]).sum(0).astype(_I32)
-        dropped = st.dropped + (cand & ~ok).sum().astype(_I32)
+        lane = self._lane_of(st.addrs, st.n_live, u(dest))
+        slot = (due % SLOTS).astype(_I32)
+        base = self._plane.lane_base(st.wcnt.shape[0])
         if alert:
-            return st._replace(awheel=nbuf, acnt=ncnt, dropped=dropped)
-        return st._replace(wheel=nbuf, wcnt=ncnt, dropped=dropped)
+            buf, cnt, cap = st.awheel, st.acnt, self.lane_alert_w
+        else:
+            buf, cnt, cap = st.wheel, st.wcnt, self.lane_cap
+        buf, cnt, att, dro = self._append_rows(
+            buf, cnt, rows, lane, slot, cand, cap, base)
+        st = st._replace(enq=st.enq + att, dropped=st.dropped + dro,
+                         evt_ctr=st.evt_ctr + 1)
+        if alert:
+            return st._replace(awheel=buf, acnt=cnt)
+        return st._replace(wheel=buf, wcnt=cnt)
 
     def _react_impl(self, st: DeviceState, touched: jnp.ndarray) -> DeviceState:
         """Threshold test() + Send(v) for all `touched` peers (full-width
@@ -663,33 +803,44 @@ class JaxEngine:
     # -- the cycle (superstep body) ------------------------------------------
 
     def _cycle_impl(self, st: DeviceState) -> DeviceState:
-        """One simulation cycle: drain the due wheel slot, route, accept,
-        react, append forwards/sends to their due slots."""
+        """One simulation cycle: drain each local lane's due bucket,
+        route, accept, react; stage every re-entering/new row with its
+        lane-relative delay ordinal; one boundary exchange routes the
+        staged rows to their owner lanes for the ranked appends."""
         pd, d = self.pad, self.d  # GLOBAL pad: sentinel/index space (the
         # plane's x rows may be a shard-local block of it)
-        B, W, cap = self.work_budget, self.slot_width, self.slot_cap
-        WW = ALERT_W + B  # drain-window width (alerts always ride ahead)
-
+        L = self.lanes
+        Bl, Al = self.lane_budget, self.lane_alert_w
+        WWl, Wl, cap = self.window_l, self.lane_width, self.lane_cap
         roww = self.roww
+        Ln = st.wcnt.shape[0]  # LOCAL lanes (= L on one device)
+        WW = Ln * WWl          # local drain-window width, lane-major
+
         s = (st.t % SLOTS).astype(_I32)
         s1 = ((st.t + 1) % SLOTS).astype(_I32)
+        # one materialized read of each lane's due slot: window, slip
+        # block and leftover shift all source from `sbuf`, so the wheel
+        # itself is only ever *written* below — XLA aliases the whole
+        # update chain in place
         abuf = jax.lax.dynamic_slice(
-            st.awheel, (s, 0, 0), (1, ALERT_W, roww))[0]
-        # one materialized read of the due slot: window, slip block and
-        # leftover shift all source from `sbuf`, so the wheel itself is
-        # only ever *written* below — XLA aliases the whole update chain
-        # in place (a read-while-write would force a full-wheel copy)
-        sbuf = jax.lax.dynamic_slice(st.wheel, (s, 0, 0), (1, W, roww))[0]
-        dbuf = sbuf[: 2 * B]
-        n_alert = st.acnt[s]
-        dcnt = st.wcnt[s]
-        n_data = jnp.minimum(dcnt, B)
+            st.awheel, (0, s, 0, 0), (Ln, 1, Al, roww))[:, 0]
+        sbuf = jax.lax.dynamic_slice(
+            st.wheel, (0, s, 0, 0), (Ln, 1, Wl, roww))[:, 0]
+        n_alert = jax.lax.dynamic_slice_in_dim(st.acnt, s, 1, axis=1)[:, 0]
+        dcnt = jax.lax.dynamic_slice_in_dim(st.wcnt, s, 1, axis=1)[:, 0]
+        n_data = jnp.minimum(dcnt, Bl)  # (Ln,)
 
-        w = jnp.concatenate([abuf, dbuf[:B]], axis=0)  # (WW, roww)
+        # lane-major window: per lane [A_l alert rows, B_l data rows].
+        # The per-lane layout is mesh-size invariant, so every
+        # within-lane index computed below is too
+        w = jnp.concatenate([abuf, sbuf[:, :Bl]], axis=1).reshape(WW, roww)
+        li = jnp.arange(WWl, dtype=_I32)
+        is_alert_l = li < Al
+        live = jnp.where(is_alert_l[None, :], li[None, :] < n_alert[:, None],
+                         (li - Al)[None, :] < n_data[:, None]).reshape(WW)
+        is_alert = jnp.broadcast_to(is_alert_l[None, :], (Ln, WWl)).reshape(WW)
         wi = jnp.arange(WW, dtype=_I32)
-        is_alert = wi < ALERT_W
-        live = jnp.where(is_alert, wi < n_alert, wi - ALERT_W < n_data)
-        has_alerts = n_alert > 0
+        has_alerts = n_alert.sum() > 0
         w_origin, w_dest, w_edge = w[:, ORIGIN], w[:, DEST], w[:, EDGE]
         w_has_edge = ((w[:, HAS_EDGE] & _U32(1)) != 0) & live
         w_cont = (w[:, HAS_EDGE] & CONT) != 0
@@ -706,7 +857,7 @@ class JaxEngine:
         # ---- Alg. 1 delivery, two-phase (shared rules with
         # deliver_network_step, restructured for the width/latency split:
         # two full-width descent steps settle all but a few percent of
-        # the window; the while_loop tail then runs at `narrow` width).
+        # the window; the while_loop tail then runs at narrow width).
         entry = live & ~w_cont
         lv, cur_d, cur_e, cur_h = live, w_dest, w_edge, w_has_edge
         false_b = jnp.zeros(WW, bool)
@@ -732,17 +883,24 @@ class JaxEngine:
             cur_h = jnp.where(stay, dlv.new_has_edge, cur_h)
             entry = entry & ~stay
             lv = stay
-        # narrow tail: compact the survivors (window order puts alerts
-        # first, so alerts always fit — only data can spill)
-        NW = self.narrow
-        sidx, scum = self._compact(lv, NW)
-        spill = lv & (scum > NW)  # beyond the narrow budget: defer
-        sok = sidx < WW
-        sp = jnp.where(sok, sidx, 0)
+        # narrow tail: compact the survivors PER LANE (so the spill set
+        # is lane-local, hence mesh-invariant; per-lane window order puts
+        # alerts first and narrow_l >= lane_alert_w, so alerts always
+        # fit — only data can spill)
+        NWl = self.narrow_l
+        NT = Ln * NWl
+        lv_l = lv.reshape(Ln, WWl)
+        sidx_l, scum_l = jax.vmap(lambda mk: self._compact(mk, NWl))(lv_l)
+        spill = (lv_l & (scum_l > NWl)).reshape(WW)
+        sok_l = sidx_l < WWl  # (Ln, NWl)
+        sp = jnp.where(
+            sok_l, sidx_l + (jnp.arange(Ln, dtype=_I32) * WWl)[:, None], 0
+        ).reshape(NT)
+        sok = sok_l.reshape(NT)
         if "descent" in self._wk:
             acc2, drop2, od2, oe2, ohe2 = descent_tail(
                 w_origin[sp], cur_d[sp], cur_e[sp], cur_h[sp], sok,
-                jnp.zeros(NW, bool), pos_i[sp], a_prev[sp], a_self[sp],
+                jnp.zeros(NT, bool), pos_i[sp], a_prev[sp], a_self[sp],
                 self_seg[sp], max_addr, d,
                 use_kernel=True, interpret=self._wk_interp,
             )
@@ -751,7 +909,7 @@ class JaxEngine:
                 origin=w_origin[sp], dest=cur_d[sp], edge=cur_e[sp],
                 has_edge=cur_h[sp], live=sok, pos_i=pos_i[sp],
                 a_prev=a_prev[sp], a_self=a_self[sp], self_seg=self_seg[sp],
-                max_addr=max_addr, d=d, entry=jnp.zeros(NW, bool),
+                max_addr=max_addr, d=d, entry=jnp.zeros(NT, bool),
             )
         pack = jnp.stack(
             [acc2.astype(_U32) | (drop2.astype(_U32) << 1), od2, oe2,
@@ -772,8 +930,10 @@ class JaxEngine:
         # per-link seq floor orders them on redelivery. An accepted ALERT
         # zeroes the link and forces Send(v); a same-cycle data delivery
         # is logically newer than the alert (post-zero sequence floor).
-        # Every alert-side op is cond-guarded: churn is occasional, the
-        # steady-state cycle pays only the data path.
+        # Every acceptor's link belongs to the row's own lane (ownership
+        # rule), so the whole phase is lane-local: the election compares
+        # within-lane window indices only, and on the sharded plane no
+        # collective runs here at all.
         recv = owner
         vdir = jnp.asarray(A.direction_of(w_origin, st.pos[recv], d), _I32)
         flat = recv * NDIR + vdir
@@ -784,9 +944,8 @@ class JaxEngine:
         if "dedup" in self._wk:
             # window-local fused election: all decisions (including the
             # react representative and the alert force mask) come from an
-            # O(WW^2) blocked all-pairs kernel over *replicated* window
-            # data — no O(pad) plane, and on the sharded plane no
-            # link_max/link_read collectives for this phase
+            # O(WW^2) blocked all-pairs kernel over the window rows —
+            # no O(pad) plane, no collectives
             link_seq = pl.take_link(st.inbox, flat)[:, self.pw]
             (winner, loser, fresh, alert_write, is_rep, aforce) = due_dedup(
                 flat, acc_d, acc_a, w_seq, link_seq, nl=sent,
@@ -823,7 +982,12 @@ class JaxEngine:
         st = st._replace(inbox=inbox)
 
         # ---- react: gather-based test() + Send on the touched peers
-        # (one representative window row per peer; work ∝ window, not pad)
+        # (one representative window row per peer; work ∝ window, not
+        # pad). The react VALUES are computed at compacted positions for
+        # work reduction, then scattered BACK to window-row positions —
+        # the send block must stay in window order, because the staging
+        # ordinals below are lane-relative (compacted positions mix
+        # lanes and would make delays depend on lane co-residency)
         reps_w, _ = self._compact(is_rep, WW)
         rvalid = reps_w < WW
         reps_safe = jnp.where(rvalid, reps_w, 0)
@@ -850,129 +1014,147 @@ class JaxEngine:
         valid, s_origin, s_dest, s_edge, s_he = P.send_fields(
             jnp, bc(st.pos[rp]), dirs3, bc(st.addrs[rp]), bc(st.prev[rp]), d
         )
-        cand = (eff & valid).reshape(-1)  # (3*WW,)
+        # scatter the send block back to window-row positions (rep row i
+        # owns window row reps_w[i]); invalid rep slots drop
+        widx = jnp.where(rvalid, reps_safe, WW)
 
-        # ---- wheel maintenance: slip one cycle, shift leftovers to the
-        # front (revisited a revolution later), then contiguous appends.
-        # Everything below only *writes* the wheel (sources are `sbuf`/
-        # `dbuf`), keeping the donated update chain alias-clean.
-        slip_avail = jnp.clip(dcnt - B, 0, B)
-        slip_k = jnp.minimum(slip_avail, cap - st.wcnt[s1])
-        leftover = jnp.clip(dcnt - B - slip_k, 0, W - 2 * B)
+        def back(v):
+            return jnp.zeros((WW,) + v.shape[1:], v.dtype).at[widx].set(
+                v, mode="drop")
+
+        cand = back(eff & valid)        # (WW, NDIR) bool, window order
+        b_origin, b_dest = back(s_origin), back(s_dest)
+        b_edge, b_he = back(s_edge), back(s_he.astype(_U32))
+        b_pay = back(pay)               # (WW, NDIR, P)
+        b_seq = back(seq2)              # (WW,)
+
+        # ---- wheel maintenance (lane-local): slip one cycle, shift
+        # leftovers to the front (revisited a revolution later).
+        # Everything below only *writes* the wheel (sources are `sbuf`),
+        # keeping the donated update chain alias-clean.
+        wcnt_s1 = jax.lax.dynamic_slice_in_dim(st.wcnt, s1, 1, axis=1)[:, 0]
+        slip_avail = jnp.clip(dcnt - Bl, 0, Bl)
+        slip_k = jnp.minimum(slip_avail, cap - wcnt_s1)  # (Ln,)
+        leftover = jnp.clip(dcnt - Bl - slip_k, 0, Wl - 2 * Bl)
         # honest over-budget accounting: count each backlog row ONCE, the
         # first cycle it misses the drain window, then brand it LATE so a
         # standing backlog doesn't recount every cycle it sits over
-        # budget (the historical `dcnt - B` recount inflated `deferred`
-        # by the backlog's residence time)
-        tail = sbuf[B:]  # rows past the window: slip block + leftovers
-        tail_live = jnp.arange(W - B, dtype=_I32) < (dcnt - B)
+        # budget — per lane, so the sum over lanes counts each row once
+        # GLOBALLY no matter how lanes are distributed over devices
+        tail = sbuf[:, Bl:]  # (Ln, Wl - Bl, roww)
+        tail_live = (jnp.arange(Wl - Bl, dtype=_I32)[None, :]
+                     < (dcnt - Bl)[:, None])
         n_late_new = (tail_live
-                      & ((tail[:, HAS_EDGE] & LATE) == 0)).sum().astype(_I32)
-        shifted = jax.lax.dynamic_slice(
-            sbuf, (B + slip_k, 0), (W - 2 * B, roww))
-        shifted = shifted.at[:, HAS_EDGE].set(shifted[:, HAS_EDGE] | LATE)
+                      & ((tail[:, :, HAS_EDGE] & LATE) == 0)).sum(1).astype(_I32)
+        shifted = jax.vmap(
+            lambda b, k: jax.lax.dynamic_slice(b, (Bl + k, 0),
+                                               (Wl - 2 * Bl, roww))
+        )(sbuf, slip_k)
+        shifted = shifted.at[:, :, HAS_EDGE].set(
+            shifted[:, :, HAS_EDGE] | LATE)
         wheel = jax.lax.dynamic_update_slice(
-            st.wheel, shifted[None], (s, 0, 0))
-        wcnt = st.wcnt.at[s].set(leftover)
-        acnt = st.acnt.at[s].set(0)
-        # slip block: rows [B, 2B) of the drained slot, due next cycle
-        slip_rows = dbuf[B:].at[:, self._DT].set((st.t + 1).astype(_U32))
-        slip_rows = slip_rows.at[:, HAS_EDGE].set(
-            slip_rows[:, HAS_EDGE] | LATE)
-        wheel = jax.lax.dynamic_update_slice(
-            wheel, slip_rows[None], (s1, wcnt[s1], 0))
-        wcnt = wcnt.at[s1].add(slip_k)
+            st.wheel, shifted[:, None], (0, s, 0, 0))
+        col = jnp.arange(SLOTS, dtype=_I32)[None, :]
+        wcnt = jnp.where(col == s, leftover[:, None], st.wcnt)
+        acnt = jnp.where(col == s, 0, st.acnt)
+        # slip block: rows [B_l, 2B_l) of the drained slot, due next cycle
+        slip_rows = sbuf[:, Bl:2 * Bl].at[:, :, self._DT].set(
+            (st.t + 1).astype(_U32))
+        slip_rows = slip_rows.at[:, :, HAS_EDGE].set(
+            slip_rows[:, :, HAS_EDGE] | LATE)
+        wheel = jax.vmap(
+            lambda wl, r, c: jax.lax.dynamic_update_slice(wl, r[None],
+                                                          (s1, c, 0))
+        )(wheel, slip_rows, wcnt_s1)
+        wcnt = jnp.where(col == s1, (wcnt_s1 + slip_k)[:, None], wcnt)
 
-        # ALERT forwards: side-wheel, exactly one cycle per hop
-        def alert_fwds(args):
-            awheel, acnt, dropped = args
-            af_idx, af_cum = self._compact(fwd & is_alert, ALERT_W)
-            af_ok = af_idx < WW
-            afp = jnp.where(af_ok, af_idx, 0)
-            af_rows = jnp.stack(
-                [w_origin[afp], o_dest[afp], o_edge[afp],
-                 o_he[afp].astype(_U32)]
-                + [w_pay[afp, c] for c in range(self.pw)]
-                + [w[afp, self._SEQ],
-                   jnp.broadcast_to((st.t + 1).astype(_U32), (ALERT_W,))],
-                axis=1,
-            )
-            af_k = jnp.minimum(jnp.minimum(af_cum[-1], ALERT_W),
-                               ALERT_W - acnt[s1])
-            awheel = jax.lax.dynamic_update_slice(
-                awheel, af_rows[None], (s1, acnt[s1], 0))
-            acnt = acnt.at[s1].add(af_k)
-            n_af = (fwd & is_alert).sum().astype(_I32)
-            return awheel, acnt, dropped + jnp.maximum(n_af - af_k, 0)
-
-        awheel, acnt, dropped = jax.lax.cond(
-            has_alerts, alert_fwds, lambda a: a,
-            (st.awheel, acnt, st.dropped),
-        )
-
-        # data forwards + deferred collision losers + mid-descent spills
-        # + react sends, one dense block; a per-cycle delay permutation
-        # assigns delays by position within the block (10 strided
-        # classes -> 10 contiguous per-slot appends, no row scatter)
+        # ---- staging: one rigid per-lane block of every row that
+        # (re-)enters a wheel — [WWl re-entry rows at window positions |
+        # 3*WWl send rows at window-row-major positions]. The delay
+        # ordinal is the row's rank within ITS LANE's block (cumsum), so
+        # delay assignment is mesh-invariant; the `stage_rows` kernel
+        # stamps DELIVER_T (alerts: t+1, data: t + perm[ordinal mod 10])
         f_dest = jnp.where(fwd, o_dest, jnp.where(spill, cur_d, w_dest))
         f_edge = jnp.where(fwd, o_edge, jnp.where(spill, cur_e, w_edge))
         # losers and spills re-enter as continuations: their network hop
         # was already charged at first window entry
         f_he = (jnp.where(fwd, o_he, jnp.where(spill, cur_h, w_has_edge))
                 .astype(_U32) | jnp.where(spill | loser, CONT, _U32(0)))
-        fwd_rows = jnp.stack(
+        re_rows = jnp.stack(
             [w_origin, f_dest, f_edge, f_he]
             + [w_pay[:, c] for c in range(self.pw)]
             + [w[:, self._SEQ], w[:, self._DT]],
             axis=1,
-        )  # (WW, roww)
+        ).reshape(Ln, WWl, roww)
         u = lambda a: a.reshape(-1).astype(_U32)
-        send_pay = pay.reshape(-1, self.pw)  # (3*WW, P)
+        send_pay = b_pay.reshape(-1, self.pw)  # (3*WW, P)
         send_rows = jnp.stack(
-            [u(s_origin), u(s_dest), u(s_edge), u(s_he)]
+            [u(b_origin), u(b_dest), u(b_edge), u(b_he)]
             + [send_pay[:, c].astype(_U32) for c in range(self.pw)]
-            + [u(bc(seq2)), u(bc(seq2))],
+            + [u(bc(b_seq)), u(bc(b_seq))],
             axis=1,
-        )  # (3*WW, roww)
-        blk_mask = jnp.concatenate([(fwd & ~is_alert) | loser | spill, cand])
-        blk_rows = jnp.concatenate([fwd_rows, send_rows])  # (4*WW, roww)
-        M = 4 * WW
-        dense_idx, dense_cum = self._compact(blk_mask, M)
-        k_tot = dense_cum[-1]
-        dense = blk_rows[jnp.where(dense_idx < M, dense_idx, 0)]  # (M, roww)
-
+        ).reshape(Ln, NDIR * WWl, roww)
+        re_mask = (fwd | loser | spill).reshape(Ln, WWl)
+        re_alert = (fwd & is_alert).reshape(Ln, WWl)
+        blk_rows = jnp.concatenate([re_rows, send_rows], axis=1)
+        blk_mask = jnp.concatenate(
+            [re_mask, cand.reshape(Ln, NDIR * WWl)], axis=1)
+        blk_alert = jnp.concatenate(
+            [re_alert, jnp.zeros((Ln, NDIR * WWl), bool)], axis=1)
+        ordinal = jnp.cumsum(blk_mask.astype(_I32), axis=1) - 1
         h = ((st.t + 1).astype(_U32) * _U32(0x9E3779B1) + st.salt_enq)
         perm = st.perms[(h >> _U32(28)).astype(_I32)]  # (10,) delays 1..10
-        CW_ = -(-M // 10)  # ceil(M / 10): strided class width
-        if 10 * CW_ > M:  # zero-pad the ragged last classes once, up front
-            dense = jnp.concatenate(
-                [dense, jnp.zeros((10 * CW_ - M, roww), _U32)])
-        # fused class gather + DELIVER_T stamping (kernels.wheel.enqueue);
-        # both paths are bit-identical to the historical dense[c::10]
-        # slicing, dead ragged-tail pad rows included
-        staged, k_cs = enqueue_stage(
-            dense, perm, st.t, k_tot, dt_col=self._DT,
+        staged = stage_rows(
+            blk_rows.reshape(-1, roww), blk_alert.reshape(-1),
+            ordinal.reshape(-1), perm, st.t, dt_col=self._DT,
             use_kernel="enqueue" in self._wk, interpret=self._wk_interp,
-        )
-        for c in range(10):
-            slot_c = (st.t + perm[c]) % SLOTS
-            k_eff = jnp.minimum(k_cs[c], jnp.maximum(cap - wcnt[slot_c], 0))
-            wheel = jax.lax.dynamic_update_slice(
-                wheel, staged[c][None], (slot_c, wcnt[slot_c], 0))
-            wcnt = wcnt.at[slot_c].add(k_eff)
-            dropped = dropped + (k_cs[c] - k_eff)
+        ).reshape(Ln, 4 * WWl, roww)
+        meta = (blk_mask.astype(_U32) * META_LIVE
+                | blk_alert.astype(_U32) * META_ALERT)
+        pkt = jnp.concatenate([staged, meta[:, :, None]], axis=2)
 
-        # accounting: every first-entry live window row is one consumed
-        # network delivery; continuations (mid-descent spills and
-        # collision-loser redeliveries) were already charged
-        n_live_rows = n_alert + n_data
-        n_cont = (live & w_cont).sum().astype(_I32)
-        n_defer = loser.sum().astype(_I32) + spill.sum().astype(_I32)
+        # ---- boundary exchange + ranked owner-lane appends: the ONE
+        # lane-crossing step of the cycle. The exchange output is the
+        # global lane-major staging order on every participant, so the
+        # within-(lane, slot) append ranks are identical at any mesh size
+        gpkt = pl.exchange(pkt)  # (L, 4*WWl, roww + 1)
+        grows = gpkt[:, :, :roww].reshape(L * 4 * WWl, roww)
+        gmeta = gpkt[:, :, roww].reshape(-1)
+        glive = (gmeta & META_LIVE) != 0
+        galert = (gmeta & META_ALERT) != 0
+        glane = self._lane_of(st.addrs, st.n_live, grows[:, DEST])
+        gslot = grows[:, self._DT].astype(_I32) % SLOTS
+        base = pl.lane_base(Ln)
+        wheel, wcnt, att_d, dro_d = self._append_rows(
+            wheel, wcnt, grows, glane, gslot, glive & ~galert, cap, base)
+        # ALERT appends are churn-only: cond-guarded on the (replicated)
+        # gathered block, so every shard takes the same branch
+        n_ga = (glive & galert).sum()
+
+        def do_alerts(args):
+            ab, ac = args
+            return self._append_rows(
+                ab, ac, grows, glane, gslot, glive & galert, Al, base)
+
+        awheel, acnt, att_a, dro_a = jax.lax.cond(
+            n_ga > 0, do_alerts,
+            lambda a: (a[0], a[1], jnp.zeros(Ln, _I32), jnp.zeros(Ln, _I32)),
+            (st.awheel, acnt),
+        )
+
+        # accounting (per lane; hosts read sums): every first-entry live
+        # window row is one consumed network delivery; continuations
+        # (mid-descent spills and collision-loser redeliveries) were
+        # already charged
+        n_cont_l = (live & w_cont).reshape(Ln, WWl).sum(1).astype(_I32)
+        n_defer_l = (loser | spill).reshape(Ln, WWl).sum(1).astype(_I32)
         return st._replace(
             wheel=wheel, wcnt=wcnt, awheel=awheel, acnt=acnt,
-            messages_sent=st.messages_sent + n_live_rows - n_cont,
-            deferred=st.deferred + n_late_new + n_defer,
-            dropped=dropped,
+            messages_sent=st.messages_sent + (n_alert + n_data) - n_cont_l,
+            deferred=st.deferred + n_late_new + n_defer_l,
+            dropped=st.dropped + dro_d + dro_a,
+            enq=st.enq + att_d + att_a,
+            ret=st.ret + n_alert + n_data,
             t=st.t + 1,
         )
 
@@ -1018,13 +1200,17 @@ class JaxEngine:
     # -- churn (Alg. 2) ------------------------------------------------------
 
     def _shift_peer_rows(self, st: DeviceState, src: jnp.ndarray) -> dict:
-        """Gather-shift every peer-indexed table by `src` (join/leave)."""
-        pd = st.x.shape[0]
+        """Gather-shift every peer-indexed table by the global source map
+        `src` (join/leave row recompaction) — through the plane, so the
+        sharded engine shifts its local blocks with one explicit
+        all_gather instead of an inherited GSPMD program."""
+        pl = self._plane
         link_src = (src[:, None] * NDIR
                     + jnp.arange(NDIR, dtype=_I32)[None, :]).reshape(-1)
         return {
-            "x": st.x[src], "out": st.out[src],
-            "inbox": st.inbox[link_src], "addrs": st.addrs[src],
+            "x": pl.shift_rows(st.x, src), "out": pl.shift_rows(st.out, src),
+            "inbox": pl.shift_rows(st.inbox, link_src),
+            "addrs": st.addrs[src],
         }
 
     def _join_impl(self, st: DeviceState, addr: jnp.ndarray,
@@ -1032,17 +1218,20 @@ class JaxEngine:
         """Insert a peer row at `k` (gather-shift of the sorted prefix +
         one row write; `vote` is the joiner's (D,) data vector), then
         run the shared churn tail."""
-        pd = st.x.shape[0]
-        idx = jnp.arange(pd, dtype=_I32)
+        pdg = self.pad
+        pl = self._plane
+        idx = jnp.arange(pdg, dtype=_I32)
         src = jnp.where(idx <= k, idx, idx - 1)
         g = self._shift_peer_rows(st, src)
         n_live = st.n_live + 1
         lk = k * NDIR + jnp.arange(NDIR, dtype=_I32)
         st = st._replace(
             addrs=g["addrs"].at[k].set(addr),
-            x=g["x"].at[k].set(vote),
-            inbox=g["inbox"].at[lk].set(0),
-            out=g["out"].at[k].set(0),
+            x=pl.put_peer(g["x"], k[None], vote[None].astype(_I32)),
+            inbox=pl.put_link(g["inbox"], lk,
+                              jnp.zeros((NDIR, self.pw + 1), _I32)),
+            out=pl.put_peer(g["out"], k[None],
+                            jnp.zeros((1, NDIR * self.pw + 1), _I32)),
             n_live=n_live,
         )
         st = st._replace(**self._ring_views(st.addrs, n_live))
@@ -1053,33 +1242,111 @@ class JaxEngine:
     def _leave_impl(self, st: DeviceState, k: jnp.ndarray) -> DeviceState:
         """Delete peer row `k` (gather-shift left + sentinel the vacated
         row), then run the shared churn tail."""
-        pd = st.x.shape[0]
+        pdg = self.pad
+        pl = self._plane
         nb = st.n_live
         a_im1 = st.addrs[k]
         a_im2 = st.addrs[(k - 1) % nb]
         a_i = st.addrs[(k + 1) % nb]
-        idx = jnp.arange(pd, dtype=_I32)
-        src = jnp.minimum(jnp.where(idx < k, idx, idx + 1), pd - 1)
+        idx = jnp.arange(pdg, dtype=_I32)
+        src = jnp.minimum(jnp.where(idx < k, idx, idx + 1), pdg - 1)
         last = nb - 1  # vacated row after the shift
         g = self._shift_peer_rows(st, src)
         ll = last * NDIR + jnp.arange(NDIR, dtype=_I32)
         st = st._replace(
             addrs=g["addrs"].at[last].set(NO_ADDR),
-            x=g["x"].at[last].set(0),
-            inbox=g["inbox"].at[ll].set(0),
-            out=g["out"].at[last].set(0),
+            x=pl.put_peer(g["x"], last[None],
+                          jnp.zeros((1, self.dw), _I32)),
+            inbox=pl.put_link(g["inbox"], ll,
+                              jnp.zeros((NDIR, self.pw + 1), _I32)),
+            out=pl.put_peer(g["out"], last[None],
+                            jnp.zeros((1, NDIR * self.pw + 1), _I32)),
             n_live=last,
         )
         st = st._replace(**self._ring_views(st.addrs, st.n_live))
         return self._churn_tail(st, a_im2, a_im1, a_i)
 
+    def _fence_and_migrate(self, st: DeviceState, pos_fix,
+                           pos_var) -> DeviceState:
+        """R3 fence + owner re-laning after a membership change.
+
+        A join/leave moves the owner-ROW boundaries, so an in-flight row
+        may now belong to another lane. Each local lane sweeps its
+        arenas once: stale-origin data rows and dead rows drop (the
+        fence; the ALERT side-wheel is never origin-fenced — routed
+        ALERTs legitimately originate from the change positions),
+        rows still owned stay compacted in place, and out-of-lane rows
+        are collected (slot-major, deterministic) into a per-lane
+        migration block that rides the same boundary exchange as cycle
+        appends. Conservation: every removed row is retired; migrated
+        rows re-enter through `enq`; a migration block overflow is
+        counted in BOTH `enq` and `dropped` (the row was retired without
+        a re-append) so the invariant stays exact and the loss visible.
+        """
+        Ln = st.wcnt.shape[0]
+        roww = self.roww
+        MW = self.mig_w
+        base = self._plane.lane_base(Ln)
+        lane_glob = base + jnp.arange(Ln, dtype=_I32)
+
+        def sweep(buf, cnt, fence: bool):
+            width = buf.shape[2]
+
+            def one(b, c, lg):
+                liveM = jnp.arange(width, dtype=_I32)[None, :] < c[:, None]
+                rows = b.reshape(SLOTS * width, roww)
+                lvf = liveM.reshape(-1)
+                okrow = rows[:, self._DT] != NO_MSG
+                if fence:
+                    okrow = (okrow & (rows[:, ORIGIN] != pos_fix)
+                             & (rows[:, ORIGIN] != pos_var))
+                inlane = self._lane_of(st.addrs, st.n_live,
+                                       rows[:, DEST]) == lg
+                keep = (lvf & okrow & inlane).reshape(SLOTS, width)
+                move = lvf & okrow & ~inlane
+
+                def cs(bs, ks):
+                    i2, cum = self._compact(ks, width)
+                    return bs[jnp.where(i2 < width, i2, 0)], cum[-1]
+
+                nb, nc = jax.vmap(cs)(b, keep)
+                midx, mcum = self._compact(move, MW)
+                mok = midx < SLOTS * width
+                mig = rows[jnp.where(mok, midx, 0)]
+                lost = jnp.maximum(mcum[-1].astype(_I32) - MW, 0)
+                removed = (c.sum() - nc.sum()).astype(_I32)
+                return nb, nc.astype(_I32), mig, mok, removed, lost
+
+            return jax.vmap(one)(buf, cnt, lane_glob)
+
+        def relane(buf, cnt, cap, mig, mok):
+            pkt = jnp.concatenate(
+                [mig, (mok.astype(_U32) * META_LIVE)[:, :, None]], axis=2)
+            g = self._plane.exchange(pkt)  # (L, MW, roww + 1)
+            gr = g[:, :, :roww].reshape(-1, roww)
+            gl = (g[:, :, roww].reshape(-1) & META_LIVE) != 0
+            lane = self._lane_of(st.addrs, st.n_live, gr[:, DEST])
+            slot = gr[:, self._DT].astype(_I32) % SLOTS
+            return self._append_rows(buf, cnt, gr, lane, slot, gl, cap, base)
+
+        wheel, wcnt, migd, mokd, rem_d, lost_d = sweep(st.wheel, st.wcnt, True)
+        awheel, acnt, miga, moka, rem_a, lost_a = sweep(
+            st.awheel, st.acnt, False)
+        wheel, wcnt, att_d, dro_d = relane(wheel, wcnt, self.lane_cap,
+                                           migd, mokd)
+        awheel, acnt, att_a, dro_a = relane(awheel, acnt, self.lane_alert_w,
+                                            miga, moka)
+        return st._replace(
+            wheel=wheel, wcnt=wcnt, awheel=awheel, acnt=acnt,
+            ret=st.ret + rem_d + rem_a,
+            enq=st.enq + att_d + att_a + lost_d + lost_a,
+            dropped=st.dropped + dro_d + dro_a + lost_d + lost_a,
+        )
+
     def _churn_tail(self, st: DeviceState, a_im2, a_im1, a_i) -> DeviceState:
         """Alg. 2 on device, mirroring `MajoritySimulator._apply_change`:
 
-        1. fence (R3) — recompact every wheel slot dropping in-flight
-           DATA rows whose origin is one of the two change positions
-           (stale pre-change senders); the side-wheel is untouched
-           (routed ALERTs legitimately originate from those positions);
+        1. fence + re-lane (R3 + ownership rule) — `_fence_and_migrate`;
         2. movers — peers whose post-change position IS pos_fix/pos_var —
            zero their whole X_in and send unconditionally everywhere;
         3. enqueue the <= 6 routed ALERT rows into the side-wheel (due
@@ -1087,39 +1354,31 @@ class JaxEngine:
            Alg. 1 router as data and fires the zero+Send upcall on
            accept.
         """
-        pd, d = st.x.shape[0], self.d
-        W, cap = self.slot_width, self.slot_cap
+        pdg, d = self.pad, self.d
+        pl = self._plane
+        pw = self.pw
         pos_fix, pos_var = P.change_positions(jnp, a_im2, a_im1, a_i, d)
-
-        def fence_slot(buf, cnt):
-            keep = ((jnp.arange(W) < cnt)
-                    & (buf[:, ORIGIN] != pos_fix) & (buf[:, ORIGIN] != pos_var)
-                    & (buf[:, self._DT] != NO_MSG))
-            idx, cum = self._compact(keep, W)
-            return buf[jnp.where(idx < W, idx, 0)], cum[-1]
-
-        wheel, wcnt = jax.vmap(fence_slot)(st.wheel, st.wcnt)
-        st = st._replace(wheel=wheel, wcnt=wcnt.astype(_I32))
+        st = self._fence_and_migrate(st, pos_fix, pos_var)
 
         cp = jnp.stack([pos_fix, pos_var])  # (2,)
         own = self._owner_of(st.addrs, st.n_live, cp)
-        mover_rows = jnp.where(st.pos[own] == cp, own, pd)
+        mover_rows = jnp.where(st.pos[own] == cp, own, pdg)
         mlinks = (mover_rows[:, None] * NDIR
                   + jnp.arange(NDIR, dtype=_I32)[None, :]).reshape(-1)
-        st = st._replace(inbox=st.inbox.at[
-            jnp.where(mlinks < pd * NDIR, mlinks, pd * NDIR)
-        ].set(0, mode="drop"))
+        st = st._replace(inbox=pl.put_link(
+            st.inbox, jnp.where(mlinks < pdg * NDIR, mlinks, pdg * NDIR),
+            jnp.zeros((2 * NDIR, pw + 1), _I32)))
         # movers: zero X_in done; unconditional Send in every direction
         # (test() re-run is subsumed — every direction sends)
-        mv = mover_rows < pd
+        mv = mover_rows < pdg
         mp = jnp.where(mv, mover_rows, 0)
-        pw = self.pw
-        k = knowledge(self.problem, st.inbox, st.x, pd)  # (pd, P)
-        pay = jnp.broadcast_to(k[mp][:, None, :], (2, NDIR, pw))
-        seq2 = st.out[mp, NDIR * pw] + 1
+        kloc = knowledge(self.problem, st.inbox, st.x, st.x.shape[0])
+        kmp = pl.take_peer_rep(kloc, mp)  # (2, P), replicated
+        pay = jnp.broadcast_to(kmp[:, None, :], (2, NDIR, pw))
+        seq2 = pl.take_peer_rep(st.out, mp)[:, NDIR * pw] + 1
         ro2 = self._pack_out(pay, seq2)
-        st = st._replace(out=st.out.at[jnp.where(mv, mp, pd)].set(
-            ro2.astype(_I32), mode="drop"))
+        st = st._replace(out=pl.put_peer(
+            st.out, jnp.where(mv, mp, pdg), ro2.astype(_I32)))
         dirs2 = jnp.broadcast_to(jnp.arange(NDIR, dtype=_I32)[None, :], (2, NDIR))
         bc2 = lambda a: jnp.broadcast_to(a[:, None], (2, NDIR))
         valid, origin, dest, edge, has_edge = P.send_fields(
@@ -1150,7 +1409,7 @@ class JaxEngine:
 
     @property
     def messages_sent(self) -> int:
-        return int(self._st.messages_sent)
+        return int(np.asarray(self._st.messages_sent).sum())
 
     @property
     def in_flight(self) -> int:
@@ -1162,7 +1421,7 @@ class JaxEngine:
         set too low (the numpy table grows instead — see DESIGN.md). A
         run with dropped > 0 is invalid (`run_until_converged` flags
         it)."""
-        return int(self._st.dropped)
+        return int(np.asarray(self._st.dropped).sum())
 
     @property
     def deferred(self) -> int:
@@ -1170,16 +1429,37 @@ class JaxEngine:
         one cycle or wait a wheel revolution (each row counted ONCE, the
         first cycle it misses its drain window — the LATE row bit stops
         recounts while a backlog stands), and same-link collision losers
-        / mid-descent spills re-deliver later."""
-        return int(self._st.deferred)
+        / mid-descent spills re-deliver later. Summed over lanes, so the
+        figure is global and counts each row exactly once regardless of
+        how the lanes are sharded."""
+        return int(np.asarray(self._st.deferred).sum())
 
     @property
     def deferral_rate(self) -> float:
         """Cumulative deferral events per consumed network delivery —
         the honest congestion figure for sizing `work_budget` (an
         init-storm transient shows up here, then decays)."""
-        m = int(self._st.messages_sent)
-        return float(self._st.deferred) / m if m else 0.0
+        m = self.messages_sent
+        return self.deferred / m if m else 0.0
+
+    def check_conservation(self) -> dict:
+        """The partitioned wheel's global row-conservation invariant:
+        summed over lanes, every row ever appended (`enq`) is drained
+        (`ret`), still live in an arena, or accounted `dropped`. Raises
+        AssertionError on violation (a violation means a lane double
+        counted or silently lost a row — exactly the regression class a
+        sharded control plane invites); returns the figures."""
+        st = self._st
+        enq = int(np.asarray(st.enq).sum())
+        ret = int(np.asarray(st.ret).sum())
+        live = int(np.asarray(st.wcnt).sum()) + int(np.asarray(st.acnt).sum())
+        dro = int(np.asarray(st.dropped).sum())
+        if enq != ret + live + dro:
+            raise AssertionError(
+                f"wheel conservation violated: enqueued={enq} != "
+                f"retired={ret} + live={live} + dropped={dro}")
+        return {"enqueued": enq, "retired": ret, "live": live,
+                "dropped": dro}
 
     def outputs(self) -> np.ndarray:
         out = knowledge_outputs(self.problem, self._st.inbox, self._st.x,
@@ -1210,7 +1490,8 @@ class JaxEngine:
         """Membership upcall: a peer joins at `addr` (Alg. 2) with scalar
         data or a (D,) vector. The padded tables absorb the row without
         recompilation; only outgrowing them triggers the (host-side)
-        grow + re-jit path."""
+        grow + re-pad path — and even that only retraces the programs
+        for the new shape, it never rebuilds the jit objects."""
         ring_after, k = self.ring.join(int(addr))
         if ring_after.n > self.pad:
             self._grow(ring_after.n)
@@ -1234,46 +1515,89 @@ class JaxEngine:
         self.n -= 1
 
     def _grow(self, need_n: int) -> None:
-        """Re-pad every device table one size up (re-jit point: shapes
-        change, so the jitted programs recompile on next use). Wheel
-        slots keep their live prefixes; the arena width is rebuilt for
-        the new budget."""
+        """Re-pad every device table one size up. The jitted programs
+        are NOT rebuilt — `jax.jit` retraces per shape on next use, so a
+        grow costs one retrace per program instead of discarding every
+        compiled entry (the historical rebuild caused a re-jit storm
+        under churn). Wheel rows are re-laned host-side: the lane count/
+        boundaries move with the pad, so every live row is re-placed in
+        the lane owning its DEST under the new tables (stable
+        (lane, slot, position) order, rank-capped like a device append).
+        """
         host = jax.device_get(self._st)
-        old_pad, old_W = self.pad, self.slot_width
+        old_pad = self.pad
         self.pad = _next_pow2(need_n + max(8, need_n // 8))
         self._size_tables()
-        self._make_programs()
         pr = self.pad - old_pad
 
         def pad_rows(a, fill=0):
             extra = np.full((pr,) + a.shape[1:], fill, a.dtype)
             return np.concatenate([a, extra])
 
-        W = self.slot_width
-        wheel = np.zeros((SLOTS, W, self.roww), np.uint32)
-        keep = min(old_W, W)
-        wheel[:, :keep] = np.asarray(host.wheel)[:, :keep]
+        addrs = pad_rows(np.asarray(host.addrs), NO_ADDR)
+        n_live = int(host.n_live)
+
+        def collect(buf, cnt):
+            b, c = np.asarray(buf), np.asarray(cnt)
+            out = [b[l, s, : c[l, s]]
+                   for l in range(b.shape[0]) for s in range(SLOTS)]
+            return (np.concatenate(out) if out
+                    else np.zeros((0, self.roww), np.uint32))
+
+        def place(rows, cap, width):
+            L = self.lanes
+            buf = np.zeros((L, SLOTS, width, self.roww), np.uint32)
+            cnt = np.zeros((L, SLOTS), np.int32)
+            lost = 0
+            if rows.shape[0]:
+                own = (np.searchsorted(addrs, rows[:, DEST], side="left")
+                       % n_live)
+                g = ((own // self.lane_rows) * SLOTS
+                     + rows[:, self._DT].astype(np.int64) % SLOTS)
+                order = np.argsort(g, kind="stable")
+                gs = g[order]
+                rank = np.arange(len(gs)) - np.searchsorted(gs, gs, "left")
+                ok = rank < cap
+                li, si = gs[ok] // SLOTS, gs[ok] % SLOTS
+                buf[li, si, rank[ok]] = rows[order][ok]
+                np.add.at(cnt, (li, si), 1)
+                lost = int((~ok).sum())
+            return buf, cnt, lost
+
+        wheel, wcnt, lost_w = place(collect(host.wheel, host.wcnt),
+                                    self.lane_cap, self.lane_width)
+        awheel, acnt, lost_a = place(collect(host.awheel, host.acnt),
+                                     self.lane_alert_w, self.lane_alert_w)
+
+        def lane0(v, extra=0):
+            # per-lane counters collapse into lane 0 (hosts read sums;
+            # the old lane partition no longer exists)
+            a = np.zeros(self.lanes, np.int32)
+            a[0] = int(np.asarray(v).sum()) + extra
+            return jnp.asarray(a)
+
         self._st = DeviceState(
             x=jnp.asarray(pad_rows(np.asarray(host.x))),
             inbox=jnp.asarray(np.concatenate([
                 np.asarray(host.inbox),
                 np.zeros((pr * NDIR, self.pw + 1), np.int32)])),
             out=jnp.asarray(pad_rows(np.asarray(host.out))),
-            addrs=jnp.asarray(pad_rows(np.asarray(host.addrs), NO_ADDR)),
+            addrs=jnp.asarray(addrs),
             prev=jnp.asarray(pad_rows(np.asarray(host.prev))),
             pos=jnp.asarray(pad_rows(np.asarray(host.pos))),
-            n_live=jnp.asarray(int(host.n_live), _I32),
-            wheel=jnp.asarray(wheel),
-            wcnt=jnp.asarray(np.minimum(np.asarray(host.wcnt),
-                                        self.slot_cap).astype(np.int32)),
-            awheel=jnp.asarray(np.asarray(host.awheel)),
-            acnt=jnp.asarray(np.asarray(host.acnt)),
+            n_live=jnp.asarray(n_live, _I32),
+            wheel=jnp.asarray(wheel), wcnt=jnp.asarray(wcnt),
+            awheel=jnp.asarray(awheel), acnt=jnp.asarray(acnt),
             perms=jnp.asarray(np.asarray(host.perms)),
             salt_enq=jnp.asarray(np.uint32(host.salt_enq)),
+            evt_ctr=jnp.asarray(int(host.evt_ctr), _I32),
             t=jnp.asarray(int(host.t), _I32),
-            messages_sent=jnp.asarray(int(host.messages_sent), _I32),
-            dropped=jnp.asarray(int(host.dropped), _I32),
-            deferred=jnp.asarray(int(host.deferred), _I32),
+            messages_sent=lane0(host.messages_sent),
+            # re-laning truncation: the rows leave `live`, so they land
+            # in `dropped` to keep enq == ret + live + dropped exact
+            dropped=lane0(host.dropped, lost_w + lost_a),
+            deferred=lane0(host.deferred),
+            enq=lane0(host.enq), ret=lane0(host.ret),
         )
 
     def step(self, cycles: int = 1) -> None:

@@ -1,47 +1,56 @@
-"""Mesh-sharded superstep engine: the cycle body of `engine.jax_backend`
-partitioned over a JAX device mesh with `shard_map`.
+"""Mesh-sharded superstep engine: owner-partitioned peer plane AND
+delivery wheel over a JAX device mesh with `shard_map`.
 
 The paper's protocol needs no global context — every peer talks only to
 its parent and two descendants — which is exactly what makes the
-simulation shardable. `ShardedJaxEngine` partitions the **peer plane**
-(the O(n) per-peer state: own data `x`, the per-link `inbox`, the
-`out` rows) by contiguous address-space row blocks over a one-axis
-device mesh; the **control plane** (the delivery wheel, the sorted
-address/position tables, the counters and RNG material) is replicated,
-so the wheel arithmetic — due-scan, routing, budget/slip bookkeeping,
-delay-permutation appends — is the *same deterministic computation on
-every device*, byte for byte the single-device cycle body.
+simulation shardable. `ShardedJaxEngine` partitions BOTH planes by the
+same ownership rule:
 
-What crosses shards each cycle is window-sized, never O(n): the cycle's
-reads and writes of the peer plane all flow through the `PeerPlane`
-access layer (`jax_backend.PeerPlane`), and `ShardedPlane` implements
-them as a **boundary exchange** —
+  * the **peer plane** (the O(n) per-peer state: own data `x`, the
+    per-link `inbox`, the `out` rows) by contiguous address-space row
+    blocks over a one-axis device mesh;
+  * the **delivery wheel** by owner LANE: the engine splits the padded
+    row space into `lanes` equal blocks, every wheel arena / count /
+    per-lane counter carries a leading lane axis, and each shard holds
+    exactly the lanes covering its peer-row block (`lanes % n_shards ==
+    0` — both are powers of two). A message row lives in the lane of
+    its DEST owner, so per-device wheel memory is O(n/devices) and the
+    whole drain path — due-scan, routing, accept-dedup, ALERT
+    side-wheel, budget/slip bookkeeping, deferral accounting — runs on
+    rows this shard owns, with NO collective: every peer/link index a
+    lane touches falls in the local peer block by the ownership
+    invariant, so `ShardedPlane`'s gathers and scatters are pure local
+    index translation.
 
-  * gathers (`take_peer` / `take_link` / `link_read*`): each device
-    gathers the window rows it owns, masks the rest to the op identity
-    (0 for payload sums, -1 for the dedup maxima) and one `psum` /
-    `pmax` over the mesh axis makes the result replicated;
-  * scatters (`put_peer` / `put_link`, the dedup `link_max`): global
-    row indices translate to the local block; rows owned elsewhere
-    drop. Disjoint-index scatters stay disjoint per shard, so no
-    cross-shard write ever conflicts;
-  * the convergence predicate reduces each shard's occupancy-masked
-    output scan with one scalar `psum`.
+What crosses shards each cycle is ONE boundary exchange: every lane
+stages a rigid block of the rows that (re-)enter a wheel (re-entries +
+send candidates, delay ordinals ranked lane-locally), and a single
+tiled `all_gather` over the mesh axis hands every shard the global
+lane-major staging order — from which each shard appends just the rows
+its lanes own, at ranks computed from the SAME replicated block on
+every mesh size. That, plus a scalar psum in the convergence predicate,
+is the entire per-cycle collective footprint.
 
-Because every exchanged value is an exact integer (or a -1-filled max),
-the sharded trajectory is **bit-identical** to the single-device jax
-engine — same cycles, same message counts, same outputs, for every
-problem and through churn — and therefore invariant in the mesh size
+Because every exchanged value is an exact integer, the sharded
+trajectory is **bit-identical** to the single-device jax engine — same
+cycles, same message counts, same outputs, for every problem and
+through churn — and therefore invariant in the mesh size
 (tests/test_sharded.py pins 1/2/4/8 devices against each other and
 against the unsharded engine; tests/_diff_harness.py replays fuzzed
-event schedules across numpy/jax/sharded).
+event schedules across numpy/jax/sharded, wheel occupancy included).
 
-Event paths (initialization / `set_votes` reacts, Alg. 2 join/leave)
-are occasional and O(n): they reuse the *inherited* global jitted
-programs unchanged — XLA's SPMD partitioner splits them across the same
-mesh (same jaxpr, same integers), with output shardings pinned so the
-state never migrates. Only the per-cycle hot path needs the hand-written
-exchange.
+Event paths also run under shard_map, collectives explicit:
+
+  * full-width reacts (init storm, `set_votes`): per-shard elementwise
+    test + `gather_events` into the replicated global event block each
+    shard appends its lanes from;
+  * Alg. 2 join/leave: row recompaction flows through
+    `ShardedPlane.shift_rows` — one all_gather + local re-slice — and
+    the post-churn fence/re-lane sweep reuses the SAME staged boundary
+    exchange to migrate rows whose owner lane moved. No inherited
+    global GSPMD program is left on the churn path (the historical
+    GSPMD partitioning of the O(n) event scatter compiled
+    pathologically at pad=2^20).
 
     from repro.engine import make_engine
     eng = make_engine("jax", ring, votes, mesh=8)   # 8-way sharded
@@ -49,11 +58,13 @@ exchange.
 
 `mesh=` accepts a one-axis `jax.sharding.Mesh`, a device count, or
 ``True`` (all local devices); `launch.mesh.make_engine_mesh` builds the
-canonical ("shard",) mesh. Constraints: `pad % n_devices == 0` (pad is
-a power of two, so any power-of-two mesh divides it) and no `batch=`
-(vmapped trials and mesh sharding compose in a later PR). See DESIGN.md
-§Sharding for the partition layout and the boundary-exchange
-invariants.
+canonical ("shard",) mesh. Constraints: `lanes % n_devices == 0` (the
+engine carves 8 lanes out of any pad >= 8, so meshes of 1/2/4/8 always
+fit) and no `batch=` (vmapped trials and mesh sharding compose in a
+later PR). `resize_mesh()` re-partitions a LIVE engine onto a different
+mesh — state is re-laid out, the trajectory continues bit-identically.
+See DESIGN.md §Sharding for the partition layout and the
+boundary-exchange invariants.
 """
 from __future__ import annotations
 
@@ -89,9 +100,16 @@ def as_engine_mesh(mesh: Union[Mesh, int, bool, None]) -> Mesh:
 
 
 class ShardedPlane(PeerPlane):
-    """Collective `PeerPlane`: block-sharded rows + window-sized psum/
-    pmax boundary exchange (module docstring). Instantiated inside the
-    shard_map trace — `axis_index` is only meaningful there."""
+    """Owner-partitioned `PeerPlane`: block-sharded peer rows + local
+    owner lanes (module docstring). The drain path is pure local index
+    translation — the ownership invariant (wheel rows live with their
+    DEST owner's lane, lanes live with their peer block) guarantees
+    every per-cycle peer/link access lands in the local block, so no
+    psum/pmax rides the hot loop. Collectives appear only where the
+    contract is explicitly global: the staged lane `exchange`, event
+    `gather_events`, churn `shift_rows`/`take_peer_rep`, and the scalar
+    convergence reduction. Instantiated inside the shard_map trace —
+    `axis_index` is only meaningful there."""
 
     def __init__(self, eng: "ShardedJaxEngine", axis: str):
         super().__init__(eng)
@@ -105,13 +123,19 @@ class ShardedPlane(PeerPlane):
         return jnp.where(ok, loc, 0), ok
 
     def _take(self, arr, idx):
+        # lane-local by invariant: mask only hygiene for dead-row
+        # sentinels (their values never reach live state)
         loc, ok = self._loc(arr.shape[0], idx)
         v = arr[loc]
         okb = ok.reshape(ok.shape + (1,) * (v.ndim - ok.ndim))
-        return jax.lax.psum(jnp.where(okb, v, 0), self.axis)
+        return jnp.where(okb, v, 0)
 
     take_peer = _take
     take_link = _take
+
+    def take_peer_rep(self, arr, idx):
+        v = self._take(arr, idx)
+        return jax.lax.psum(v, self.axis)
 
     def _put(self, arr, idx, val):
         nloc = arr.shape[0]
@@ -139,17 +163,17 @@ class ShardedPlane(PeerPlane):
 
     def link_read(self, dense, idx):
         loc, ok = self._loc(dense.shape[0], idx)
-        return jax.lax.pmax(jnp.where(ok, dense[loc], -1), self.axis)
+        return jnp.where(ok, dense[loc], -1)
 
     def link_read3(self, dense, rows):
         per = dense.reshape(-1, NDIR)
         loc, ok = self._loc(per.shape[0], rows)
-        return jax.lax.pmax(jnp.where(ok[:, None], per[loc], -1), self.axis)
+        return jnp.where(ok[:, None], per[loc], -1)
 
     def peer_dirmax(self, dense, rows):
         per = dense.reshape(-1, NDIR).max(1)
         loc, ok = self._loc(per.shape[0], rows)
-        return jax.lax.pmax(jnp.where(ok, per[loc], -1), self.axis)
+        return jnp.where(ok, per[loc], -1)
 
     def occ(self, st):
         pd_l = st.x.shape[0]
@@ -159,6 +183,29 @@ class ShardedPlane(PeerPlane):
     def all_true(self, v):
         miss = (~v).any().astype(_I32)
         return jax.lax.psum(miss, self.axis) == 0
+
+    # -- owner-lane boundary --------------------------------------------------
+
+    def lane_base(self, n_loc: int) -> jnp.ndarray:
+        return (jax.lax.axis_index(self.axis) * n_loc).astype(_I32)
+
+    def exchange(self, arr):
+        """THE per-cycle collective: local lanes' staged blocks ->
+        the global lane-major staging order, replicated (tiled
+        all_gather along the lane axis)."""
+        return jax.lax.all_gather(arr, self.axis, axis=0, tiled=True)
+
+    def shift_rows(self, arr, src):
+        """Join/leave row recompaction as an explicit owner exchange:
+        all_gather the blocks to the full table, apply this block's
+        slice of the global source map, keep the local rows. Replaces
+        the inherited global GSPMD gather of the pre-partition engine
+        (which compiled pathologically at pad=2^20)."""
+        nloc = arr.shape[0]
+        lo = jax.lax.axis_index(self.axis) * nloc
+        full = jax.lax.all_gather(arr, self.axis, axis=0, tiled=True)
+        src_loc = jax.lax.dynamic_slice_in_dim(src.astype(_I32), lo, nloc)
+        return full[src_loc]
 
     def local_tables(self, st):
         """This shard's block of the replicated ring tables — the rows
@@ -171,9 +218,9 @@ class ShardedPlane(PeerPlane):
     def gather_events(self, *arrs):
         """All_gather the shard blocks of an event (tiled): contiguous
         block sharding makes the concatenation exactly the global row
-        order, so the wheel append ranks — and therefore the delay hash
-        and slot offsets — are bit-identical to the single-device
-        enqueue."""
+        order, so the wheel append ranks — and therefore the delay
+        ordinals and slot offsets — are bit-identical to the
+        single-device enqueue."""
         return tuple(
             jax.lax.all_gather(a, self.axis, axis=0, tiled=True)
             for a in arrs)
@@ -202,20 +249,23 @@ class ShardedJaxEngine(JaxEngine):
 
     def _state_specs(self) -> DeviceState:
         """PartitionSpec per DeviceState leaf: peer plane sharded by row
-        blocks, control plane replicated."""
+        blocks, wheel arenas + per-lane counters sharded by LANE blocks
+        (the matching partition — lane l's rows are owned by the shard
+        holding peer block l * lane_rows), ring tables and scalars
+        replicated."""
         S, R = PS(self.axis), PS()
         return DeviceState(
             x=S, inbox=S, out=S,
             addrs=R, prev=R, pos=R, n_live=R,
-            wheel=R, wcnt=R, awheel=R, acnt=R,
-            perms=R, salt_enq=R,
-            t=R, messages_sent=R, dropped=R, deferred=R,
+            wheel=S, wcnt=S, awheel=S, acnt=S,
+            perms=R, salt_enq=R, evt_ctr=R,
+            t=R, messages_sent=S, dropped=S, deferred=S, enq=S, ret=S,
         )
 
     def _with_plane(self, fn):
-        """Trace `fn` with the collective plane installed (shard_map
-        bodies trace inside jit, so the swap must wrap the traced call,
-        not the program construction)."""
+        """Trace `fn` with the owner-partitioned plane installed
+        (shard_map bodies trace inside jit, so the swap must wrap the
+        traced call, not the program construction)."""
         def inner(st, *args):
             prev = self._plane
             self._plane = ShardedPlane(self, self.axis)
@@ -226,6 +276,10 @@ class ShardedJaxEngine(JaxEngine):
         return inner
 
     def _make_programs(self):
+        if self.lanes % self.n_shards:
+            raise ValueError(
+                f"mesh size {self.n_shards} does not divide the "
+                f"{self.lanes} wheel lanes (pad={self.pad})")
         assert self.pad % self.n_shards == 0, (self.pad, self.n_shards)
         specs = self._state_specs()
         self._shardings = jax.tree.map(
@@ -242,19 +296,18 @@ class ShardedJaxEngine(JaxEngine):
             sm(self._chunk_impl, (R, R, R, R), (specs, R, R, R)),
             donate_argnums=(0,))
         self._conv = jax.jit(sm(self._outputs_match, (R,), R))
-        # full-width event reacts (init storm, set_votes): shard_map too
-        # — per-shard elementwise test + an all_gather boundary into the
-        # replicated wheel append (GSPMD partitioning of the O(n) event
-        # scatter was observed to compile pathologically at pad=2^20)
+        # full-width event reacts (init storm, set_votes): per-shard
+        # elementwise test + the gather_events boundary into each
+        # shard's lane appends
         self._react = jax.jit(sm(self._react_impl, (PS(self.axis),), specs),
                               donate_argnums=(0,))
-        # churn paths: inherited global programs, SPMD-partitioned by
-        # XLA (small-n fuzz-tested; output shardings pinned so the
-        # state never migrates)
-        self._join = jax.jit(self._join_impl, donate_argnums=(0,),
-                             out_shardings=self._shardings)
-        self._leave = jax.jit(self._leave_impl, donate_argnums=(0,),
-                              out_shardings=self._shardings)
+        # churn: shard_map too — recompaction through shift_rows, the
+        # fence/re-lane sweep through the staged lane exchange; no
+        # global GSPMD program remains on this path
+        self._join = jax.jit(sm(self._join_impl, (R, R, R), specs),
+                             donate_argnums=(0,))
+        self._leave = jax.jit(sm(self._leave_impl, (R,), specs),
+                              donate_argnums=(0,))
 
     def _initial_state(self, ring: Ring, votes: np.ndarray,
                        seed: int) -> DeviceState:
@@ -262,5 +315,24 @@ class ShardedJaxEngine(JaxEngine):
         return jax.device_put(st, self._shardings)
 
     def _grow(self, need_n: int) -> None:
-        super()._grow(need_n)  # re-sizes, re-builds programs + shardings
+        # host re-lane + re-pad; the NamedShardings are shape-agnostic,
+        # so no program or sharding rebuild — jit retraces per shape
+        super()._grow(need_n)
         self._st = jax.device_put(self._st, self._shardings)
+
+    def resize_mesh(self, mesh: Union[Mesh, int, bool, None]) -> None:
+        """Re-partition the LIVE engine onto a different mesh. The lane
+        layout is mesh-independent, so this is pure data movement: pull
+        the state to host, swap the mesh, rebuild the shard_map programs
+        for the new axis size, push the state back. The trajectory
+        continues bit-identically (diff-harness pinned)."""
+        host = jax.device_get(self._st)
+        mesh = as_engine_mesh(mesh)
+        n = int(mesh.devices.size)
+        if n & (n - 1):
+            raise ValueError(
+                f"engine mesh size must be a power of two, got {n}")
+        self.mesh, self.axis = mesh, mesh.axis_names[0]
+        self.n_shards = n
+        self._make_programs()
+        self._st = jax.device_put(host, self._shardings)

@@ -8,9 +8,9 @@ tests/test_kernels.py in interpret mode on CPU CI):
   * `due_dedup`       — fused due-scan + accept-dedup: window-local
     winner / representative / alert-force election replacing the dense
     per-link scatter-max plane;
-  * `enqueue_stage`   — strided-permutation enqueue staging: the 10
-    delay-class gathers + DELIVER_T stamping of the cycle's append
-    block in one blocked pass;
+  * `stage_rows`      — ordinal-ranked enqueue staging: the lane-local
+    delay-class gather + DELIVER_T stamping of the cycle's rigid
+    staging block in one blocked pass (mesh-invariant ordinals);
   * `descent_tail`    — the R1 internal-descent tail as a blocked
     kernel (per-block while_loop over `protocol.deliver_rules`);
   * `threshold_step`  — problem-generic fused margin/test/Send
@@ -18,18 +18,19 @@ tests/test_kernels.py in interpret mode on CPU CI):
     own `test` inside the kernel body).
 
 The engine (`engine.jax_backend`) wires these into the cycle body
-behind the `PeerPlane` layer, so the sharded engine runs the same
-kernels under shard_map on replicated window data.
+behind the `PeerPlane` layer. Every kernel operates on SHARD-LOCAL
+windows under the owner-partitioned wheel — the sharded engine runs
+them inside shard_map on its own lanes' data, no replicated window.
 """
 from repro.kernels.wheel.descent import descent_reference, descent_tail
 from repro.kernels.wheel.due_dedup import due_dedup, due_dedup_reference
-from repro.kernels.wheel.enqueue import enqueue_stage, enqueue_stage_reference
+from repro.kernels.wheel.enqueue import stage_rows, stage_rows_reference
 from repro.kernels.wheel.threshold_step import threshold_step
 
 WHEEL_KERNELS = ("dedup", "enqueue", "descent", "threshold")
 
 __all__ = [
-    "WHEEL_KERNELS", "due_dedup", "due_dedup_reference", "enqueue_stage",
-    "enqueue_stage_reference", "descent_tail", "descent_reference",
+    "WHEEL_KERNELS", "due_dedup", "due_dedup_reference", "stage_rows",
+    "stage_rows_reference", "descent_tail", "descent_reference",
     "threshold_step",
 ]

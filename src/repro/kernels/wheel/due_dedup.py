@@ -5,15 +5,16 @@ link per cycle, a representative window row per touched peer for the
 react, and the alert force mask. The XLA path does this through the
 dense per-link scatter-max plane (`PeerPlane.link_max` over pad*3
 cells, then gathers back) — O(pad) memory traffic for an O(window)
-question, and a psum/pmax boundary exchange per plane on the sharded
-engine.
+question.
 
 This kernel answers the question window-locally instead: for window
 rows i, j (both <= WW), row j beats row i on the same link iff
 ``flat[j] == flat[i]`` — a blocked O(WW^2) all-pairs max that is pure
-VPU compute (no scatter, no O(pad) plane, and *replicated* under
-shard_map: the sharded engine drops two collectives when this kernel
-is on). One fused pass accumulates, per window row,
+VPU compute (no scatter, no O(pad) plane). The window it sees is the
+SHARD-LOCAL drain window: under the owner-partitioned wheel every row
+already lives in the lane of its DEST owner, so winner election is
+lane-local by invariant and the kernel runs per shard with no
+collective either way. One fused pass accumulates, per window row,
 
   * ``best``  — max window index of an accepting DATA row on its link,
   * ``abest`` — same for ALERT rows,

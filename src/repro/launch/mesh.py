@@ -26,7 +26,10 @@ def make_engine_mesh(n_shards: int = 0):
     """One-axis ("shard",) mesh for the sharded superstep engine
     (`repro.engine.sharded`): the first `n_shards` local devices (all of
     them when 0). Power-of-two sizes only — the engine's padded tables
-    split into contiguous power-of-two row blocks."""
+    split into contiguous power-of-two row blocks, and the wheel's
+    owner-lane axis (`jax_backend.MAX_LANES` = 8 lanes) must divide
+    evenly across shards (`lanes % n_shards == 0`), which caps engine
+    meshes at 8 devices. Also the target for `engine.resize_mesh`."""
     import numpy as np
     from jax.sharding import Mesh
 

@@ -14,8 +14,17 @@ levels:
     legitimately differ — but quantization, membership bookkeeping and
     the decision itself may not.
   * `assert_trajectory_parity` (jax vs sharded, any mesh size): all of
-    the above PLUS identical cycle and message counts — the sharded
-    engine must be bit-identical in trajectory (DESIGN.md §Sharding).
+    the above PLUS identical cycle/message counts AND identical
+    per-event wheel-occupancy snapshots (t, in-flight rows, messages,
+    deferrals — the partitioned wheel may not lose, duplicate or
+    re-time a single row) — the sharded engine must be bit-identical
+    in trajectory (DESIGN.md §Sharding).
+
+Schedules also carry `resize` events: engines exposing `resize_mesh`
+re-partition onto a different mesh size MID-RUN (clamped to the local
+device count); everyone else no-ops. The occupancy trace pins that the
+trajectory is invariant under the resize. Device engines additionally
+run their global row-conservation check after every event.
 
 Consumed three ways: tests/test_sharded.py runs the fixed CI grid
 in-process (numpy vs jax) and via subprocess on 8 virtual devices
@@ -100,11 +109,14 @@ def make_schedule(problem_name: str, seed: int, churn: bool = True) -> Dict:
     n_cur = n
     events: List[Tuple] = []
     n_events = int(rng.integers(3, 7))
-    kinds = ["step", "set"] + (["join", "leave"] if churn else []) + ["settle"]
+    kinds = (["step", "set"] + (["join", "leave"] if churn else [])
+             + ["settle", "resize"])
     for _ in range(n_events):
         kind = str(rng.choice(kinds))
         if kind == "step":
             events.append(("step", int(rng.integers(1, 41))))
+        elif kind == "resize":
+            events.append(("resize", int(rng.choice([1, 2, 4, 8]))))
         elif kind == "set":
             k = int(rng.integers(1, max(2, n_cur // 4)))
             idx = np.sort(rng.choice(n_cur, size=k, replace=False))
@@ -144,6 +156,18 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
     def truth() -> int:
         return problem.global_output(eng.data())
 
+    wheel_trace: List[Tuple] = []
+
+    def snap() -> None:
+        # wheel-occupancy snapshot (device family only — numpy has no
+        # wheel): t / in-flight rows / messages / deferrals must match
+        # bit for bit between jax and sharded at every event boundary
+        if hasattr(eng, "in_flight") and hasattr(eng, "deferred"):
+            wheel_trace.append((eng.t, eng.in_flight, eng.messages_sent,
+                                eng.deferred))
+        if hasattr(eng, "check_conservation"):
+            eng.check_conservation()  # raises on any lost/duplicated row
+
     for ev in schedule["events"]:
         if ev[0] == "step":
             eng.step(ev[1])
@@ -153,11 +177,18 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
             eng.join(ev[1], vote=ev[2])
         elif ev[0] == "leave":
             eng.leave(ev[1])
+        elif ev[0] == "resize":
+            if hasattr(eng, "resize_mesh"):
+                import jax
+
+                eng.resize_mesh(min(ev[1], jax.local_device_count()))
         else:  # settle: quiesce mid-schedule
             res = eng.run_until_converged(truth(), max_cycles=MAX_CYCLES)
             assert res["converged"] == 1.0, (schedule["problem"],
                                              schedule["seed"], ev, res)
+        snap()
     res = eng.run_until_converged(truth(), max_cycles=MAX_CYCLES)
+    snap()
     assert res["converged"] == 1.0, (schedule["problem"], schedule["seed"],
                                      res)
     return {
@@ -169,6 +200,7 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
         "dropped": int(np.asarray(eng.dropped)),
         "cycles": int(res["cycles"]),
         "messages": int(res["messages"]),
+        "wheel": wheel_trace,
         "truth": truth(),
     }
 
@@ -214,6 +246,8 @@ def assert_trajectory_parity(a: Dict, b: Dict, ctx=""):
     assert_state_parity(a, b, ctx)
     assert a["cycles"] == b["cycles"], (ctx, a["cycles"], b["cycles"])
     assert a["messages"] == b["messages"], (ctx, a["messages"], b["messages"])
+    assert a["wheel"] == b["wheel"], (
+        ctx, "wheel-occupancy traces diverge", a["wheel"], b["wheel"])
 
 
 def digest(result: Dict) -> str:

@@ -6,17 +6,20 @@ Run once to freeze behaviour:
 
 Two frozen grids live in tests/golden_majority.json:
 
-  * ``cells`` / ``batched`` — the majority engine, captured at the
-    PR 3 HEAD (pre-problem-layer). tests/test_problems.py replays them:
-    cycles, message counts and full output vectors must stay
-    bit-identical through every later refactor (the problem layer, the
-    peer-plane/sharding rework, ...). Re-running this script must
-    reproduce them EXACTLY — a changed majority cell means the engine's
-    trajectory drifted and the capture must not be committed.
-  * ``problems`` — `MeanMonitor` and `L2Thresh` trajectories (captured
-    at the PR 5 HEAD), so every SHIPPED problem is pinned across
-    versions, not just majority: initial convergence, a full-width data
-    flip, then churn, on both backends.
+  * ``cells`` / ``batched`` — the majority engine. The numpy cells are
+    the PR 3 HEAD trajectories (pre-problem-layer) and have never
+    moved; the jax cells were re-anchored at the owner-partitioned
+    wheel (PR 7 — lane-relative delay ordinals legitimately re-time
+    deliveries; outputs and vote hashes reproduced the old capture
+    exactly). tests/test_problems.py replays them: cycles, message
+    counts and full output vectors must stay bit-identical through
+    every later refactor. Re-running this script must reproduce them
+    EXACTLY — a changed cell means the engine's trajectory drifted and
+    the capture must not be committed.
+  * ``problems`` — `MeanMonitor` and `L2Thresh` trajectories (numpy:
+    PR 5 HEAD; jax: PR 7 re-anchor), so every SHIPPED problem is
+    pinned across versions, not just majority: initial convergence, a
+    full-width data flip, then churn, on both backends.
 """
 import hashlib
 import json
@@ -172,8 +175,9 @@ def run_batch():
 def main():
     path = os.path.join(os.path.dirname(__file__), "golden_majority.json")
     out = {
-        "comment": "pre-refactor majority engine trajectories (PR 3 HEAD)"
-                   " + mean/l2 problem trajectories (PR 5 HEAD)",
+        "comment": "majority + mean/l2 engine trajectories (numpy: "
+                   "PR 3/5 HEAD; jax: PR 7 owner-partitioned-wheel "
+                   "re-anchor, output hashes unchanged)",
         "cells": [run_cell(*c) for c in GRID],
         "batched": run_batch(),
         "problems": [run_problem_cell(c) for c in PROBLEM_GRID],

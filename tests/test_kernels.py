@@ -33,8 +33,8 @@ from repro.kernels.wheel._common import in_segment
 from repro.kernels.wheel.descent import descent_reference, descent_tail_kernel
 from repro.kernels.wheel.due_dedup import (due_dedup_kernel,
                                            due_dedup_reference)
-from repro.kernels.wheel.enqueue import (enqueue_stage_kernel,
-                                         enqueue_stage_reference)
+from repro.kernels.wheel.enqueue import (stage_rows_kernel,
+                                         stage_rows_reference)
 from repro.kernels.wheel.threshold_step import threshold_step_kernel
 
 pytestmark = pytest.mark.pallas
@@ -119,32 +119,33 @@ def test_due_dedup_no_alerts():
     assert not np.asarray(got[3]).any()  # no alert_write without alerts
 
 
-# -- enqueue_stage: strided class gather + DELIVER_T stamping -------------
+# -- stage_rows: ordinal-keyed delay classes + DELIVER_T stamping ---------
 
 @pytest.mark.parametrize("m,roww", [(2304, 8), (2310, 9), (40, 8)])
-def test_enqueue_stage_matches_slicing(m, roww):
+def test_stage_rows_matches_reference(m, roww):
     rng = np.random.default_rng(m)
-    mp = m + (-m % 10)
-    dense = np.zeros((mp, roww), np.uint32)
-    dense[:m] = rng.integers(0, 2**32, (m, roww), dtype=np.uint64)
-    dense = jnp.asarray(dense)
-    delays = jnp.asarray(rng.permutation(10) + 1, jnp.int32)
+    rows = jnp.asarray(
+        rng.integers(0, 2**32, (m, roww), dtype=np.uint64).astype(np.uint32))
+    alert = jnp.asarray(rng.random(m) < 0.15)
+    mask = rng.random(m) < 0.6
+    # ordinal as the engine builds it: rank of the row among the live
+    # rows of its staging block (-1 before the first live row)
+    ordinal = jnp.asarray(np.cumsum(mask.astype(np.int32)) - 1)
+    perm = jnp.asarray(rng.permutation(10) + 1, jnp.int32)
     t = jnp.asarray(97, jnp.int32)
-    k_tot = jnp.asarray(m - 7, jnp.int32)
     dt_col = roww - 1
-    want = enqueue_stage_reference(dense, delays, t, k_tot, dt_col)
-    got = enqueue_stage_kernel(dense, delays, t, k_tot, dt_col,
-                               interpret=True)
-    _eq(got[0], want[0], "staged")
-    _eq(got[1], want[1], "k_c")
-    # and both must equal the historical python slicing
-    cw = mp // 10
-    for c in range(10):
-        rows_c = np.asarray(dense)[c::10].copy()
-        rows_c[:, dt_col] = np.uint32(97 + int(delays[c]))
-        _eq(want[0][c], rows_c, f"class {c} vs dense[c::10]")
-        assert int(want[1][c]) == int(np.clip((int(k_tot) - c + 9) // 10,
-                                              0, cw))
+    want = stage_rows_reference(rows, alert, ordinal, perm, t, dt_col)
+    got = stage_rows_kernel(rows, alert, ordinal, perm, t, dt_col,
+                            interpret=True)
+    _eq(got, want, "staged")
+    # and the reference must equal the stated semantics row by row
+    wn = np.asarray(want)
+    on = np.asarray(ordinal)
+    an = np.asarray(alert)
+    pn = np.asarray(perm)
+    _eq(wn[:, :dt_col], np.asarray(rows)[:, :dt_col], "non-DT columns")
+    due = np.where(an, 97 + 1, 97 + pn[on % 10]).astype(np.uint32)
+    _eq(wn[:, dt_col], due, "DELIVER_T semantics")
 
 
 # -- descent: the R1 internal-descent tail --------------------------------
@@ -308,7 +309,9 @@ def test_deferred_counts_each_row_once():
     ring = Ring.random(n, d=18, seed=3)
     eng = JaxEngine(ring, votes, seed=1, kernel="ref", work_budget=32)
     eng.step(cycles=1)  # init storm lands in the wheel
-    backlog = max(int(np.asarray(eng._st.wcnt).max()) - 32, 0)
+    # budget is per lane now: a (lane, slot) cell above lane_budget
+    # must wait for a later cycle
+    backlog = max(int(np.asarray(eng._st.wcnt).max()) - eng.lane_budget, 0)
     assert backlog > 0, "config must actually overflow the budget"
     eng.step(cycles=30)
     # once-per-row: bounded by total rows ever enqueued (~3n + resends),
