@@ -15,6 +15,20 @@ true majority of the surviving vote set. Recorded per backend:
     included), written to ``results/BENCH_churn.json`` so the perf
     trajectory is tracked PR over PR.
 
+Fault rows (DESIGN.md §10) extend the same JSON with
+reconvergence-vs-n curves under the armed fault plane:
+
+  * ``abrupt`` — one silent crash after convergence; recorded are the
+    detection latency (crash -> the detector's synthesized Alg. 2
+    leave) and the survivors' reconvergence cycles;
+  * ``mass`` — Poisson churn with random crashes plus the paper's
+    burst scenarios (`mass_join`, `range_fail`); the detector then
+    evicts every silent peer and the survivors reconverge.
+
+Both scenarios assert the loss ledger on every row: ``dropped == 0``
+(no table overflow — losses are injected, never accidental) and
+``lost_to_fault`` itemized, with `check_conservation()` exact.
+
 Run:  PYTHONPATH=src python -m benchmarks.run --only churn
 """
 from __future__ import annotations
@@ -27,6 +41,8 @@ import numpy as np
 
 DEFAULT_SIZES = (256, 1024)
 DEFAULT_EVENTS = 32
+FAULT_SIZES = (64, 256, 1024)
+FAULT_EVENTS = 24
 OUT_PATH = os.path.join("results", "BENCH_churn.json")
 
 
@@ -65,7 +81,11 @@ def bench_backend(backend: str, n: int, events: int, seed: int = 0) -> dict:
     votes[rng.choice(n, int(n * 0.4), replace=False)] = 1
     sched = _schedule(ring, events, seed + 1)
 
-    eng = make_engine(backend, ring, votes, seed=seed + 2)
+    # churn-heavy schedules spike per-lane wheel occupancy (alert bursts
+    # + re-sends) — the device engine gets the same headroom the sharded
+    # BENCH rows run with so a transient peak never drops a message
+    kw = {"capacity_per_peer": 8} if backend == "jax" else {}
+    eng = make_engine(backend, ring, votes, seed=seed + 2, **kw)
     r0 = eng.run_until_converged(truth=0, max_cycles=100_000)
     eng.block_until_ready()
 
@@ -94,8 +114,151 @@ def bench_backend(backend: str, n: int, events: int, seed: int = 0) -> dict:
     }
 
 
+def _fault_setup(backend: str, n: int, seed: int, fcfg):
+    """Converged engine with an armed fault plane + its vote plane."""
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+
+    rng = np.random.default_rng(seed)
+    ring = Ring.random(n, 32, seed=seed)
+    votes = np.zeros(n, np.int64)
+    votes[rng.choice(n, int(n * 0.4), replace=False)] = 1
+    kw = {"capacity_per_peer": 8} if backend == "jax" else {}
+    eng = make_engine(backend, ring, votes, seed=seed + 2, faults=fcfg, **kw)
+    r0 = eng.run_until_converged(truth=0, max_cycles=100_000)
+    eng.block_until_ready()
+    return eng, rng, int(r0["cycles"])
+
+
+def _ledger(eng) -> dict:
+    """Loss accounting shared by both fault rows — asserted, not just
+    recorded: an overflow drop would silently fake message loss."""
+    eng.check_conservation()
+    dropped = int(getattr(eng, "dropped", 0))
+    assert dropped == 0, f"table overflow ({dropped}) is not a fault"
+    return {"dropped": dropped, "lost_to_fault": int(eng.lost_to_fault)}
+
+
+def bench_abrupt(backend: str, n: int, seed: int = 0) -> dict:
+    """One peer fails silently (no Alg. 2 notification): its tree
+    neighbors alone must suspect, probe, and evict exactly the dead
+    address, after which the survivors reconverge."""
+    from repro.engine.base import FaultConfig
+
+    fcfg = FaultConfig(suspect_after=25, evict_after=120, seed=seed + 3)
+    eng, rng, init_cycles = _fault_setup(backend, n, seed, fcfg)
+
+    victim = int(rng.integers(0, eng.ring.n))
+    dead_addr = int(eng.ring.addrs[victim])
+    t_crash = eng.t
+    eng.crash(victim)
+    while not eng.evictions:
+        eng.step(16)
+        assert eng.t - t_crash < 20_000, "failure detector never fired"
+    evicted = [a for _, a in eng.evictions]
+    assert evicted == [dead_addr], f"evicted {evicted}, want [{dead_addr}]"
+
+    t1, m1 = eng.t, eng.messages_sent
+    v = eng.votes()
+    truth = int(2 * v.sum() >= v.size)
+    res = eng.run_until_converged(truth=truth, max_cycles=100_000,
+                                  stable_for=10)
+    row = {
+        "backend": backend, "n": n,
+        "initial_convergence_cycles": init_cycles,
+        "detect_evict_cycles": int(eng.evictions[0][0] - t_crash),
+        "reconverge_cycles": int(res["cycles"] - t1),
+        "reconverge_messages": int(eng.messages_sent - m1),
+        "converged": res["converged"],
+    }
+    row.update(_ledger(eng))
+    return row
+
+
+def bench_mass_churn(backend: str, n: int, events: int,
+                     seed: int = 0) -> dict:
+    """Poisson churn with random crashes plus the `mass_join` /
+    `range_fail` bursts. Crashes stay undiscovered during the storm
+    (`evict_after` is sized past the whole schedule so the shadow ring
+    never drifts); afterwards the detector evicts every silent address
+    and the survivors reconverge on the remaining vote set."""
+    from repro.core.churn import random_schedule
+    from repro.core.dht import Ring
+    from repro.engine.base import FaultConfig
+
+    burst = max(2, n // 128)
+    sched = random_schedule(Ring.random(n, 32, seed=seed), events, seed + 1,
+                            p_leave=0.25, p_crash=0.25, mean_gap=4.0,
+                            mass_join=burst, range_fail=burst)
+    crashed = sorted(int(snap[2]) for op, snap in zip(sched.ops, sched.snaps)
+                     if op[0] == "crash")
+    suspect_after = 25
+    fcfg = FaultConfig(
+        suspect_after=suspect_after,
+        evict_after=int(sched.gaps.sum()) + 2 * suspect_after + 64,
+        seed=seed + 3)
+    eng, _, init_cycles = _fault_setup(backend, n, seed, fcfg)
+
+    t_storm, m_storm = eng.t, eng.messages_sent
+    sched.apply(eng)
+    eng.block_until_ready()
+    churn_cycles = eng.t - t_storm
+    t_evict = eng.t
+    while eng.dead_mask().any():
+        eng.step(32)
+        assert eng.t - t_evict < 100_000, "failure detector never drained"
+    evicted = sorted(a for _, a in eng.evictions)
+    assert evicted == crashed, f"evicted {evicted}, want {crashed}"
+
+    t1, m1 = eng.t, eng.messages_sent
+    v = eng.votes()
+    truth = int(2 * v.sum() >= v.size)
+    res = eng.run_until_converged(truth=truth, max_cycles=100_000,
+                                  stable_for=10)
+    row = {
+        "backend": backend, "n_start": n, "n_end": int(eng.ring.n),
+        "events": len(sched.ops), "crashes": len(crashed),
+        "initial_convergence_cycles": init_cycles,
+        "churn_cycles": int(churn_cycles),
+        "evict_all_cycles": int(t1 - t_evict),
+        "reconverge_cycles": int(res["cycles"] - t1),
+        "reconverge_messages": int(eng.messages_sent - m1),
+        "churn_messages": int(m1 - m_storm),
+        "converged": res["converged"],
+    }
+    row.update(_ledger(eng))
+    return row
+
+
+def run_faults(csv, results: dict, fault_sizes, fault_events: int,
+               backends) -> None:
+    """Reconvergence-vs-n curves under the armed fault plane, appended
+    to the churn JSON as ``fault_rows``."""
+    results["fault_rows"] = []
+    for n in fault_sizes:
+        frow = {"n": n, "abrupt": {}, "mass": {}}
+        for backend in backends:
+            a = bench_abrupt(backend, n)
+            frow["abrupt"][backend] = a
+            csv(f"churn_fault,scenario=abrupt,n={n},backend={backend},"
+                f"detect_evict_cycles={a['detect_evict_cycles']},"
+                f"reconverge_cycles={a['reconverge_cycles']},"
+                f"lost={a['lost_to_fault']},dropped={a['dropped']},"
+                f"converged={a['converged']:.0f}")
+            m = bench_mass_churn(backend, n, fault_events)
+            frow["mass"][backend] = m
+            csv(f"churn_fault,scenario=mass,n={n},backend={backend},"
+                f"crashes={m['crashes']},"
+                f"evict_all_cycles={m['evict_all_cycles']},"
+                f"reconverge_cycles={m['reconverge_cycles']},"
+                f"lost={m['lost_to_fault']},dropped={m['dropped']},"
+                f"converged={m['converged']:.0f}")
+        results["fault_rows"].append(frow)
+
+
 def run(csv, sizes=DEFAULT_SIZES, events: int = DEFAULT_EVENTS,
-        out_path: str = OUT_PATH, backends=("numpy", "jax")):
+        out_path: str = OUT_PATH, backends=("numpy", "jax"),
+        fault_sizes=FAULT_SIZES, fault_events: int = FAULT_EVENTS):
     import jax
 
     from repro.core.dht import Ring
@@ -130,6 +293,9 @@ def run(csv, sizes=DEFAULT_SIZES, events: int = DEFAULT_EVENTS,
             csv(f"churn_speedup,n={n},jax_over_numpy={row['jax_over_numpy']}x,"
                 f"device={results['device']}")
         results["rows"].append(row)
+
+    if fault_sizes:
+        run_faults(csv, results, fault_sizes, fault_events, backends)
 
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:

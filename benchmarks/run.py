@@ -133,8 +133,12 @@ def main() -> None:
             # rebuilds the jitted programs (jax.jit retraces per shape),
             # so jax churn is one join/leave trace + reuse, not a per-
             # event re-jit storm
+            # the fault row arms the fault plane end to end in CI: one
+            # abrupt crash (detect -> evict -> reconverge) and one
+            # mass-churn storm per backend at n=64
             ("churn", lambda c: churn.run(
                 c, sizes=(256,), events=4, backends=("numpy", "jax"),
+                fault_sizes=(64,), fault_events=8,
                 out_path=sp("BENCH_churn.json"))),
             ("sweep", lambda c: sweep.run(
                 c, **sweep.SMOKE, margins=(0.3, 0.7), backend=b,

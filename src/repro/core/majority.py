@@ -46,9 +46,176 @@ from .addressing import UP, CW, CCW
 from .dht import Ring
 from . import notify as N
 from . import routing as R
-from .simulator import MessageTable, random_delays
+from .simulator import KIND_DATA, KIND_PROBE, MessageTable, random_delays
 
 NDIR = 3
+
+
+def monitored_links(ring: Ring, pos: np.ndarray, dead: np.ndarray):
+    """(peers, dirs, monitored) over every (peer, dir) pair of `ring`:
+    `monitored` keeps links that structurally exist and whose near end
+    is alive. No first-hop self test: a link whose dest address the
+    near peer owns itself can still *route* to another peer (descent
+    through the peer's own unoccupied positions), so filtering on the
+    first hop would blind the detector to exactly those neighbors —
+    self-resolving links instead stay fresh through their own probe
+    accepts and wasted directions are filtered by `resolve_far` (-1) at
+    eviction time. Module-level (pure host numpy) so the device
+    backends' boundary eviction sweep shares the exact link-selection
+    rule with the reference detector."""
+    n = int(ring.n)
+    peers = np.repeat(np.arange(n, dtype=np.int64), NDIR)
+    dirs = np.tile(np.arange(NDIR, dtype=np.int64), n)
+    valid, _, _, _, _ = R.send_batch(ring, peers, dirs, pos=pos)
+    monitored = valid & ~dead[peers]
+    return peers, dirs, monitored
+
+
+def resolve_far(ring: Ring, pos: np.ndarray, peers: np.ndarray,
+                dirs: np.ndarray) -> np.ndarray:
+    """The *effective* tree neighbor of each (peer, dir) link: the peer
+    a message sent on that link would be accepted at, found by the
+    ordinary Alg. 1 routing (owner-of-neighbor-position is NOT it —
+    routing descends through unoccupied positions). -1 for the wasted
+    directions whose sends die at an unoccupied leaf; those links stay
+    silent forever but can never evict anyone."""
+    valid, origin, dest, edge, has_edge = R.send_batch(
+        ring, peers, dirs, pos=pos)
+    far = np.full(peers.shape, -1, np.int64)
+    act = valid.copy()
+    dest, edge, has_edge = dest.copy(), edge.copy(), has_edge.copy()
+    for _ in range(4 * ring.d + 8):
+        ai = np.nonzero(act)[0]
+        if ai.size == 0:
+            break
+        status, owner, nd, ne, nhe = R.step_batch(
+            ring, origin[ai], dest[ai], edge[ai], has_edge[ai], pos=pos)
+        acc = status == R.ACCEPT
+        far[ai[acc]] = owner[acc]
+        act[ai[acc | (status == R.DROP)]] = False
+        fwd = status == R.FORWARD
+        dest[ai[fwd]] = nd[fwd]
+        edge[ai[fwd]] = ne[fwd]
+        has_edge[ai[fwd]] = nhe[fwd]
+    return far
+
+
+NEVER_HEARD = -(1 << 30)  # int32-safe "no link ever resolved here"
+
+
+def accuse(ring: Ring, pos: np.ndarray, peers: np.ndarray,
+           dirs: np.ndarray, stamps: np.ndarray, last_heard: np.ndarray,
+           fresh: np.ndarray, margin: int) -> np.ndarray:
+    """Per-link accused peer index (-1: nobody) for *stale* links.
+
+    A silent link cannot know WHERE on its route the traffic died — a
+    probe swallowed by a crashed transit hop leaves the link exactly as
+    silent as a dead far endpoint would, so blaming the resolved
+    endpoint convicts bystanders whose only inbound routes transit a
+    crashed peer. Evidence is only good up to the first silent hop:
+    each stale link walks its Alg. 1 route in hop order and accuses the
+    first handling owner that cannot be exonerated. A hop is
+    transparent only when somebody heard it *after this link's probes
+    started dying* — `last_heard[hop] > stamp + margin`, one probe
+    round past the link's own stamp. The absolute `evict_after`
+    horizon is not enough for transit: in a quiet converged network
+    links go stale at different phases, so a transit peer crashing
+    *after* the link's last refresh still looks fresh at the eviction
+    horizon while it silently eats every probe. An unexonerated hop
+    that is still inside the horizon therefore *blocks* the walk
+    without being accused (it may be the culprit, but freshness
+    vetoes conviction — it either answers a probe soon or matures
+    into an accusable corpse); an unexonerated hop past the horizon
+    takes the blame. The near peer's own hops are skipped, and a
+    route whose every hop is vouched for accuses nobody (its silence
+    is the route's fault, not the endpoint's)."""
+    valid, origin, dest, edge, has_edge = R.send_batch(
+        ring, peers, dirs, pos=pos)
+    accused = np.full(peers.shape, -1, np.int64)
+    act = valid.copy()
+    dest, edge, has_edge = dest.copy(), edge.copy(), has_edge.copy()
+    for _ in range(4 * ring.d + 8):
+        ai = np.nonzero(act)[0]
+        if ai.size == 0:
+            break
+        status, owner, nd, ne, nhe = R.step_batch(
+            ring, origin[ai], dest[ai], edge[ai], has_edge[ai], pos=pos)
+        blocked = ((owner != peers[ai])
+                   & (last_heard[owner] <= stamps[ai] + margin))
+        dark = blocked & ~fresh[owner]
+        accused[ai[dark]] = owner[dark]
+        fwd = (status == R.FORWARD) & ~blocked
+        act[ai[~fwd]] = False
+        dest[ai[fwd]] = nd[fwd]
+        edge[ai[fwd]] = ne[fwd]
+        has_edge[ai[fwd]] = nhe[fwd]
+    return accused
+
+
+def elect_eviction(ring: Ring, pos: np.ndarray, peers: np.ndarray,
+                   dirs: np.ndarray, monitored: np.ndarray,
+                   evict: np.ndarray, heard: np.ndarray,
+                   margin: int) -> int:
+    """First-dark-hop accused peer with the lowest address, or -1.
+
+    `heard` is the flat per-(peer, dir) stamp table aligned with
+    `peers`/`dirs` (the caller passes its effective stamps — grace
+    floors and overlays already applied); `margin` is the exoneration
+    window, one probe round (`eviction_grace` at the caller). Two
+    gates protect live peers. Freshness vetoes absolutely: a peer some
+    monitored link heard within `evict_after` cannot be accused — a
+    live peer keeps at least one inbound link fresh through probe acks
+    once a clear route to it exists. Then every link silent past
+    `evict_after` blames the first hop on its route that nobody heard
+    past the link's own stamp plus `margin` (`accuse`): a crashed
+    transit peer soaks up the blame for every route it blocks, and the
+    bystanders behind it stay untouched until the tree re-heals and a
+    probe reaches them. Mass failures drain one eviction per call: the
+    caller re-resolves routes and re-reads the stamps after each
+    synthesized leave, so accusations the eviction just explained
+    dissolve before they can fire."""
+    m = np.nonzero(monitored)[0]
+    if m.size == 0:
+        return -1
+    far = resolve_far(ring, pos, peers[m], dirs[m])
+    # wasted directions (-1) and self-resolving links (a peer's own
+    # silence never vouches for the peer itself) do not veto
+    ok = (far >= 0) & (far != peers[m])
+    n = int(ring.n)
+    stamps = np.asarray(heard, np.int64)
+    last_heard = np.full(n, NEVER_HEARD, np.int64)
+    np.maximum.at(last_heard, far[ok], stamps[m][ok])
+    fresh = np.zeros(n, bool)
+    fresh[far[ok & ~evict[m]]] = True
+    # only structurally resolving links accuse: a wasted direction
+    # (far == -1, its sends R2-drop at a leaf) or a self-resolving link
+    # is silent even in a fully healthy network, so its staleness
+    # carries no evidence about anyone on its route
+    s = m[evict[m] & ok]
+    if s.size == 0:
+        return -1
+    accused = accuse(ring, pos, peers[s], dirs[s], stamps[s],
+                     last_heard, fresh, int(margin))
+    cand = np.unique(accused[accused >= 0])
+    if cand.size == 0:
+        return -1
+    return int(cand[np.argmin(ring.addrs[cand])])
+
+
+def eviction_grace(n: int, suspect_after: int) -> int:
+    """Minimum conviction deferral after a synthesized leave.
+
+    Unanimity alone cannot protect a peer route-isolated by a
+    *contiguous* dead range (`range_fail`): every one of its links goes
+    stale, so no veto exists, and a sweep that drains the whole range
+    back-to-back would evict the bystander before a single probe could
+    cross the re-healed routes. Each eviction therefore defers further
+    convictions by one probe round (the `suspect_after` rate limit) plus
+    a control-plane round trip at tree depth — long enough for a live
+    peer's probe ack to land, short enough that a real mass failure
+    still drains in O(crashes * grace) cycles."""
+    depth = int(np.ceil(np.log2(max(int(n), 2))))
+    return int(suspect_after) + 2 * depth + 8
 
 
 class MajorityState:
@@ -112,7 +279,7 @@ class MajoritySimulator:
     decision rule (default: the paper's majority vote)."""
 
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
-                 problem: Optional[ThresholdProblem] = None):
+                 problem: Optional[ThresholdProblem] = None, faults=None):
         self.problem = get_problem(problem)
         data = self.problem.init_state(votes)
         assert data.shape[0] == ring.n
@@ -128,6 +295,19 @@ class MajoritySimulator:
         # output-moving event since the last convergence check? (engine
         # layer caches its convergence predicate behind this flag)
         self.dirty = True
+        # -- fault plane (DESIGN.md §10) — present but inert when disarmed
+        self.faults = faults  # engine.base.FaultConfig | None
+        # per-(peer, dir) failure-detector stamps: last cycle any traffic
+        # was accepted from / a probe was emitted towards that tree link
+        self.heard = np.zeros((ring.n, NDIR), np.int64)
+        self.probed = np.zeros((ring.n, NDIR), np.int64)
+        self.dead = np.zeros(ring.n, bool)  # crashed, not yet evicted
+        self.evictions = []  # [(cycle, evicted address), ...]
+        self._evict_floor = -(1 << 30)  # conviction grace after evictions
+        # fault draws come from their own stream so arming the plane with
+        # p_drop = p_delay = 0 leaves the message trajectory untouched
+        self.frng = (np.random.default_rng(faults.seed)
+                     if faults is not None else None)
         self._trigger_all_initial()
 
     # -- sending ------------------------------------------------------------
@@ -141,6 +321,12 @@ class MajoritySimulator:
         """
         if peers.size == 0:
             return
+        alive = ~self.dead[peers]
+        if not alive.all():  # crashed peers are silent — no sends, ever
+            peers, dirs = peers[alive], dirs[alive]
+            pay = pay[alive] if pay is not None else None
+            if peers.size == 0:
+                return
         st = self.state
         if pay is None:
             k = st.knowledge(peers)
@@ -187,6 +373,9 @@ class MajoritySimulator:
         receive; skipping the test wedges quiescence)."""
         self.state.X_in[peers, dirs] = 0
         self.state.last[peers, dirs] = 0
+        # an ALERT is fresh news about the link: the failure detector must
+        # not evict the *new* occupant on stamps aged against the old one
+        self.heard[peers, dirs] = self.t
         self.dirty = True
         self._send(peers, dirs)
         self._react(np.unique(np.asarray(peers)))
@@ -213,6 +402,11 @@ class MajoritySimulator:
         st.seq = np.insert(st.seq, new_idx, 0)
         st.last = np.insert(st.last, new_idx, 0, axis=0)
         st.n += 1
+        # joiner's detector stamps start at *now* — zeros would read as
+        # `t` cycles of silence and evict its brand-new neighbors
+        self.heard = np.insert(self.heard, new_idx, self.t, axis=0)
+        self.probed = np.insert(self.probed, new_idx, self.t, axis=0)
+        self.dead = np.insert(self.dead, new_idx, False)
         self.ring = ring_after
         self.pos = ring_after.positions()
         self._apply_change(N.join_event(ring_after, new_idx))
@@ -235,9 +429,43 @@ class MajoritySimulator:
         st.seq = np.delete(st.seq, idx)
         st.last = np.delete(st.last, idx, axis=0)
         st.n -= 1
+        self.heard = np.delete(self.heard, idx, axis=0)
+        self.probed = np.delete(self.probed, idx, axis=0)
+        self.dead = np.delete(self.dead, idx)
         self.ring = ring_after
         self.pos = ring_after.positions()
         self._apply_change(N.leave_event(ring_after, ring_before, idx))
+
+    def crash(self, idx: int):
+        """Abrupt failure: peer `idx` vanishes silently — its state rows
+        zero, in-flight messages it owns die, and *no* Alg. 2
+        notification fires. The ring keeps the address until the
+        neighbors' failure detectors synthesize the leave
+        (`_fault_tick`), which is the whole point of the fault plane."""
+        if self.faults is None:
+            raise RuntimeError(
+                "crash() requires an armed fault plane (faults=FaultConfig())")
+        if self.state.n <= 1:
+            raise ValueError("cannot crash the last peer")
+        if not 0 <= idx < self.state.n:
+            raise IndexError(f"peer index {idx} out of range [0, {self.state.n})")
+        if self.dead[idx]:
+            raise ValueError(f"peer {idx} already crashed")
+        st = self.state
+        self.dead[idx] = True
+        st.data[idx] = 0
+        st.X_in[idx] = 0
+        st.X_out[idx] = 0
+        st.seq[idx] = 0
+        st.last[idx] = 0
+        self.dirty = True
+        # in-flight messages whose next hop the crashed peer owns die
+        # with it (nobody is left to perform that DELIVER step)
+        m = self.msgs
+        live = np.nonzero(m.deliver_t >= 0)[0]
+        if live.size:
+            owners = np.asarray(self.ring.owner(m.dest[live]))
+            m.release(live[owners == idx], lost=True)
 
     def _apply_change(self, ev: "N.ChurnEvent"):
         """Common tail of join/leave, keeping every changed tree link
@@ -280,11 +508,34 @@ class MajoritySimulator:
 
     # -- cycle --------------------------------------------------------------
     def step(self):
-        """One simulation cycle: deliver due messages, route, accept, react."""
+        """One simulation cycle: deliver due messages (through the fault
+        plane when armed), route, accept, react, then run the failure
+        detector (probes + evictions)."""
         t = self.t
-        due = self.msgs.due(t)
+        m = self.msgs
+        due = m.due(t)
+        if due.size and self.faults is not None:
+            f = self.faults
+            # a hop handled by a crashed owner dies with it
+            owners = np.asarray(self.ring.owner(m.dest[due]))
+            lost = self.dead[owners]
+            is_data = m.kind[due] == KIND_DATA
+            # injected message faults hit the data plane only: probes and
+            # the (synchronous) Alg. 2 control traffic stay reliable so
+            # membership truth never forks between backends
+            if f.p_drop > 0.0:
+                lost |= is_data & (self.frng.random(due.size) < f.p_drop)
+            delayed = np.zeros(due.size, bool)
+            if f.p_delay > 0.0:
+                delayed = (is_data & ~lost
+                           & (self.frng.random(due.size) < f.p_delay))
+            if lost.any():
+                m.release(due[lost], lost=True)
+            if delayed.any():
+                di = due[delayed]
+                m.deliver_t[di] = random_delays(self.frng, di.size, t)
+            due = due[~lost & ~delayed]
         if due.size:
-            m = self.msgs
             status, owner, nd, ne, nhe = R.step_batch(
                 self.ring, m.origin[due], m.dest[due], m.edge[due],
                 m.has_edge[due], pos=self.pos,
@@ -294,12 +545,16 @@ class MajoritySimulator:
             acc = status == R.ACCEPT
             # dropped messages free their table slot immediately
             self.msgs.release(due[status == R.DROP])
-            # forwarded messages re-enter the network with a fresh delay
+            # forwarded messages re-enter the network with a fresh delay;
+            # probes ride the 1-cycle/hop control plane like device ALERTs
             fi = due[fwd]
             m.dest[fi] = nd[fwd]
             m.edge[fi] = ne[fwd]
             m.has_edge[fi] = nhe[fwd]
-            m.deliver_t[fi] = random_delays(self.rng, fi.size, t)
+            dl = random_delays(self.rng, fi.size, t)
+            if self.faults is not None:
+                dl = np.where(m.kind[fi] == KIND_PROBE, t + 1, dl)
+            m.deliver_t[fi] = dl
             # accepted messages update X_in with seq dedup
             ai = due[acc]
             if ai.size:
@@ -307,6 +562,18 @@ class MajoritySimulator:
                 recv = owner[acc]
                 vdir = A.direction_of(m.origin[ai], self.pos[recv], self.ring.d)
                 vdir = np.asarray(vdir, np.int64)
+                # every accept — data, duplicate or probe — is proof of
+                # life on that link
+                self.heard[recv, vdir] = t
+                probe = m.kind[ai] == KIND_PROBE
+                if probe.any():
+                    # a probe carries no payload; the ack is an ordinary
+                    # unconditional Send(v) — anti-entropy that also
+                    # repairs whatever state the drop faults destroyed
+                    m.release(ai[probe])
+                    self._send(recv[probe], vdir[probe])
+                    ai, recv, vdir = ai[~probe], recv[~probe], vdir[~probe]
+            if ai.size:
                 seqs = m.seq[ai]
                 # resolve multiple same-(peer,dir) deliveries: ascending-seq
                 # write order makes the newest message win
@@ -319,7 +586,74 @@ class MajoritySimulator:
                 self.msgs.release(ai)
                 # react: test() on affected peers
                 self._react(np.unique(recv))
+        if self.faults is not None:
+            self._fault_tick(t)
         self.t += 1
+
+    # -- failure detector (fault plane, DESIGN.md §10) ----------------------
+    def _monitored_links(self):
+        """Module-level `monitored_links` on the current ring (shared
+        with the device backends' boundary eviction sweep)."""
+        return monitored_links(self.ring, self.pos, self.dead)
+
+    def _resolve_far(self, peers: np.ndarray, dirs: np.ndarray) -> np.ndarray:
+        """Module-level `resolve_far` on the current ring (shared with
+        the device backends' boundary eviction sweep)."""
+        return resolve_far(self.ring, self.pos, peers, dirs)
+
+    def _fault_tick(self, t: int):
+        """Per-cycle failure-detector pass: emit R3-fenced probes on
+        suspected links; locally synthesize the Alg. 2 leave for the
+        first-dark-hop accused peer once links go silent past
+        `evict_after` (`elect_eviction` — lowest address first, fresh
+        peers immune: the same deterministic election the device
+        backends run)."""
+        f = self.faults
+        peers, dirs, monitored = self._monitored_links()
+        probe, _ = P.suspicion_rules(np, self.heard.ravel(),
+                                     self.probed.ravel(), t,
+                                     f.suspect_after, f.evict_after)
+        pm = probe & monitored
+        if pm.any():
+            self._probe(peers[pm], dirs[pm], t)
+        if not f.evict_after:
+            return
+        while self.state.n > 1:
+            # the grace floor defers convictions (not probes) after an
+            # eviction so re-healed routes get one probe round first
+            heff = np.maximum(self.heard, self._evict_floor)
+            _, evict = P.suspicion_rules(np, heff.ravel(),
+                                         self.probed.ravel(), t,
+                                         f.suspect_after, f.evict_after)
+            if not (evict & monitored).any():
+                break
+            target = elect_eviction(self.ring, self.pos, peers, dirs,
+                                    monitored, evict, heff.ravel(),
+                                    eviction_grace(self.state.n,
+                                                   f.suspect_after))
+            if target < 0:
+                break
+            self.evictions.append((t, int(self.ring.addrs[target])))
+            self.leave(target)  # Alg. 2 verbatim: eviction IS a leave
+            self._evict_floor = t - f.evict_after + eviction_grace(
+                self.state.n, f.suspect_after)
+            peers, dirs, monitored = self._monitored_links()
+
+    def _probe(self, peers: np.ndarray, dirs: np.ndarray, t: int):
+        """Emit liveness probes on the given links: empty-payload
+        messages on the reliable 1-cycle/hop plane, seq-invisible (they
+        never touch the data dedup), origin-fenced by R3 like any other
+        traffic from a changed position."""
+        valid, origin, dest, edge, has_edge = R.send_batch(
+            self.ring, peers, dirs, pos=self.pos)
+        v = np.nonzero(valid)[0]
+        pw = self.problem.payload_width
+        self.msgs.enqueue(
+            origin[v], dest[v], edge[v], has_edge[v],
+            np.zeros((v.size, pw), np.int64), np.zeros(v.size, np.int64),
+            np.full(v.size, t + 1, np.int64), kind=KIND_PROBE,
+        )
+        self.probed[peers, dirs] = t
 
     # -- experiment helpers ---------------------------------------------------
     def run_until_converged(
@@ -329,7 +663,8 @@ class MajoritySimulator:
         start_msgs = self.messages_sent
         stable = 0
         for _ in range(max_cycles):
-            if self.problem.converged(np, self.state.outputs(), truth).all():
+            conv = self.problem.converged(np, self.state.outputs(), truth)
+            if conv[~self.dead].all():
                 stable += 1
                 if stable >= stable_for:
                     return {

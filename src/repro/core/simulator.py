@@ -22,6 +22,8 @@ import numpy as np
 MIN_DELAY, MAX_DELAY = 1, 10
 AVG_DELAY = (MIN_DELAY + MAX_DELAY) / 2  # "average message delay" = 5.5 ~ 5 cycles
 
+KIND_DATA, KIND_PROBE = 0, 1  # probe = fault-plane liveness ping (DESIGN.md §10)
+
 
 @dataclass
 class MessageTable:
@@ -38,7 +40,12 @@ class MessageTable:
     pay: np.ndarray = field(default=None)  # (capacity, P)
     seq: np.ndarray = field(default=None)
     deliver_t: np.ndarray = field(default=None)  # -1 == free slot
+    kind: np.ndarray = field(default=None)  # KIND_DATA | KIND_PROBE
     addr_dtype: type = np.uint64
+    # exact conservation ledger (enqueued == retired + lost + in_flight)
+    enqueued: int = 0
+    retired: int = 0
+    lost: int = 0
 
     def __post_init__(self):
         c = self.capacity
@@ -49,6 +56,7 @@ class MessageTable:
         self.pay = np.zeros((c, self.payload_width), np.int64)
         self.seq = np.zeros(c, np.int64)
         self.deliver_t = np.full(c, -1, np.int64)
+        self.kind = np.zeros(c, np.int8)
 
     @property
     def pay_ones(self) -> np.ndarray:
@@ -63,7 +71,7 @@ class MessageTable:
     def _grow(self, need: int):
         newcap = max(self.capacity * 2, self.capacity + need)
         for name in ("origin", "dest", "edge", "has_edge", "pay", "seq",
-                     "deliver_t"):
+                     "deliver_t", "kind"):
             old = getattr(self, name)
             new = np.zeros((newcap,) + old.shape[1:], old.dtype)
             if name == "deliver_t":
@@ -72,7 +80,8 @@ class MessageTable:
             setattr(self, name, new)
         self.capacity = newcap
 
-    def enqueue(self, origin, dest, edge, has_edge, pay, seq, deliver_t):
+    def enqueue(self, origin, dest, edge, has_edge, pay, seq, deliver_t,
+                kind=KIND_DATA):
         k = origin.shape[0]
         if k == 0:
             return
@@ -88,12 +97,21 @@ class MessageTable:
         self.pay[sl] = pay
         self.seq[sl] = seq
         self.deliver_t[sl] = deliver_t
+        self.kind[sl] = kind
+        self.enqueued += k
 
     def due(self, t: int) -> np.ndarray:
         return np.nonzero(self.deliver_t == t)[0]
 
-    def release(self, slots: np.ndarray):
+    def release(self, slots: np.ndarray, lost: bool = False):
+        """Free `slots`; a lost release charges the fault ledger instead
+        of the retired one (injected drop / crashed destination)."""
+        n = int(np.asarray(slots).size)
         self.deliver_t[slots] = -1
+        if lost:
+            self.lost += n
+        else:
+            self.retired += n
 
     @property
     def in_flight(self) -> int:

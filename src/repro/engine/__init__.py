@@ -83,6 +83,11 @@ def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
 
         return ShardedJaxEngine(ring, votes, seed=seed, mesh=mesh, **kwargs)
     if batch:
+        if kwargs.get("faults") is not None:
+            raise NotImplementedError(
+                "batch= and faults= do not compose yet (the failure "
+                "detector's eviction sweep is a host event path; vmapping "
+                "it over trials is a later PR)")
         if backend == "numpy":
             from .batched import BatchedNumpyEngine
 

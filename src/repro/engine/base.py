@@ -29,6 +29,7 @@ DESIGN.md §Churn):
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Callable, Dict, Protocol, Tuple, runtime_checkable
 
 import numpy as np
@@ -38,6 +39,49 @@ EngineResult = Dict[str, float]
 # the run lost messages to table overflow (device backend only; the host
 # table grows instead). An invalid run's other numbers are meaningless:
 # rerun with a larger capacity_per_peer.
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Deterministic fault-plane configuration (DESIGN.md §10).
+
+    Passing a `FaultConfig` to an engine (``faults=`` kwarg) arms three
+    orthogonal fault mechanisms, all seeded and backend-reproducible:
+
+    * ``crash(idx)`` becomes legal — the peer's rows zero silently, its
+      lane-resident wheel messages are counted ``lost_to_fault``, and
+      *no* Alg. 2 notification fires (abrupt failure, ROADMAP item 4);
+    * per-delivery probabilistic faults at the due-scan: each due data
+      message is independently dropped with ``p_drop`` or re-delayed
+      with ``p_delay`` (drawn from `(seed, t, slot)` hashes so numpy /
+      jax / sharded agree bit-for-bit). Alg. 2 ALERTs ride the reliable
+      control plane and are exempt — membership truth never forks;
+    * the timeout failure detector: per-direction `last_heard` stamps,
+      probes after ``suspect_after`` silent cycles
+      (`protocol.suspicion_rules`), and — when ``evict_after > 0`` — a
+      locally synthesized Alg. 2 leave for the dead address once
+      silence exceeds ``evict_after``.
+
+    ``evict_after`` must stay 0 when only message faults are wanted:
+    drops delay detection but must never change membership. Conversely
+    crash tests keep ``p_drop = 0`` so eviction timing is exact.
+    """
+
+    p_drop: float = 0.0
+    p_delay: float = 0.0
+    suspect_after: int = 40
+    evict_after: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 <= self.p_drop <= 1.0 and 0.0 <= self.p_delay <= 1.0):
+            raise ValueError("fault probabilities must lie in [0, 1]")
+        if self.suspect_after < 1:
+            raise ValueError("suspect_after must be >= 1")
+        if self.evict_after < 0:
+            raise ValueError("evict_after must be >= 0 (0 disables eviction)")
+        if self.evict_after and self.evict_after <= self.suspect_after:
+            raise ValueError("evict_after must exceed suspect_after")
 
 
 def run_convergence_loop(
@@ -100,6 +144,14 @@ class MajorityEngine(Protocol):
         """Messages lost to table overflow. Always 0 for the numpy
         backend (its table grows); a device run with dropped > 0 is
         invalid and `run_until_converged` flags it."""
+
+    @property
+    def lost_to_fault(self) -> int:
+        """Messages destroyed by the *injected* fault plane (crashes,
+        `FaultConfig.p_drop`). Itemized separately from `dropped` so
+        engine bugs stay distinguishable from injected faults:
+        `check_conservation` asserts
+        enqueued == retired + in_flight + dropped + lost_to_fault."""
 
     def outputs(self) -> np.ndarray:
         """(n,) current 0/1 output of every peer (n tracks churn)."""

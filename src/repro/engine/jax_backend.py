@@ -129,6 +129,14 @@ CONT = np.uint32(2)
 # it keeps the deferral counter from recounting the same standing
 # backlog row every cycle it sits over budget
 LATE = np.uint32(4)
+# bit 3: fault-plane liveness probe (DESIGN.md §10). Probe rows ride the
+# ALERT side-wheel (1 cycle/hop control plane) but are NOT Alg. 2
+# alerts: they never zero a link, never force the alert upcall, and are
+# R3 origin-fenced at churn like ordinary traffic. An accepted probe
+# refreshes the receiver's `heard` stamp and forces an unconditional
+# Send(v) back — the ack that keeps quiet-but-alive links from aging
+# into eviction
+PROBE = np.uint32(8)
 NO_MSG = np.uint32(0xFFFFFFFF)  # deliver_t sentinel: row is dead (fenced)
 NO_ADDR = np.uint32(0xFFFFFFFF)  # padded-ring sentinel: row is vacant
 
@@ -166,9 +174,11 @@ def knowledge_outputs(problem, inbox, x, pd: int):
     return problem.margin(jnp, knowledge(problem, inbox, x, pd)) >= 0
 
 
-def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
-    """Uniform 1..10 delay from (row, cycle, seed) via an integer mix
-    (event-path enqueues; the cycle path uses permutation strides)."""
+def _hash_u32(idx: jnp.ndarray, t: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
+    """The engine's integer mix as a raw uniform uint32 — shared by the
+    event-delay hash below and the fault plane's per-row drop/delay
+    draws (keyed on the GLOBAL window index so every mesh size draws the
+    same faults)."""
     h = idx.astype(_U32) * _U32(0x9E3779B1)
     h = h + t.astype(_U32) * _U32(0x85EBCA77) + salt.astype(_U32)
     h = h ^ (h >> _U32(16))
@@ -176,6 +186,13 @@ def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndar
     h = h ^ (h >> _U32(15))
     h = h * _U32(0x846CA68B)
     h = h ^ (h >> _U32(16))
+    return h
+
+
+def _hash_delay(idx: jnp.ndarray, t: jnp.ndarray, salt: jnp.ndarray) -> jnp.ndarray:
+    """Uniform 1..10 delay from (row, cycle, seed) via an integer mix
+    (event-path enqueues; the cycle path uses permutation strides)."""
+    h = _hash_u32(idx, t, salt)
     span = _U32(MAX_DELAY - MIN_DELAY + 1)
     return (MIN_DELAY + (h % span).astype(_I32)).astype(_I32)
 
@@ -278,6 +295,11 @@ class DeviceState(NamedTuple):
     deferred: jnp.ndarray       # (L,) int32 deliveries pushed past the budget
     enq: jnp.ndarray            # (L,) int32 rows ever appended (conservation)
     ret: jnp.ndarray            # (L,) int32 rows ever drained/retired
+    # fault plane (DESIGN.md §10; all-zero and untouched when disarmed)
+    dead: jnp.ndarray    # (pad,)   bool  crashed, not yet evicted (replicated)
+    heard: jnp.ndarray   # (pad*3,) int32 last-accept cycle stamp per link
+    probed: jnp.ndarray  # (pad*3,) int32 last-probe cycle stamp per link
+    lost: jnp.ndarray    # (L,)     int32 rows destroyed by injected faults
 
 
 class PeerPlane:
@@ -415,7 +437,7 @@ class JaxEngine:
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
                  capacity_per_peer: int = 6, work_budget: int = 0,
                  kernel: str = "auto", pad_to: int = 0, chunk: int = 256,
-                 problem=None, wheel_kernels="auto",
+                 problem=None, wheel_kernels="auto", faults=None,
                  _defer_state: bool = False):
         if ring.d > 32:
             raise ValueError(
@@ -464,6 +486,29 @@ class JaxEngine:
                 f"pick from {WHEEL_KERNELS}")
         self._wk = frozenset(wk_names) if kernel_on else frozenset()
         self._wk_interp = not _on_tpu()
+        # fault plane (DESIGN.md §10). Arming adds the probe side-channel
+        # to the cycle program; disarmed engines trace the exact pre-fault
+        # program (every fault branch is a Python-level `if` on the
+        # config). Probe rows need the XLA election path, so the fused
+        # dedup kernel is disabled while armed.
+        self._faults = faults
+        self._evictions = []
+        # host overlay for the eviction sweep: (near_addr, dir) -> stamp.
+        # The reference refreshes the routed ALERT *recipients'* `heard`
+        # synchronously at churn; on device those links only refresh when
+        # the routed alert row accepts, cycles later — the floor keeps
+        # the sweep from reading the gap as silence (`_stamp_churn_floor`)
+        self._heard_floor = {}
+        self._evict_floor = -(1 << 30)  # conviction grace after evictions
+        if faults is not None:
+            self._wk = self._wk - {"dedup"}
+            fr = np.random.default_rng(np.uint32(faults.seed) ^ 0xFA17)
+            self._fsalt_drop = np.uint32(fr.integers(0, 2**32, dtype=np.uint64))
+            self._fsalt_delay = np.uint32(fr.integers(0, 2**32, dtype=np.uint64))
+            self._p_drop_thr = np.uint32(
+                min(int(faults.p_drop * 2**32), 2**32 - 1))
+            self._p_delay_thr = np.uint32(
+                min(int(faults.p_delay * 2**32), 2**32 - 1))
 
         self.pad = int(pad_to) or _next_pow2(max(self.n + max(8, self.n // 8), 64))
         if self.pad < self.n:
@@ -509,6 +554,12 @@ class JaxEngine:
         # back-to-back churn events (<= 12 routed alerts) never overflow
         # even if every alert lands in one lane's slot
         self.lane_alert_w = max(16, ALERT_W // L)
+        if self._faults is not None:
+            # armed: probe bursts synchronize (after a quiet stretch all
+            # links suspect on the same cycle), and every probe in the
+            # ring can target ONE owner's lane+slot (the root); size for
+            # that worst case so detector traffic is never dropped
+            self.lane_alert_w = max(self.lane_alert_w, 3 * self.pad + 16)
         # physical lane-slot width: capacity + slack for the widest
         # contiguous write — the one-cycle slip block (lane_budget rows).
         # Appends are ranked scatters bounded by `lane_cap`, so the slip
@@ -535,6 +586,7 @@ class JaxEngine:
         self._steps = jax.jit(self._steps_impl, donate_argnums=(0,))
         self._chunk_run = jax.jit(self._chunk_impl, donate_argnums=(0,))
         self._conv = jax.jit(self._outputs_match)
+        self._crash = jax.jit(self._crash_impl, donate_argnums=(0,))
 
     def _initial_state(self, ring: Ring, votes: np.ndarray,
                        seed: int) -> DeviceState:
@@ -569,6 +621,10 @@ class JaxEngine:
             messages_sent=jnp.zeros(L, _I32),
             dropped=jnp.zeros(L, _I32), deferred=jnp.zeros(L, _I32),
             enq=jnp.zeros(L, _I32), ret=jnp.zeros(L, _I32),
+            dead=jnp.zeros(pd, bool),
+            heard=jnp.zeros(pd * NDIR, _I32),
+            probed=jnp.zeros(pd * NDIR, _I32),
+            lost=jnp.zeros(L, _I32),
         )
         return st._replace(**self._ring_views(st.addrs, st.n_live))
 
@@ -726,8 +782,13 @@ class JaxEngine:
         pd = st.x.shape[0]
         out = knowledge_outputs(self.problem, st.inbox, st.x, pd).astype(_I32)
         occ = self._plane.occ(st)
-        return self._plane.all_true(
-            self.problem.converged(jnp, out, truth) | ~occ)
+        ok = self.problem.converged(jnp, out, truth) | ~occ
+        if self._faults is not None:
+            # crashed-but-unevicted peers have no say in convergence
+            rows_l = (self._plane.lane_base(st.wcnt.shape[0])
+                      * self.lane_rows + jnp.arange(pd, dtype=_I32))
+            ok = ok | st.dead[rows_l]
+        return self._plane.all_true(ok)
 
     # -- event-path enqueue (ranked append; any width, per-row hash delay) --
 
@@ -778,6 +839,10 @@ class JaxEngine:
         order through `plane.gather_events` (identity on one device, an
         all_gather on the sharded plane)."""
         pd, d = st.x.shape[0], self.d  # pd: plane-local rows
+        if self._faults is not None:
+            rows_l = (self._plane.lane_base(st.wcnt.shape[0])
+                      * self.lane_rows + jnp.arange(pd, dtype=_I32))
+            touched = touched & ~st.dead[rows_l]  # the dead never send
         viol, pay = self._test_phase(st)  # (pd,3), (pd,3,P)
         eff = viol & touched[:, None]
         seq = st.out[:, NDIR * self.pw] + eff.any(1).astype(_I32)
@@ -844,6 +909,14 @@ class JaxEngine:
         w_origin, w_dest, w_edge = w[:, ORIGIN], w[:, DEST], w[:, EDGE]
         w_has_edge = ((w[:, HAS_EDGE] & _U32(1)) != 0) & live
         w_cont = (w[:, HAS_EDGE] & CONT) != 0
+        if self._faults is not None:
+            # probe rows ride the alert side-wheel but are NOT alerts:
+            # they route like data and on accept only refresh `heard`
+            # and force the ack Send
+            w_probe = (w[:, HAS_EDGE] & PROBE) != 0
+            is_alert = is_alert & ~w_probe
+        else:
+            w_probe = jnp.zeros(WW, bool)
         w_pay = w[:, PAY0:PAY0 + self.pw]  # (WW, P) uint32 payload bits
         w_seq = w[:, self._SEQ].astype(_I32)
 
@@ -853,6 +926,32 @@ class JaxEngine:
         a_self = st.addrs[owner]
         self_seg = self._in_segment(w_origin, a_prev, a_self)
         max_addr = st.addrs[st.n_live - 1]
+
+        # ---- injected fault plane at the due-scan (DESIGN.md §10).
+        # Rows whose receiving owner has crashed die with it (any kind);
+        # live data rows are independently dropped / re-delayed by
+        # seeded hashes keyed on the GLOBAL window index, so numpy sees
+        # the same policy and every mesh size draws identical faults.
+        # Probes and Alg. 2 ALERTs ride the reliable control plane —
+        # membership truth never forks. Lost / delayed rows are masked
+        # out of `live` BEFORE routing: they are not charged this cycle
+        # (a delayed row re-enters without CONT and is charged when it
+        # actually delivers, matching the reference simulator).
+        delay_m = jnp.zeros(WW, bool)
+        if self._faults is not None:
+            lost_m = live & st.dead[owner]
+            is_data_row = ~is_alert & ~w_probe
+            gwi = (wi + self._plane.lane_base(Ln) * WWl).astype(_U32)
+            if self._faults.p_drop > 0.0:
+                lost_m = lost_m | (live & is_data_row & (
+                    _hash_u32(gwi, st.t, jnp.asarray(self._fsalt_drop))
+                    < self._p_drop_thr))
+            if self._faults.p_delay > 0.0:
+                delay_m = (live & is_data_row & ~lost_m & (
+                    _hash_u32(gwi, st.t, jnp.asarray(self._fsalt_delay))
+                    < self._p_delay_thr))
+            live = live & ~lost_m & ~delay_m
+            n_lost_l = lost_m.reshape(Ln, WWl).sum(1).astype(_I32)
 
         # ---- Alg. 1 delivery, two-phase (shared rules with
         # deliver_network_step, restructured for the width/latency split:
@@ -941,6 +1040,14 @@ class JaxEngine:
         acc_a = acc & is_alert
         pl = self._plane  # all peer-plane access below goes through it
         sent = pd * NDIR  # scatter sentinel (owned by no plane row/shard)
+        heard = st.heard
+        if self._faults is not None:
+            acc_p = acc & w_probe
+            acc_d = acc_d & ~w_probe
+            # every accept — data, duplicate, alert or probe — is proof
+            # of life on that link (t is monotone, so max == set)
+            heard = jnp.maximum(heard, pl.link_max(
+                flat, jnp.broadcast_to(st.t.astype(_I32), (WW,)), acc))
         if "dedup" in self._wk:
             # window-local fused election: all decisions (including the
             # react representative and the alert force mask) come from an
@@ -967,7 +1074,11 @@ class JaxEngine:
                               pl.take_link(st.inbox, flat)[:, self.pw])
             fresh = winner & (w_seq > floor)
             alert_write = acc_a & (best_w < 0)
-            rep_w = pl.peer_dirmax(jnp.maximum(best, abest), recv)  # (WW,)
+            cand_rep = jnp.maximum(best, abest)
+            if self._faults is not None:
+                pbest = pl.link_max(flat, wi, acc_p)
+                cand_rep = jnp.maximum(cand_rep, pbest)
+            rep_w = pl.peer_dirmax(cand_rep, recv)  # (WW,)
             is_rep = acc & (wi == rep_w)
             aforce = None
         # one width-WW scatter: a window row is either a fresh data write
@@ -1002,6 +1113,11 @@ class JaxEngine:
             force = (pl.link_read3(abest, rp) >= 0) & has_alerts
         else:  # per-peer alert mask already elected window-locally
             force = aforce[reps_safe] & has_alerts
+        if self._faults is not None:
+            # probe ack: an accepted probe forces an unconditional
+            # ordinary Send back on that link (anti-entropy — also
+            # repairs whatever state the drop faults destroyed)
+            force = force | (pl.link_read3(pbest, rp) >= 0)
         eff = (viol | force) & rvalid[:, None]
         seq2 = ro[:, NDIR * self.pw] + eff.any(1).astype(_I32)
         ro2 = self._pack_out(
@@ -1080,6 +1196,13 @@ class JaxEngine:
         # was already charged at first window entry
         f_he = (jnp.where(fwd, o_he, jnp.where(spill, cur_h, w_has_edge))
                 .astype(_U32) | jnp.where(spill | loser, CONT, _U32(0)))
+        if self._faults is not None:
+            # forwarded probes keep their marker bit (o_he is a bare
+            # bool); delayed rows re-enter as fresh deliveries, except
+            # a delayed mid-descent spill keeps CONT so redelivery
+            # resumes the descent instead of recounting a network entry
+            f_he = (f_he | jnp.where(w_probe, PROBE, _U32(0))
+                    | jnp.where(delay_m & w_cont, CONT, _U32(0)))
         re_rows = jnp.stack(
             [w_origin, f_dest, f_edge, f_he]
             + [w_pay[:, c] for c in range(self.pw)]
@@ -1094,8 +1217,8 @@ class JaxEngine:
             + [u(bc(b_seq)), u(bc(b_seq))],
             axis=1,
         ).reshape(Ln, NDIR * WWl, roww)
-        re_mask = (fwd | loser | spill).reshape(Ln, WWl)
-        re_alert = (fwd & is_alert).reshape(Ln, WWl)
+        re_mask = (fwd | loser | spill | delay_m).reshape(Ln, WWl)
+        re_alert = (fwd & (is_alert | w_probe)).reshape(Ln, WWl)
         blk_rows = jnp.concatenate([re_rows, send_rows], axis=1)
         blk_mask = jnp.concatenate(
             [re_mask, cand.reshape(Ln, NDIR * WWl)], axis=1)
@@ -1113,12 +1236,55 @@ class JaxEngine:
                 | blk_alert.astype(_U32) * META_ALERT)
         pkt = jnp.concatenate([staged, meta[:, :, None]], axis=2)
 
+        # ---- failure-detector probe emission (armed only): every local
+        # peer row scans its links against the freshly-stamped `heard`;
+        # links silent past `suspect_after` (and not re-probed within a
+        # window) emit an empty-payload PROBE row, due next cycle on the
+        # 1-cycle/hop side-wheel. Every structurally-valid link of a
+        # live peer is monitored (`core.majority.monitored_links` — no
+        # first-hop self test: descent through the peer's own segment
+        # can still exit to a neighbor, and self-resolving links stay
+        # fresh through their own probe accepts). The probe block rides
+        # the same boundary
+        # exchange as the cycle appends (local rows are lane-major, so
+        # the reshape below lands each row in its own lane's block and
+        # the exchange restores global lane-major order).
+        probed = st.probed
+        if self._faults is not None:
+            f = self._faults
+            nloc = heard.shape[0] // NDIR
+            rows_g = (pl.lane_base(Ln) * self.lane_rows
+                      + jnp.arange(nloc, dtype=_I32))
+            pdirs = jnp.broadcast_to(
+                jnp.arange(NDIR, dtype=_I32)[None, :], (nloc, NDIR))
+            bcl = lambda a: jnp.broadcast_to(a[:, None], (nloc, NDIR))
+            pvalid, p_org, p_dst, p_edge, p_he = P.send_fields(
+                jnp, bcl(st.pos[rows_g]), pdirs, bcl(st.addrs[rows_g]),
+                bcl(st.prev[rows_g]), d)
+            mon = (pvalid & (rows_g < st.n_live)[:, None]
+                   & ~st.dead[rows_g][:, None])
+            want, _ = P.suspicion_rules(jnp, heard, probed, st.t,
+                                        f.suspect_after, f.evict_after)
+            emit = want.reshape(nloc, NDIR) & mon
+            probed = jnp.where(emit.reshape(-1), st.t, probed)
+            zrow = jnp.zeros((nloc, NDIR), _U32)
+            due_p = jnp.broadcast_to((st.t + 1).astype(_U32), (nloc, NDIR))
+            prows = jnp.stack(
+                [p_org, p_dst, p_edge, p_he.astype(_U32) | PROBE]
+                + [zrow] * self.pw + [zrow, due_p], axis=2,
+            )  # (nloc, NDIR, roww)
+            pmeta = emit.astype(_U32) * (META_LIVE | META_ALERT)
+            ppkt = jnp.concatenate(
+                [prows, pmeta[:, :, None]], axis=2,
+            ).reshape(Ln, self.lane_rows * NDIR, roww + 1)
+            pkt = jnp.concatenate([pkt, ppkt], axis=1)
+
         # ---- boundary exchange + ranked owner-lane appends: the ONE
         # lane-crossing step of the cycle. The exchange output is the
         # global lane-major staging order on every participant, so the
         # within-(lane, slot) append ranks are identical at any mesh size
-        gpkt = pl.exchange(pkt)  # (L, 4*WWl, roww + 1)
-        grows = gpkt[:, :, :roww].reshape(L * 4 * WWl, roww)
+        gpkt = pl.exchange(pkt)  # (L, 4*WWl [+ probe rows], roww + 1)
+        grows = gpkt[:, :, :roww].reshape(-1, roww)
         gmeta = gpkt[:, :, roww].reshape(-1)
         glive = (gmeta & META_LIVE) != 0
         galert = (gmeta & META_ALERT) != 0
@@ -1146,8 +1312,24 @@ class JaxEngine:
         # window row is one consumed network delivery; continuations
         # (mid-descent spills and collision-loser redeliveries) were
         # already charged
-        n_cont_l = (live & w_cont).reshape(Ln, WWl).sum(1).astype(_I32)
         n_defer_l = (loser | spill).reshape(Ln, WWl).sum(1).astype(_I32)
+        if self._faults is not None:
+            # armed accounting: only rows actually routed this cycle and
+            # not already charged (CONT) consume a delivery; lost rows
+            # retire into the fault ledger instead of `ret`
+            n_charge_l = (live & ~w_cont).reshape(Ln, WWl).sum(1).astype(_I32)
+            return st._replace(
+                wheel=wheel, wcnt=wcnt, awheel=awheel, acnt=acnt,
+                messages_sent=st.messages_sent + n_charge_l,
+                deferred=st.deferred + n_late_new + n_defer_l,
+                dropped=st.dropped + dro_d + dro_a,
+                enq=st.enq + att_d + att_a,
+                ret=st.ret + (n_alert + n_data) - n_lost_l,
+                lost=st.lost + n_lost_l,
+                heard=heard, probed=probed,
+                t=st.t + 1,
+            )
+        n_cont_l = (live & w_cont).reshape(Ln, WWl).sum(1).astype(_I32)
         return st._replace(
             wheel=wheel, wcnt=wcnt, awheel=awheel, acnt=acnt,
             messages_sent=st.messages_sent + (n_alert + n_data) - n_cont_l,
@@ -1211,6 +1393,11 @@ class JaxEngine:
             "x": pl.shift_rows(st.x, src), "out": pl.shift_rows(st.out, src),
             "inbox": pl.shift_rows(st.inbox, link_src),
             "addrs": st.addrs[src],
+            # fault-plane stamps move with their peers (cheap event path;
+            # zeros shift harmlessly when disarmed)
+            "dead": st.dead[src],
+            "heard": pl.shift_rows(st.heard, link_src),
+            "probed": pl.shift_rows(st.probed, link_src),
         }
 
     def _join_impl(self, st: DeviceState, addr: jnp.ndarray,
@@ -1225,6 +1412,7 @@ class JaxEngine:
         g = self._shift_peer_rows(st, src)
         n_live = st.n_live + 1
         lk = k * NDIR + jnp.arange(NDIR, dtype=_I32)
+        tN = jnp.broadcast_to(st.t.astype(_I32), (NDIR,))
         st = st._replace(
             addrs=g["addrs"].at[k].set(addr),
             x=pl.put_peer(g["x"], k[None], vote[None].astype(_I32)),
@@ -1233,6 +1421,11 @@ class JaxEngine:
             out=pl.put_peer(g["out"], k[None],
                             jnp.zeros((1, NDIR * self.pw + 1), _I32)),
             n_live=n_live,
+            # the joiner starts alive with fresh detector stamps (a new
+            # peer must get a full silence window before suspicion)
+            dead=g["dead"].at[k].set(False),
+            heard=pl.put_link(g["heard"], lk, tN),
+            probed=pl.put_link(g["probed"], lk, tN),
         )
         st = st._replace(**self._ring_views(st.addrs, n_live))
         a_im2 = st.addrs[(k - 1) % n_live]
@@ -1262,9 +1455,29 @@ class JaxEngine:
             out=pl.put_peer(g["out"], last[None],
                             jnp.zeros((1, NDIR * self.pw + 1), _I32)),
             n_live=last,
+            dead=g["dead"].at[last].set(False),
+            heard=pl.put_link(g["heard"], ll, jnp.zeros(NDIR, _I32)),
+            probed=pl.put_link(g["probed"], ll, jnp.zeros(NDIR, _I32)),
         )
         st = st._replace(**self._ring_views(st.addrs, st.n_live))
         return self._churn_tail(st, a_im2, a_im1, a_i)
+
+    def _crash_impl(self, st: DeviceState, k: jnp.ndarray) -> DeviceState:
+        """Abrupt failure of peer row `k` (fault plane, DESIGN.md §10):
+        the row's state zeroes and the dead flag raises — NO Alg. 2
+        notification, no fence, no ring change. Rows already in flight
+        toward the dead owner die lazily at the due-scan (charged to
+        `lost`), so conservation stays exact without an arena sweep."""
+        pl = self._plane
+        lk = k * NDIR + jnp.arange(NDIR, dtype=_I32)
+        return st._replace(
+            dead=st.dead.at[k].set(True),
+            x=pl.put_peer(st.x, k[None], jnp.zeros((1, self.dw), _I32)),
+            inbox=pl.put_link(st.inbox, lk,
+                              jnp.zeros((NDIR, self.pw + 1), _I32)),
+            out=pl.put_peer(st.out, k[None],
+                            jnp.zeros((1, NDIR * self.pw + 1), _I32)),
+        )
 
     def _fence_and_migrate(self, st: DeviceState, pos_fix,
                            pos_var) -> DeviceState:
@@ -1300,6 +1513,13 @@ class JaxEngine:
                 if fence:
                     okrow = (okrow & (rows[:, ORIGIN] != pos_fix)
                              & (rows[:, ORIGIN] != pos_var))
+                elif self._faults is not None:
+                    # the ALERT side-wheel is never origin-fenced, but
+                    # probe rows riding it are ordinary traffic under
+                    # R3: a probe from a changed position is stale
+                    pr = (rows[:, HAS_EDGE] & PROBE) != 0
+                    okrow = okrow & ~(pr & ((rows[:, ORIGIN] == pos_fix)
+                                            | (rows[:, ORIGIN] == pos_var)))
                 inlane = self._lane_of(st.addrs, st.n_live,
                                        rows[:, DEST]) == lg
                 keep = (lvf & okrow & inlane).reshape(SLOTS, width)
@@ -1372,6 +1592,8 @@ class JaxEngine:
         # (test() re-run is subsumed — every direction sends)
         mv = mover_rows < pdg
         mp = jnp.where(mv, mover_rows, 0)
+        if self._faults is not None:
+            mv = mv & ~st.dead[mp]  # crashed peers are silent — no sends
         kloc = knowledge(self.problem, st.inbox, st.x, st.x.shape[0])
         kmp = pl.take_peer_rep(kloc, mp)  # (2, P), replicated
         pay = jnp.broadcast_to(kmp[:, None, :], (2, NDIR, pw))
@@ -1395,6 +1617,17 @@ class JaxEngine:
         valid, origin, dest, edge, has_edge = P.send_fields(
             jnp, ap, adirs, st.addrs[aown], st.prev[aown], d
         )
+        if self._faults is not None:
+            valid = valid & ~st.dead[aown]  # the dead emit no ALERTs
+            # a churn event is fresh news about the movers' links: the
+            # detector must not age the NEW occupants on stamps carried
+            # over from the old ones (the reference refreshes exactly the
+            # mover rows synchronously in its alert upcall; the routed
+            # ALERT recipients refresh on accept, and the host-side
+            # `_heard_floor` bridges those cycles for the eviction sweep)
+            st = st._replace(heard=jnp.maximum(st.heard, pl.link_max(
+                mlinks, jnp.broadcast_to(st.t.astype(_I32), mlinks.shape),
+                jnp.repeat(mv, NDIR))))
         zero6 = jnp.zeros(6, _U32)
         return self._enqueue_events(
             st, valid, origin, dest, edge, has_edge,
@@ -1435,6 +1668,27 @@ class JaxEngine:
         return int(np.asarray(self._st.deferred).sum())
 
     @property
+    def lost_to_fault(self) -> int:
+        """Messages destroyed by the injected fault plane (crashed
+        owners + `FaultConfig.p_drop`), itemized apart from `dropped`
+        so engine bugs stay distinguishable from injected faults."""
+        return int(np.asarray(self._st.lost).sum())
+
+    @property
+    def evictions(self):
+        """[(cycle, address), ...] leaves the failure detector synthesized."""
+        return list(self._evictions)
+
+    def dead_mask(self) -> np.ndarray:
+        """(n,) bool — crashed peers the detector has not yet evicted."""
+        return np.asarray(self._st.dead)[: self.n].copy()
+
+    def last_heard(self) -> np.ndarray:
+        """(n,) cycle each peer's links last carried inbound traffic —
+        the per-peer heartbeat `runtime.fault_tolerance` bridges from."""
+        return np.asarray(self._st.heard).reshape(-1, NDIR)[: self.n].max(axis=1)
+
+    @property
     def deferral_rate(self) -> float:
         """Cumulative deferral events per consumed network delivery —
         the honest congestion figure for sizing `work_budget` (an
@@ -1454,12 +1708,14 @@ class JaxEngine:
         ret = int(np.asarray(st.ret).sum())
         live = int(np.asarray(st.wcnt).sum()) + int(np.asarray(st.acnt).sum())
         dro = int(np.asarray(st.dropped).sum())
-        if enq != ret + live + dro:
+        lost = int(np.asarray(st.lost).sum())
+        if enq != ret + live + dro + lost:
             raise AssertionError(
                 f"wheel conservation violated: enqueued={enq} != "
-                f"retired={ret} + live={live} + dropped={dro}")
+                f"retired={ret} + live={live} + dropped={dro} + "
+                f"lost_to_fault={lost}")
         return {"enqueued": enq, "retired": ret, "live": live,
-                "dropped": dro}
+                "dropped": dro, "lost_to_fault": lost}
 
     def outputs(self) -> np.ndarray:
         out = knowledge_outputs(self.problem, self._st.inbox, self._st.x,
@@ -1502,6 +1758,10 @@ class JaxEngine:
         )
         self.ring = ring_after
         self.n += 1
+        if self._faults is not None:
+            from repro.core import notify as N
+
+            self._stamp_churn_floor(N.join_event(ring_after, k), ring_after)
         return k
 
     def leave(self, idx: int) -> None:
@@ -1510,9 +1770,97 @@ class JaxEngine:
             raise ValueError("cannot leave the last peer")
         if not 0 <= idx < self.n:
             raise IndexError(f"peer index {idx} out of range [0, {self.n})")
+        ring_before = self.ring
         self._st = self._leave(self._st, jnp.asarray(idx, _I32))
-        self.ring = self.ring.leave(idx)
+        self.ring = ring_before.leave(idx)
         self.n -= 1
+        if self._faults is not None:
+            from repro.core import notify as N
+
+            self._stamp_churn_floor(
+                N.leave_event(self.ring, ring_before, idx), self.ring)
+
+    def crash(self, idx: int) -> None:
+        """Abrupt-failure upcall: peer `idx` vanishes silently — no
+        Alg. 2 notification; its tree neighbors must discover the
+        failure through the timeout detector. Requires an armed fault
+        plane (``faults=`` at construction)."""
+        if self._faults is None:
+            raise RuntimeError(
+                "crash() requires an armed fault plane (faults=FaultConfig)")
+        if self.n <= 1:
+            raise ValueError("cannot crash the last peer")
+        if not 0 <= idx < self.n:
+            raise IndexError(f"peer index {idx} out of range [0, {self.n})")
+        if bool(np.asarray(self._st.dead)[idx]):
+            raise ValueError(f"peer {idx} is already dead")
+        self._st = self._crash(self._st, jnp.asarray(idx, _I32))
+
+    def _stamp_churn_floor(self, ev, ring_after) -> None:
+        """Record the synchronous `heard` refresh the reference performs
+        at a churn event — movers (owners of the two change positions)
+        on every direction, routed-ALERT recipients on the alerted one —
+        keyed by (address, dir) so the stamps survive row shifts. The
+        device links self-refresh when the routed alerts accept; until
+        then the floor is what keeps `_fault_sweep` from evicting the
+        freshly re-healed neighbors as silent."""
+        t = int(self._st.t)
+        pos = ring_after.positions()
+        dt = ring_after.addrs.dtype
+        for p in (ev.pos_fix, ev.pos_var):
+            o = int(ring_after.owner(np.asarray([p], dt))[0])
+            if int(pos[o]) == int(p):
+                for dch in range(NDIR):
+                    self._heard_floor[(int(ring_after.addrs[o]), dch)] = t
+        for peer, dch in ev.notifs:
+            self._heard_floor[(int(ring_after.addrs[peer]), int(dch))] = t
+
+    def _fault_sweep(self) -> None:
+        """Host-driven failure-detector eviction pass, run at dispatch
+        boundaries. The device program handles the per-cycle half of the
+        detector (probe emission + `heard` stamping); membership
+        synthesis is an event path like join/leave, so it runs here:
+        pull the stamps, elect the first-dark-hop accused peer
+        (`core.majority.elect_eviction` — a stale link blames the first
+        hop on its route that nobody fresh resolves to, so a route
+        blocked by a dead transit hop convicts the dead hop, never the
+        live endpoint behind it), and locally synthesize the Alg. 2
+        leave — lowest address first, one per iteration, re-reading the
+        shifted stamps until quiescent (a contiguous range failure
+        cascades: each eviction contracts the ring and re-resolves the
+        next dead neighbor)."""
+        f = self._faults
+        if f is None or not f.evict_after:
+            return
+        from repro.core.majority import (elect_eviction, eviction_grace,
+                                         monitored_links)
+        t = int(self._st.t)
+        while self.n > 1:
+            heard = np.asarray(self._st.heard).reshape(-1, NDIR)[: self.n]
+            heard = np.maximum(heard, self._evict_floor)
+            if self._heard_floor:
+                row_of = {int(a): i for i, a in enumerate(self.ring.addrs)}
+                for (a, dch), ts in self._heard_floor.items():
+                    r = row_of.get(a)
+                    if r is not None and heard[r, dch] < ts:
+                        heard[r, dch] = ts
+            probed = np.asarray(self._st.probed).reshape(-1, NDIR)[: self.n]
+            dead = np.asarray(self._st.dead)[: self.n]
+            _, evict = P.suspicion_rules(np, heard.ravel(), probed.ravel(),
+                                         t, f.suspect_after, f.evict_after)
+            pos = np.asarray(self.ring.positions())
+            peers, dirs, mon = monitored_links(self.ring, pos, dead)
+            if not (evict & mon).any():
+                return
+            target = elect_eviction(self.ring, pos, peers, dirs, mon, evict,
+                                    heard.ravel(),
+                                    eviction_grace(self.n, f.suspect_after))
+            if target < 0:
+                return
+            self._evictions.append((t, int(self.ring.addrs[target])))
+            self.leave(target)  # Alg. 2 verbatim: eviction IS a leave
+            self._evict_floor = t - f.evict_after + eviction_grace(
+                self.n, f.suspect_after)
 
     def _grow(self, need_n: int) -> None:
         """Re-pad every device table one size up. The jitted programs
@@ -1598,12 +1946,25 @@ class JaxEngine:
             dropped=lane0(host.dropped, lost_w + lost_a),
             deferred=lane0(host.deferred),
             enq=lane0(host.enq), ret=lane0(host.ret),
+            dead=jnp.asarray(pad_rows(np.asarray(host.dead))),
+            heard=jnp.asarray(np.concatenate([
+                np.asarray(host.heard),
+                np.zeros(pr * NDIR, np.int32)])),
+            probed=jnp.asarray(np.concatenate([
+                np.asarray(host.probed),
+                np.zeros(pr * NDIR, np.int32)])),
+            lost=lane0(host.lost),
         )
 
     def step(self, cycles: int = 1) -> None:
         """Advance `cycles` cycles as ONE device dispatch (the superstep;
-        bit-identical to `cycles` single-cycle dispatches — tested)."""
+        bit-identical to `cycles` single-cycle dispatches — tested). With
+        an armed fault plane the failure-detector eviction pass runs at
+        the dispatch boundary (eviction granularity = step granularity;
+        the reference evicts per cycle — drive `step(1)` for exact
+        timing)."""
         self._st = self._steps(self._st, jnp.asarray(cycles, _I32))
+        self._fault_sweep()
 
     def block_until_ready(self) -> None:
         jax.block_until_ready(self._st)
@@ -1622,6 +1983,7 @@ class JaxEngine:
             )
             self._st = st
             state["stable"] = stable
+            self._fault_sweep()
             return bool(done), int(used)
 
         return run_convergence_loop(

@@ -23,11 +23,12 @@ class NumpyEngine:
     backend = "numpy"
 
     def __init__(self, ring: Ring, votes: np.ndarray, seed: int = 0,
-                 problem=None):
+                 problem=None, faults=None):
         self.ring = ring
         self.problem = get_problem(problem)
+        self.faults = faults
         self.sim = MajoritySimulator(ring, votes, seed=seed,
-                                     problem=self.problem)
+                                     problem=self.problem, faults=faults)
 
     @property
     def t(self) -> int:
@@ -46,6 +47,36 @@ class NumpyEngine:
         """Messages lost to table overflow — always 0 here: the host
         table grows on demand (API symmetry with JaxEngine)."""
         return 0
+
+    @property
+    def lost_to_fault(self) -> int:
+        """Messages destroyed by the injected fault plane (crashes +
+        `FaultConfig.p_drop`), itemized apart from `dropped`."""
+        return self.sim.msgs.lost
+
+    @property
+    def evictions(self):
+        """[(cycle, address), ...] leaves the failure detector synthesized."""
+        return list(self.sim.evictions)
+
+    def dead_mask(self) -> np.ndarray:
+        """(n,) bool — crashed peers the detector has not yet evicted."""
+        return self.sim.dead.copy()
+
+    def last_heard(self) -> np.ndarray:
+        """(n,) cycle each peer's links last carried inbound traffic —
+        the per-peer heartbeat `runtime.fault_tolerance` bridges from."""
+        return self.sim.heard.max(axis=1).copy()
+
+    def check_conservation(self) -> None:
+        """Exact message-table ledger: every message ever enqueued is
+        retired, in flight, or itemized as lost to an injected fault —
+        injected faults stay distinguishable from engine bugs."""
+        m = self.sim.msgs
+        balance = m.retired + m.lost + m.in_flight
+        assert m.enqueued == balance, (
+            f"ledger leak: enqueued={m.enqueued} != retired={m.retired} + "
+            f"lost_to_fault={m.lost} + in_flight={m.in_flight}")
 
     def outputs(self) -> np.ndarray:
         return self.sim.state.outputs()
@@ -75,9 +106,16 @@ class NumpyEngine:
         self.sim.leave(idx)
         self.ring = self.sim.ring
 
+    def crash(self, idx: int) -> None:
+        """Abrupt-failure upcall: peer `idx` vanishes silently (no
+        Alg. 2 notification) — requires an armed fault plane."""
+        self.sim.crash(idx)
+        self.ring = self.sim.ring
+
     def step(self, cycles: int = 1) -> None:
         for _ in range(cycles):
             self.sim.step()
+        self.ring = self.sim.ring  # evictions may have shrunk the ring
 
     def block_until_ready(self) -> None:  # API symmetry with JaxEngine
         pass
@@ -90,8 +128,9 @@ class NumpyEngine:
         run-to-quiescence — cost one flag read instead of an O(n) scan
         per cycle (the old per-cycle double dispatch of this path)."""
         if self.sim.dirty or self._conv_truth != truth:
-            self._conv_cache = bool(self.problem.converged(
-                np, self.sim.state.outputs(), truth).all())
+            conv = self.problem.converged(np, self.sim.state.outputs(), truth)
+            # crashed-but-unevicted peers have no say in convergence
+            self._conv_cache = bool(conv[~self.sim.dead].all())
             self._conv_truth = truth
             self.sim.dirty = False
         return self._conv_cache

@@ -167,6 +167,36 @@ def alert_plan(xp, pos_fix: Array, pos_var: Array) -> Tuple[Array, Array]:
 
 
 # ---------------------------------------------------------------------------
+# Fault plane — timeout-based suspicion / eviction (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def suspicion_rules(xp, heard: Array, probed: Array, t: Array,
+                    suspect_after: int, evict_after: int) -> Tuple[Array, Array]:
+    """Per-link failure-detector masks from `last_heard` cycle stamps.
+
+    `heard[l]` is the cycle the peer last accepted any traffic from
+    tree-link `l`; `probed[l]` the cycle it last emitted a liveness
+    probe on `l`. A link is *suspected* once silent for `suspect_after`
+    cycles — the peer retries with an R3-fenced probe, rate-limited so
+    one probe per `suspect_after` window is in flight — and the far
+    peer is *evictable* once silent for `evict_after` cycles (the local
+    Alg. 2 leave synthesis; `evict_after = 0` disables eviction so a
+    lossy-but-alive network is never mistaken for membership change).
+
+    Pure mask arithmetic over any number of links; callers AND the
+    result with structural validity (`send_fields`' valid), occupancy
+    and liveness of the suspecting peer itself.
+    """
+    silent = (t - heard).astype(heard.dtype)
+    probe = (silent >= suspect_after) & ((t - probed) >= suspect_after)
+    if evict_after > 0:
+        evict = silent >= evict_after
+    else:
+        evict = xp.zeros(heard.shape, bool)
+    return probe, evict
+
+
+# ---------------------------------------------------------------------------
 # Alg. 3 — threshold algebra (knowledge / agreement / violation / Send)
 # ---------------------------------------------------------------------------
 

@@ -260,6 +260,9 @@ class ShardedJaxEngine(JaxEngine):
             wheel=S, wcnt=S, awheel=S, acnt=S,
             perms=R, salt_enq=R, evt_ctr=R,
             t=R, messages_sent=S, dropped=S, deferred=S, enq=S, ret=S,
+            # fault plane: detector stamps shard with their peer/link
+            # blocks, the dead flags replicate with the ring tables
+            dead=R, heard=S, probed=S, lost=S,
         )
 
     def _with_plane(self, fn):
@@ -307,6 +310,8 @@ class ShardedJaxEngine(JaxEngine):
         self._join = jax.jit(sm(self._join_impl, (R, R, R), specs),
                              donate_argnums=(0,))
         self._leave = jax.jit(sm(self._leave_impl, (R,), specs),
+                              donate_argnums=(0,))
+        self._crash = jax.jit(sm(self._crash_impl, (R,), specs),
                               donate_argnums=(0,))
 
     def _initial_state(self, ring: Ring, votes: np.ndarray,

@@ -75,3 +75,41 @@ class StragglerTracker:
             return []
         med = float(np.median(list(self.ewma.values())))
         return [h for h, t in self.ewma.items() if t > self.ratio * med]
+
+
+@dataclasses.dataclass
+class EngineSuspicionBridge:
+    """Drives the host-agent primitives from the *in-protocol* failure
+    detector instead of a separate heartbeat network.
+
+    The engines' fault plane already tracks per-link `heard` stamps and
+    synthesizes evictions (DESIGN.md §10); this bridge re-expresses
+    those signals in the agent's vocabulary so one detector serves both
+    layers: each peer's freshest inbound stamp becomes its heartbeat on
+    the *cycle* clock (`HeartbeatMonitor.timeout_s` is then cycles, not
+    seconds), and every detector eviction consumes one restart from the
+    `RestartPolicy` budget — `sync` returns the planned
+    [(address, delay_or_None)] rejoins, None once the budget is spent.
+    """
+
+    monitor: HeartbeatMonitor
+    policy: RestartPolicy
+    seen_evictions: int = 0
+
+    def sync(self, eng) -> List:
+        stamps = eng.last_heard()
+        for a, s in zip(eng.ring.addrs, stamps):
+            prev = self.monitor.last_seen.get(int(a))
+            if prev is None or float(s) > prev:
+                self.monitor.beat(int(a), now=float(s))
+        plans = []
+        for _, addr in eng.evictions[self.seen_evictions:]:
+            self.monitor.last_seen.pop(int(addr), None)
+            plans.append((int(addr), self.policy.next_delay()))
+        self.seen_evictions = len(eng.evictions)
+        return plans
+
+    def suspects(self, eng) -> List[int]:
+        """Addresses silent past the monitor's timeout, on the engine's
+        cycle clock — the agent-level view of `P.suspicion_rules`."""
+        return self.monitor.dead(now=float(eng.t))

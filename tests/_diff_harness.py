@@ -63,6 +63,17 @@ SLOW_GRID: Tuple[Tuple[str, int], ...] = (
     ("l2", 313),
     ("majority", 121),
 )
+# abrupt-failure cells: (problem, seed, fault mode). "crash" injects a
+# silent peer crash mid-schedule (plus a mesh resize while the victim is
+# dead-but-unevicted) and waits out the detector's eviction; "drop"
+# runs the whole schedule under message loss + delay with the detector
+# in probe-only repair mode (evict_after=0)
+FAULT_GRID: Tuple[Tuple[str, int, str], ...] = (
+    ("majority", 404, "crash"),
+    ("mean", 505, "crash"),
+    ("majority", 606, "drop"),
+    ("l2", 707, "drop"),
+)
 
 
 def make_problem(name: str):
@@ -75,7 +86,8 @@ def make_problem(name: str):
     return get_problem(name)
 
 
-def make_schedule(problem_name: str, seed: int, churn: bool = True) -> Dict:
+def make_schedule(problem_name: str, seed: int, churn: bool = True,
+                  faults: str = "") -> Dict:
     """Deterministic random schedule for (problem, seed).
 
     Returns {"problem", "seed", "n", "ring_seed", "eng_seed", "data",
@@ -83,6 +95,14 @@ def make_schedule(problem_name: str, seed: int, churn: bool = True) -> Dict:
     / ("join", addr, val) / ("leave", idx) / ("settle",) tuples. Join
     addresses are drawn from the free space and never collide; leave
     indices are valid at replay time (the generator tracks membership).
+
+    `faults` arms the engines' fault plane: "drop" adds seeded message
+    loss + delay (probe-only detector); "crash" additionally injects a
+    ("crash", idx) event mid-stream — immediately chased by a mesh
+    resize (the victim is dead-but-unevicted through the re-partition)
+    and a step long enough that the timeout detector is guaranteed to
+    have synthesized the eviction before the next membership-indexed
+    event, so the generator's shadow count stays honest.
     """
     rng = np.random.default_rng(seed)
     n = int(rng.integers(48, 97))
@@ -111,7 +131,28 @@ def make_schedule(problem_name: str, seed: int, churn: bool = True) -> Dict:
     n_events = int(rng.integers(3, 7))
     kinds = (["step", "set"] + (["join", "leave"] if churn else [])
              + ["settle", "resize"])
-    for _ in range(n_events):
+    fcfg = None
+    crash_at = -1
+    if faults:
+        fcfg = {"p_drop": 0.1 if faults == "drop" else 0.0,
+                "p_delay": 0.05 if faults == "drop" else 0.0,
+                "suspect_after": 25,
+                "evict_after": 150 if faults == "crash" else 0,
+                "seed": seed + 13}
+        if faults == "crash":
+            crash_at = int(rng.integers(1, n_events))
+    for ei in range(n_events):
+        if ei == crash_at:
+            # silent crash, a mesh resize while the victim is dead-but-
+            # unevicted, then wait out the detector: evict_after plus a
+            # probe round-trip of slack, so every later membership-
+            # indexed event sees the post-eviction ring and the
+            # generator's shadow count stays honest
+            events.append(("crash", int(rng.integers(0, n_cur))))
+            events.append(("resize", 2))
+            events.append(("step", fcfg["evict_after"]
+                           + 2 * fcfg["suspect_after"] + 64))
+            n_cur -= 1
         kind = str(rng.choice(kinds))
         if kind == "step":
             events.append(("step", int(rng.integers(1, 41))))
@@ -139,7 +180,7 @@ def make_schedule(problem_name: str, seed: int, churn: bool = True) -> Dict:
     return {
         "problem": problem_name, "seed": seed, "n": n, "d": d,
         "ring_seed": ring_seed, "eng_seed": seed + 7, "data": data,
-        "events": events,
+        "events": events, "faults": fcfg,
     }
 
 
@@ -151,7 +192,13 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
     problem = make_problem(schedule["problem"])
     ring = Ring.random(schedule["n"], schedule["d"],
                        seed=schedule["ring_seed"])
-    eng = factory(ring, schedule["data"], problem, schedule["eng_seed"])
+    faults = None
+    if schedule.get("faults"):
+        from repro.engine.base import FaultConfig
+
+        faults = FaultConfig(**schedule["faults"])
+    eng = factory(ring, schedule["data"], problem, schedule["eng_seed"],
+                  faults=faults)
 
     def truth() -> int:
         return problem.global_output(eng.data())
@@ -177,6 +224,8 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
             eng.join(ev[1], vote=ev[2])
         elif ev[0] == "leave":
             eng.leave(ev[1])
+        elif ev[0] == "crash":
+            eng.crash(ev[1])
         elif ev[0] == "resize":
             if hasattr(eng, "resize_mesh"):
                 import jax
@@ -202,29 +251,37 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
         "messages": int(res["messages"]),
         "wheel": wheel_trace,
         "truth": truth(),
+        # fault plane (None/empty when disarmed): the eviction *set* is
+        # backend-independent; timings and loss tallies are only pinned
+        # within the device family (trajectory parity)
+        "evict_addrs": sorted(a for _, a in getattr(eng, "evictions", [])),
+        "evictions": list(getattr(eng, "evictions", [])),
+        "lost": int(getattr(eng, "lost_to_fault", 0)),
     }
 
 
 # -- engine factories --------------------------------------------------------
 
-def numpy_factory(ring, data, problem, seed):
+def numpy_factory(ring, data, problem, seed, faults=None):
     from repro.engine import make_engine
 
-    return make_engine("numpy", ring, data, seed=seed, problem=problem)
+    return make_engine("numpy", ring, data, seed=seed, problem=problem,
+                       faults=faults)
 
 
-def jax_factory(ring, data, problem, seed):
+def jax_factory(ring, data, problem, seed, faults=None):
     from repro.engine import make_engine
 
-    return make_engine("jax", ring, data, seed=seed, problem=problem)
+    return make_engine("jax", ring, data, seed=seed, problem=problem,
+                       faults=faults)
 
 
 def sharded_factory(mesh):
-    def f(ring, data, problem, seed):
+    def f(ring, data, problem, seed, faults=None):
         from repro.engine import make_engine
 
         return make_engine("jax", ring, data, seed=seed, problem=problem,
-                           mesh=mesh)
+                           mesh=mesh, faults=faults)
     return f
 
 
@@ -232,20 +289,31 @@ def sharded_factory(mesh):
 
 def assert_state_parity(a: Dict, b: Dict, ctx=""):
     """Bit-parity on everything RNG-independent: outputs, data plane,
-    membership, dropped counts, the decision itself."""
+    membership (incl. the failure detector's eviction set), dropped
+    counts, the decision itself. Drop/delay draws come from different
+    RNGs per backend, so loss tallies and eviction *timings* may differ
+    here — those are the trajectory contract below."""
     assert a["n"] == b["n"], (ctx, a["n"], b["n"])
     assert a["truth"] == b["truth"], (ctx, a["truth"], b["truth"])
     assert a["dropped"] == b["dropped"] == 0, (ctx, a["dropped"], b["dropped"])
+    assert a["evict_addrs"] == b["evict_addrs"], (
+        ctx, "detectors evicted different peers",
+        a["evict_addrs"], b["evict_addrs"])
     np.testing.assert_array_equal(a["outputs"], b["outputs"], err_msg=ctx)
     np.testing.assert_array_equal(a["data"], b["data"], err_msg=ctx)
 
 
 def assert_trajectory_parity(a: Dict, b: Dict, ctx=""):
     """State parity PLUS identical cycle/message counts — the sharded
-    contract (same program, partitioned)."""
+    contract (same program, partitioned). Under an armed fault plane
+    the injected faults are part of the trajectory: same cycle-stamped
+    evictions, same loss tally."""
     assert_state_parity(a, b, ctx)
     assert a["cycles"] == b["cycles"], (ctx, a["cycles"], b["cycles"])
     assert a["messages"] == b["messages"], (ctx, a["messages"], b["messages"])
+    assert a["evictions"] == b["evictions"], (
+        ctx, "eviction timelines diverge", a["evictions"], b["evictions"])
+    assert a["lost"] == b["lost"], (ctx, a["lost"], b["lost"])
     assert a["wheel"] == b["wheel"], (
         ctx, "wheel-occupancy traces diverge", a["wheel"], b["wheel"])
 
@@ -265,9 +333,13 @@ def run_grid(grid, engines, mesh_sizes=(0,), churn=True,
              log=print) -> None:
     """Replay `grid` cells on every requested engine and assert parity.
     `engines` ⊆ {numpy, jax, sharded}; sharded runs once per mesh size
-    (0 = all local devices) and is trajectory-checked against jax."""
-    for problem_name, seed in grid:
-        sched = make_schedule(problem_name, seed, churn=churn)
+    (0 = all local devices) and is trajectory-checked against jax.
+    Cells are (problem, seed) or (problem, seed, fault_mode)."""
+    for cell in grid:
+        problem_name, seed = cell[0], cell[1]
+        fault_mode = cell[2] if len(cell) > 2 else ""
+        sched = make_schedule(problem_name, seed, churn=churn,
+                              faults=fault_mode)
         results = {}
         if "numpy" in engines:
             results["numpy"] = replay(sched, numpy_factory)
@@ -281,7 +353,8 @@ def run_grid(grid, engines, mesh_sizes=(0,), churn=True,
                 # silently compare plain jax against itself)
                 results[f"sharded{m or ''}"] = replay(
                     sched, sharded_factory(m))
-        ctx = f"{problem_name}/seed={seed}"
+        ctx = f"{problem_name}/seed={seed}" + (
+            f"/{fault_mode}" if fault_mode else "")
         base_key = "jax" if "jax" in results else next(iter(results))
         base = results[base_key]
         for key, r in results.items():
@@ -308,7 +381,7 @@ def main():
                     choices=["numpy", "jax", "sharded"])
     ap.add_argument("--mesh-sizes", nargs="+", type=int, default=[0],
                     help="sharded mesh sizes (0 = all local devices)")
-    ap.add_argument("--grid", choices=["ci", "slow"], default="ci")
+    ap.add_argument("--grid", choices=["ci", "slow", "fault"], default="ci")
     ap.add_argument("--seeds", nargs="+", type=int, default=None,
                     help="override: fuzz these seeds on every problem")
     ap.add_argument("--problems", nargs="+", default=None,
@@ -320,6 +393,10 @@ def main():
     if args.seeds:
         probs = args.problems or [p for p, _ in CI_GRID]
         grid = [(p, s) for p in probs for s in args.seeds]
+    elif args.grid == "fault":
+        grid = list(FAULT_GRID)
+        if args.problems:
+            grid = [c for c in grid if c[0] in args.problems]
     else:
         grid = list(CI_GRID if args.grid == "ci" else CI_GRID + SLOW_GRID)
         if args.problems:

@@ -1,0 +1,378 @@
+"""Abrupt-failure fault plane (DESIGN.md §10): injected crashes and
+message loss, the timeout suspicion/eviction detector, exact loss
+accounting, and the `runtime.fault_tolerance` bridge.
+
+The cross-backend contract under an armed fault plane:
+
+  * a crashed peer is detected and evicted by its tree neighbors alone
+    (no global view, no Alg. 2 notification from the victim), the tree
+    re-heals, and every backend reconverges on the survivors' data;
+  * the eviction *set* is backend-independent; eviction *timing* is
+    cycle-exact on numpy (per-cycle detector) and dispatch-boundary
+    granular on the device engines — the harness fault cells pin jax vs
+    sharded to bit-identical timelines (tests/test_sharded.py runs the
+    subprocess grid; `_diff_harness.FAULT_GRID` is the CI surface);
+  * conservation stays exact with losses itemized:
+    enqueued == retired + in_flight + dropped + lost_to_fault.
+"""
+import numpy as np
+import pytest
+
+from tests._hypothesis_shim import given, settings, st
+
+from tests import _diff_harness as H
+
+BACKENDS = ("numpy", "jax")
+
+
+def _mk(backend, n=16, ring_seed=7, vote_period=3, **fkw):
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+    from repro.engine.base import FaultConfig
+
+    ring = Ring.random(n, 10, seed=ring_seed)
+    votes = (np.arange(n) % vote_period == 0).astype(np.int64)
+    eng = make_engine(backend, ring, votes, seed=0,
+                      faults=FaultConfig(**fkw) if fkw else None)
+    return eng, votes
+
+
+def _truth(eng):
+    v = np.asarray(eng.votes())
+    return int(2 * v.sum() > eng.ring.n)
+
+
+# ---------------------------------------------------------------------------
+# configuration and API guards
+# ---------------------------------------------------------------------------
+
+def test_fault_config_validation():
+    from repro.engine.base import FaultConfig
+
+    FaultConfig()  # defaults are legal
+    with pytest.raises(ValueError):
+        FaultConfig(p_drop=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(p_delay=-0.1)
+    with pytest.raises(ValueError):
+        FaultConfig(suspect_after=0)
+    with pytest.raises(ValueError):
+        FaultConfig(evict_after=-1)
+    with pytest.raises(ValueError):  # eviction before suspicion is nonsense
+        FaultConfig(suspect_after=40, evict_after=40)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_requires_armed_plane(backend):
+    eng, _ = _mk(backend)
+    with pytest.raises(RuntimeError):
+        eng.crash(0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_guards(backend):
+    eng, _ = _mk(backend, suspect_after=10, evict_after=40)
+    with pytest.raises(IndexError):
+        eng.crash(99)
+    eng.crash(3)
+    with pytest.raises(ValueError):  # already dead
+        eng.crash(3)
+    assert eng.dead_mask()[3] and eng.dead_mask().sum() == 1
+
+
+def test_batch_and_faults_do_not_compose():
+    from repro.core.dht import Ring
+    from repro.engine import make_engine
+    from repro.engine.base import FaultConfig
+
+    ring = Ring.random(16, 10, seed=0)
+    votes = np.zeros((2, 16), np.int64)
+    with pytest.raises(NotImplementedError):
+        make_engine("jax", ring, votes, batch=2, faults=FaultConfig())
+
+
+# ---------------------------------------------------------------------------
+# crash -> suspicion -> eviction -> re-heal
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_detected_and_evicted(backend):
+    """The tree neighbors alone detect the silent crash, synthesize the
+    Alg. 2 leave for exactly the dead address, and the survivors
+    reconverge — with the loss ledger exact."""
+    eng, _ = _mk(backend, n=16, suspect_after=10, evict_after=80, seed=1)
+    eng.run_until_converged(truth=_truth(eng), max_cycles=5000)
+    victim = 5
+    dead_addr = int(eng.ring.addrs[victim])
+    n0 = eng.ring.n
+    eng.crash(victim)
+    for _ in range(40):  # 40 * 16 cycles >> evict_after + probe RTT
+        eng.step(16)
+        if eng.evictions:
+            break
+    assert [a for _, a in eng.evictions] == [dead_addr]
+    assert eng.ring.n == n0 - 1 and dead_addr not in set(
+        int(a) for a in eng.ring.addrs)
+    assert not eng.dead_mask().any()  # eviction cleared the dead slot
+    eng.step(400)  # no false suspicion cascade afterwards
+    assert len(eng.evictions) == 1
+    res = eng.run_until_converged(truth=_truth(eng), max_cycles=20000)
+    assert res["converged"] == 1.0
+    if hasattr(eng, "check_conservation") and eng.backend == "jax":
+        ledger = eng.check_conservation()
+        assert ledger["dropped"] == 0 and ledger["lost_to_fault"] > 0
+    else:
+        eng.check_conservation()
+        assert eng.lost_to_fault > 0  # the victim's in-flight rows died
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_probe_only_detector_never_evicts(backend):
+    """evict_after=0: the detector probes (repairing lost updates) but
+    membership never changes, even with a dead peer in the ring."""
+    eng, _ = _mk(backend, n=16, suspect_after=10, evict_after=0, seed=2)
+    eng.run_until_converged(truth=_truth(eng), max_cycles=5000)
+    n0 = eng.ring.n
+    eng.crash(4)
+    eng.step(300)
+    assert eng.evictions == [] and eng.ring.n == n0
+    assert eng.dead_mask().sum() == 1
+
+
+# ---------------------------------------------------------------------------
+# message loss / delay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_drop_delay_reconvergence_and_ledger(backend):
+    """30% drop + 10% delay on the data plane: the suspicion probes
+    repair the lost updates, the decision still converges, and every
+    lost message is itemized (conservation exact, dropped == 0)."""
+    eng, _ = _mk(backend, n=16, vote_period=3, p_drop=0.3, p_delay=0.1,
+                 suspect_after=20, evict_after=0, seed=9)
+    res = eng.run_until_converged(truth=_truth(eng), max_cycles=50000,
+                                  stable_for=20)
+    assert res["converged"] == 1.0
+    assert eng.lost_to_fault > 0
+    if eng.backend == "jax":
+        ledger = eng.check_conservation()
+        assert ledger["dropped"] == 0
+        assert ledger["enqueued"] == (ledger["retired"] + ledger["live"]
+                                      + ledger["lost_to_fault"])
+    else:
+        eng.check_conservation()
+
+
+def test_drop_draws_are_mesh_invariant():
+    """The drop/delay draws hash (global window index, t, seed), so the
+    injected fault pattern is a property of the run, not the layout:
+    jax and mesh=2 sharded lose the *same* messages at the same cycles."""
+    eng1, _ = _mk("jax", n=16, vote_period=2, p_drop=0.25,
+                  suspect_after=20, evict_after=0, seed=5)
+    t1 = []
+    for _ in range(30):
+        eng1.step(5)
+        t1.append((eng1.t, eng1.messages_sent, eng1.lost_to_fault,
+                   eng1.in_flight))
+    pytest.importorskip("jax")
+    import jax
+
+    if jax.local_device_count() < 1:  # pragma: no cover
+        pytest.skip("no devices")
+    eng2, _ = _mk("jax", n=16, vote_period=2, p_drop=0.25,
+                  suspect_after=20, evict_after=0, seed=5)
+    t2 = []
+    for _ in range(30):
+        eng2.step(5)
+        t2.append((eng2.t, eng2.messages_sent, eng2.lost_to_fault,
+                   eng2.in_flight))
+    assert t1 == t2  # deterministic replay of the same fault pattern
+
+
+# ---------------------------------------------------------------------------
+# churn schedules with crashes
+# ---------------------------------------------------------------------------
+
+def test_crash_schedule_replays_on_both_backends():
+    from repro.core.churn import random_schedule
+    from repro.core.dht import Ring
+
+    ring = Ring.random(24, 10, seed=2)
+    sched = random_schedule(ring, 10, seed=5, p_leave=0.3, p_crash=0.25,
+                            n_min=6, spacing=8, mass_join=3, range_fail=2)
+    kinds = [op[0] for op in sched.ops]
+    assert kinds.count("crash") >= 2 and kinds.count("join") >= 3
+    assert len(sched.ops) == len(sched.gaps) == len(sched.snaps)
+    counts, dead = {}, {}
+    for backend in BACKENDS:
+        eng, _ = _mk(backend, n=24, ring_seed=2, suspect_after=20,
+                     evict_after=0, seed=3)
+        sched.apply(eng)
+        counts[backend] = eng.ring.n
+        dead[backend] = int(eng.dead_mask().sum())
+    assert counts["numpy"] == counts["jax"]
+    assert dead["numpy"] == dead["jax"] == kinds.count("crash")
+
+
+def test_schedule_drift_diagnostic_names_event():
+    """An eviction mid-gap shrinks the engine ring under the schedule's
+    feet; `apply` must say *which* event diverged instead of letting a
+    later op fail with a bare IndexError."""
+    from repro.core.churn import random_schedule
+    from repro.core.dht import Ring
+
+    ring = Ring.random(24, 10, seed=2)
+    sched = random_schedule(ring, 8, seed=5, p_leave=0.0, p_crash=0.6,
+                            n_min=6, spacing=120)
+    assert any(op[0] == "crash" for op in sched.ops)
+    eng, _ = _mk("numpy", n=24, ring_seed=2, suspect_after=5,
+                 evict_after=30, seed=3)
+    with pytest.raises(RuntimeError, match="diverged .* at event"):
+        sched.apply(eng)
+
+
+def test_crash_keeps_shadow_ring_address():
+    """Delayed discovery: a crash op does not shrink the shadow ring —
+    the snapshot still carries the dead address (the detector's job)."""
+    from repro.core.churn import random_schedule
+    from repro.core.dht import Ring
+
+    ring = Ring.random(16, 10, seed=4)
+    sched = random_schedule(ring, 6, seed=1, p_leave=0.0, p_crash=1.0,
+                            n_min=4, spacing=5)
+    for op, (r_after, _, a_im1, _) in zip(sched.ops, sched.snaps):
+        if op[0] == "crash":
+            assert a_im1 in set(int(a) for a in r_after.addrs)
+
+
+# ---------------------------------------------------------------------------
+# diff-harness fault cells (the quick in-process slice; the full grid
+# incl. sharded trajectory parity is the CI job + tests/test_sharded.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_harness_crash_cell_numpy_vs_jax():
+    sched = H.make_schedule("majority", 404, faults="crash")
+    assert any(ev[0] == "crash" for ev in sched["events"])
+    a = H.replay(sched, H.numpy_factory)
+    b = H.replay(sched, H.jax_factory)
+    assert len(a["evict_addrs"]) == 1
+    H.assert_state_parity(a, b, "fault:crash")
+
+
+@pytest.mark.slow
+def test_harness_drop_cell_numpy_vs_jax():
+    sched = H.make_schedule("majority", 606, faults="drop")
+    a = H.replay(sched, H.numpy_factory)
+    b = H.replay(sched, H.jax_factory)
+    assert a["lost"] > 0 and b["lost"] > 0
+    H.assert_state_parity(a, b, "fault:drop")
+
+
+@pytest.mark.slow
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**20))
+def test_fuzz_fault_cells_numpy_vs_jax(seed):
+    """Hypothesis-driven fault schedules beyond the fixed FAULT_GRID
+    (skips without hypothesis — the seeded grid keeps the floor)."""
+    mode = "crash" if seed % 2 else "drop"
+    sched = H.make_schedule("majority", seed, faults=mode)
+    a = H.replay(sched, H.numpy_factory)
+    b = H.replay(sched, H.jax_factory)
+    H.assert_state_parity(a, b, f"fuzz:{mode}/seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# runtime.fault_tolerance: agent primitives + the engine bridge
+# ---------------------------------------------------------------------------
+
+def test_restart_policy_backoff_exhaustion():
+    from repro.runtime.fault_tolerance import RestartPolicy
+
+    p = RestartPolicy(max_restarts=3, backoff_s=1.0, backoff_mult=2.0)
+    assert [p.next_delay() for _ in range(3)] == [1.0, 2.0, 4.0]
+    assert p.next_delay() is None  # budget spent
+    assert p.next_delay() is None  # and stays spent
+    p.reset()
+    assert p.next_delay() == 1.0
+
+
+def test_restart_policy_zero_budget():
+    from repro.runtime.fault_tolerance import RestartPolicy
+
+    p = RestartPolicy(max_restarts=0)
+    assert p.next_delay() is None
+
+
+def test_straggler_tracker_median_edges():
+    from repro.runtime.fault_tolerance import StragglerTracker
+
+    tr = StragglerTracker(alpha=1.0, ratio=1.8)
+    assert tr.stragglers() == []  # no data
+    tr.record(0, 1.0)
+    assert tr.stragglers() == []  # a single host has no peer median
+    tr.record(1, 9.0)
+    # two hosts: median = 5.0 and 9.0 sits exactly at ratio * median —
+    # the median absorbs a pairwise outlier (strict > keeps it quiet)
+    assert tr.stragglers() == []
+    tr.record(2, 1.0)
+    tr.record(3, 1.0)
+    # now median is 1.0 and only the outlier exceeds ratio * median
+    assert tr.stragglers() == [1]
+    # all-equal fleet: nobody straggles at any ratio
+    tr2 = StragglerTracker(alpha=1.0, ratio=1.0001)
+    for h in range(4):
+        tr2.record(h, 2.0)
+    assert tr2.stragglers() == []
+
+
+def test_straggler_tracker_ewma_forgives():
+    from repro.runtime.fault_tolerance import StragglerTracker
+
+    tr = StragglerTracker(alpha=0.5, ratio=1.5)
+    for h in range(3):
+        tr.record(h, 1.0)
+    tr.record(2, 9.0)  # one bad step
+    assert tr.stragglers() == [2]
+    for _ in range(8):  # recovery decays the EWMA back under the bar
+        tr.record(2, 1.0)
+    assert tr.stragglers() == []
+
+
+def test_engine_suspicion_bridge():
+    """One detector serves both layers: engine `heard` stamps drive the
+    agent HeartbeatMonitor on the cycle clock, and detector evictions
+    consume the RestartPolicy budget."""
+    from repro.runtime.fault_tolerance import (EngineSuspicionBridge,
+                                               HeartbeatMonitor,
+                                               RestartPolicy)
+
+    eng, _ = _mk("numpy", n=16, suspect_after=10, evict_after=80, seed=1)
+    eng.run_until_converged(truth=_truth(eng), max_cycles=5000)
+    bridge = EngineSuspicionBridge(
+        monitor=HeartbeatMonitor(timeout_s=40.0),  # cycles, via the bridge
+        policy=RestartPolicy(max_restarts=1))
+    assert bridge.sync(eng) == []
+    assert bridge.suspects(eng) == []
+    victim = 5
+    dead_addr = int(eng.ring.addrs[victim])
+    eng.crash(victim)
+    eng.step(60)  # silent past the monitor timeout, before eviction
+    bridge.sync(eng)
+    assert dead_addr in bridge.suspects(eng)
+    while not eng.evictions:
+        eng.step(16)
+    plans = bridge.sync(eng)
+    assert plans == [(dead_addr, 1.0)]  # one restart planned, on budget
+    assert dead_addr not in bridge.monitor.last_seen
+    # a second eviction would exhaust the budget -> None delay
+    assert bridge.policy.next_delay() is None
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_last_heard_accessor(backend):
+    eng, _ = _mk(backend, n=16, suspect_after=10, evict_after=0, seed=1)
+    eng.step(30)
+    lh = eng.last_heard()
+    assert lh.shape == (eng.ring.n,)
+    assert lh.max() > 0  # converging traffic stamped somebody
