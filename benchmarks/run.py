@@ -8,6 +8,7 @@ systems layer. Prints ``name,key=value,...`` CSV lines.
   kernel_wheel       delivery-wheel kernels -> BENCH_kernels.json (gated)
   sync_comparison    trainer-level sync families (paper mode vs baselines)
   engine             numpy-vs-device engine cycles/sec -> BENCH_engine.json
+  serve              streaming serve-layer load harness -> BENCH_serve.json
   churn              Alg. 2 join/leave reconvergence    -> BENCH_churn.json
   sweep              batched accuracy-vs-threshold grid -> BENCH_sweep.json
   roofline           summary of the dry-run roofline table (if present)
@@ -36,6 +37,7 @@ import sys
 import time
 
 CACHE_DIR = os.path.join("results", ".jax_cache")
+CACHE_KEY_FILE = "CACHE_KEY"
 
 
 def csv(line: str):
@@ -44,6 +46,59 @@ def csv(line: str):
 
 def section(name):
     print(f"### {name}", flush=True)
+
+
+def cache_key() -> str:
+    """What a persistent-cache entry's validity depends on: the jaxlib
+    that serialized it, the engine program schema it was traced from
+    (`repro.engine.ENGINE_SCHEMA`), and the CPU runtime flag regime
+    below. Any mismatch means the cached executables were built against
+    a different world."""
+    import jaxlib
+
+    from repro.engine import ENGINE_SCHEMA
+
+    return (f"jaxlib={jaxlib.__version__};engine_schema={ENGINE_SCHEMA};"
+            f"cpu_thunk=off")
+
+
+def validate_cache_dir(cache_dir: str, key: str = None, log=None) -> str:
+    """Refuse to reuse a stale persistent XLA cache (the PR 8 scar:
+    cache entries serialized against an older jaxlib/engine deserialized
+    into executables that hung armed-engine runs ~1-in-3).
+
+    The dir carries a `CACHE_KEY` marker written on first use. Returns
+    the action taken: ``"fresh"`` (new/empty dir — marker written),
+    ``"match"`` (marker equals today's key — entries reusable), or
+    ``"cleared"`` (marker missing or different on a non-empty dir — the
+    whole dir is torn down and re-marked; recompiling costs seconds,
+    debugging a poisoned executable cost a day)."""
+    import shutil
+
+    key = key if key is not None else cache_key()
+    marker = os.path.join(cache_dir, CACHE_KEY_FILE)
+    entries = []
+    if os.path.isdir(cache_dir):
+        entries = [e for e in os.listdir(cache_dir) if e != CACHE_KEY_FILE]
+    if os.path.exists(marker):
+        with open(marker) as f:
+            found = f.read().strip()
+        if found == key:
+            return "match"
+        action = "cleared"
+    elif entries:
+        action = "cleared"  # unmarked non-empty dir: provenance unknown
+    else:
+        action = "fresh"
+    if action == "cleared":
+        if log:
+            log(f"jax_cache_cleared,dir={cache_dir},"
+                f"reason=key_mismatch_or_unmarked")
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    os.makedirs(cache_dir, exist_ok=True)
+    with open(marker, "w") as f:
+        f.write(key + "\n")
+    return action
 
 
 def enable_compilation_cache(cache_dir: str = CACHE_DIR):
@@ -69,7 +124,7 @@ def enable_compilation_cache(cache_dir: str = CACHE_DIR):
     import jax
 
     cache_dir = os.environ.get("JAX_COMPILATION_CACHE_DIR", cache_dir)
-    os.makedirs(cache_dir, exist_ok=True)
+    validate_cache_dir(cache_dir, log=csv)
     jax.config.update("jax_compilation_cache_dir", os.path.abspath(cache_dir))
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
     jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
@@ -99,6 +154,7 @@ def main() -> None:
         churn, engine_bench, kernel_bench, static_convergence, stationary,
         sweep, sync_comparison, tree_properties,
     )
+    from benchmarks import serve as serve_bench
 
     if args.check_regression:
         section("check_regression")
@@ -136,6 +192,11 @@ def main() -> None:
             # the fault row arms the fault plane end to end in CI: one
             # abrupt crash (detect -> evict -> reconverge) and one
             # mass-churn storm per backend at n=64
+            # serve smoke: numpy + single-device jax open-loop streams
+            # at tiny n (the CI serve job runs this plus the committed
+            # gate via `python -m benchmarks.serve --check-regression`)
+            ("serve", lambda c: serve_bench.run_smoke(
+                c, out_dir=smoke_dir)),
             ("churn", lambda c: churn.run(
                 c, sizes=(256,), events=4, backends=("numpy", "jax"),
                 fault_sizes=(64,), fault_events=8,
@@ -161,6 +222,7 @@ def main() -> None:
             ("sync_comparison", lambda c: sync_comparison.run(c, backend=b)),
             ("engine", lambda c: engine_bench.run(c)),
             ("engine_sharded", lambda c: engine_bench.run_sharded(c)),
+            ("serve", lambda c: serve_bench.run(c)),
             ("churn", lambda c: churn.run(c)),
             ("sweep", lambda c: sweep.run(c, backend=b)),
             ("sweep_mean", lambda c: sweep.run(c, backend=b, problem="mean")),

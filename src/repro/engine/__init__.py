@@ -36,7 +36,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .base import EngineResult, MajorityEngine
+from .base import (ENGINE_SCHEMA, EngineResult, MajorityEngine,
+                   coalesced_update)
 from .problems import (L2Thresh, MAJORITY, Majority, MeanMonitor, PROBLEMS,
                        ThresholdProblem, get_problem)
 
@@ -104,6 +105,7 @@ def make_engine(backend: str, ring, votes: np.ndarray, seed=0,
     return JaxEngine(ring, votes, seed=seed, **kwargs)
 
 
-__all__ = ["BACKENDS", "EngineResult", "L2Thresh", "MAJORITY", "Majority",
-           "MajorityEngine", "MeanMonitor", "PROBLEMS", "ThresholdProblem",
-           "get_problem", "make_engine"]
+__all__ = ["BACKENDS", "ENGINE_SCHEMA", "EngineResult", "L2Thresh",
+           "MAJORITY", "Majority", "MajorityEngine", "MeanMonitor",
+           "PROBLEMS", "ThresholdProblem", "coalesced_update", "get_problem",
+           "make_engine"]

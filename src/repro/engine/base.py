@@ -40,6 +40,45 @@ EngineResult = Dict[str, float]
 # table grows instead). An invalid run's other numbers are meaningless:
 # rerun with a larger capacity_per_peer.
 
+# Compiled-program schema version. Bump whenever the DeviceState layout,
+# the wheel row format, or the semantics of any jitted engine program
+# change: the persistent XLA compilation cache is keyed on
+# (jaxlib version, ENGINE_SCHEMA) by `benchmarks.run.validate_cache_dir`,
+# so a cache dir serialized against an older engine is detected and
+# cleared instead of deserializing into poisoned executables (the PR 8
+# "stale .jax_cache hangs armed-engine runs" scar).
+ENGINE_SCHEMA = 10
+
+
+def coalesced_update(idx, new_data, n: int):
+    """Validate one ingestion-ring flush batch (DESIGN.md §11).
+
+    The serve layer coalesces client updates last-writer-wins per peer
+    between supersteps, so a flush batch must carry AT MOST one row per
+    peer: `idx` strictly ascending in [0, n), `new_data` one raw data
+    row per index. Returns the arrays normalized to (int64 idx, data);
+    raises on duplicate/unsorted indices or shape mismatch so a broken
+    coalescer fails loudly instead of applying an ill-defined write
+    order.
+    """
+    idx = np.asarray(idx, np.int64)
+    vals = np.asarray(new_data)
+    if idx.ndim != 1:
+        raise ValueError(f"coalesced idx must be 1-D, got shape {idx.shape}")
+    if vals.shape[:1] != idx.shape:
+        raise ValueError(
+            f"coalesced data rows {vals.shape} do not match idx {idx.shape}")
+    if idx.size:
+        if (np.diff(idx) <= 0).any():
+            raise ValueError(
+                "coalesced idx must be strictly ascending — last-writer-"
+                "wins coalescing leaves exactly one value per peer")
+        if idx[0] < 0 or idx[-1] >= n:
+            raise IndexError(
+                f"coalesced idx out of range [0, {n}): "
+                f"[{idx[0]}, {idx[-1]}]")
+    return idx, vals
+
 
 @dataclass(frozen=True)
 class FaultConfig:
@@ -166,6 +205,17 @@ class MajorityEngine(Protocol):
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
         """Data-change upcall: set X_self and re-run test() on `idx`;
         `new_votes` is (k,) scalar data or (k, D) vectors."""
+
+    def apply_coalesced(self, idx: np.ndarray, new_data: np.ndarray) -> int:
+        """Serve-layer flush upcall (DESIGN.md §11): apply one
+        ingestion-ring batch — client updates coalesced last-writer-wins
+        per peer since the previous superstep boundary — as a single
+        batched `set_votes` riding the full-width event-react path.
+        `idx` must be strictly ascending with one raw data row per
+        index (`coalesced_update` validates); an empty batch is a no-op.
+        Returns the number of peer rows applied. Uniform across the
+        numpy / jax / mesh-sharded single-trial engines so the ingestion
+        ring never needs backend branches."""
 
     def join(self, addr: int, vote: int = 0) -> int:
         """Membership upcall: a peer with `vote` joins at address `addr`

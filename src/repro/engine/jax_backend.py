@@ -103,7 +103,8 @@ from repro.core import addressing as A
 from repro.core.dht import Ring
 from repro.core.simulator import MAX_DELAY, MIN_DELAY
 from repro.engine import protocol as P
-from repro.engine.base import EngineResult, run_convergence_loop
+from repro.engine.base import (EngineResult, coalesced_update,
+                               run_convergence_loop)
 from repro.engine.problems import Majority, get_problem
 from repro.kernels.majority_step.ops import _on_tpu, majority_step
 from repro.kernels.wheel import (WHEEL_KERNELS, descent_tail, due_dedup,
@@ -1741,6 +1742,17 @@ class JaxEngine:
         x = st.x.at[jnp.asarray(idx)].set(jnp.asarray(nd))
         touched = jnp.zeros(self.pad, bool).at[jnp.asarray(idx)].set(True)
         self._st = self._react(st._replace(x=x), touched)
+
+    def apply_coalesced(self, idx: np.ndarray, new_data: np.ndarray) -> int:
+        """Serve-layer flush (see `repro.engine.base`): one coalesced
+        batch applied as one batched `set_votes`, i.e. ONE full-width
+        event-react dispatch — the wheel treats the flush exactly like
+        any other data-change storm. Inherited unchanged by the
+        mesh-sharded engine (its `_react` runs under shard_map)."""
+        idx, vals = coalesced_update(idx, new_data, self.n)
+        if idx.size:
+            self.set_votes(idx, vals)
+        return int(idx.size)
 
     def join(self, addr: int, vote=0) -> int:
         """Membership upcall: a peer joins at `addr` (Alg. 2) with scalar

@@ -13,7 +13,8 @@ import numpy as np
 
 from repro.core.dht import Ring
 from repro.core.majority import MajoritySimulator
-from repro.engine.base import EngineResult, run_convergence_loop
+from repro.engine.base import (EngineResult, coalesced_update,
+                               run_convergence_loop)
 from repro.engine.problems import get_problem
 
 
@@ -90,6 +91,14 @@ class NumpyEngine:
 
     def set_votes(self, idx: np.ndarray, new_votes: np.ndarray) -> None:
         self.sim.set_votes(np.asarray(idx), np.asarray(new_votes))
+
+    def apply_coalesced(self, idx: np.ndarray, new_data: np.ndarray) -> int:
+        """Serve-layer flush (one coalesced batch -> one batched
+        `set_votes`; see `repro.engine.base`)."""
+        idx, vals = coalesced_update(idx, new_data, self.ring.n)
+        if idx.size:
+            self.sim.set_votes(idx, vals)
+        return int(idx.size)
 
     def alert(self, peers: np.ndarray, dirs: np.ndarray) -> None:
         """Raw Alg. 2 ALERT upcall (join/leave call this internally)."""

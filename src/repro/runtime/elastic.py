@@ -107,7 +107,8 @@ def churn_drill(hosts: int = 32, events: int = 8, backend: str = "numpy",
 def decision_latency_profile(hosts: int = 32, trials: int = 16,
                              backend: str = "jax", seed: int = 0,
                              mu: float = 0.55,
-                             max_cycles: int = 50_000) -> Dict:
+                             max_cycles: int = 50_000,
+                             trace: Optional[Sequence[Dict]] = None) -> Dict:
     """How fast does the control tree decide a sync quorum? — `trials`
     independent majority votes over `hosts` peers, run to convergence as
     ONE batched engine (`make_engine(..., batch=trials)`, vmapped on the
@@ -117,7 +118,21 @@ def decision_latency_profile(hosts: int = 32, trials: int = 16,
     every sync decision (`EngineQuorum` in benchmarks/sync_comparison)
     is one such majority vote, and the trainer's staleness deadline
     (`max_inner_steps`) must cover its latency tail. Returns the cycle
-    and per-peer message distribution across trials."""
+    and per-peer message distribution across trials.
+
+    With ``trace=`` the synthetic quorum draws are skipped entirely and
+    the profile is computed from a REAL serve trace
+    (`repro.launch.serve.ThresholdServer.trace`, or the load harness's
+    recorded copy): each ``settle`` record is one disturbance epoch —
+    opened at the flush/churn boundary that broke convergence, closed at
+    the first window boundary where every peer again outputs the
+    ground-truth decision of the live data plane (DESIGN.md §11 latency
+    accounting). The tails are reported both in engine cycles and in
+    harness wall milliseconds; a trace with no settle records (nothing
+    ever disturbed convergence — e.g. an all-converged no-op run)
+    degrades to zero-decision output instead of crashing."""
+    if trace is not None:
+        return _profile_from_trace(trace)
     from repro.engine import make_engine
 
     rings = Ring.random(hosts, D_BITS, seed=seed)
@@ -140,6 +155,33 @@ def decision_latency_profile(hosts: int = 32, trials: int = 16,
         "msgs_per_peer_p50": float(np.percentile(msgs, 50)),
         "msgs_per_peer_p95": float(np.percentile(msgs, 95)),
     }
+
+
+def _profile_from_trace(trace: Sequence[Dict]) -> Dict:
+    """Decision-latency tails from serve `settle` epochs (see
+    `decision_latency_profile(trace=...)`)."""
+    settles = [r for r in trace if r.get("kind") == "settle"]
+    flushes = sum(1 for r in trace if r.get("kind") == "flush")
+    transitions = sum(1 for r in trace if r.get("kind") == "transition")
+    out = {
+        "source": "serve_trace",
+        "decisions": len(settles),
+        "flushes": flushes,
+        "transitions": transitions,
+    }
+    if not settles:
+        return {**out, "converged": 1.0,
+                "cycles_p50": 0.0, "cycles_p95": 0.0, "cycles_p99": 0.0,
+                "cycles_max": 0.0, "ms_p50": 0.0, "ms_p95": 0.0,
+                "ms_p99": 0.0, "ms_max": 0.0}
+    cycles = np.asarray([r["cycles"] for r in settles], np.float64)
+    ms = np.asarray([r["wall_ms"] for r in settles], np.float64)
+    out["converged"] = 1.0  # an epoch only enters the trace once it closed
+    for name, a in (("cycles", cycles), ("ms", ms)):
+        for p in (50, 95, 99):
+            out[f"{name}_p{p}"] = float(np.percentile(a, p))
+        out[f"{name}_max"] = float(a.max())
+    return out
 
 
 def remesh_plan(old_hosts: int, new_hosts: int, dp: int, tp: int) -> Dict:

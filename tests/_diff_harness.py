@@ -74,6 +74,17 @@ FAULT_GRID: Tuple[Tuple[str, int, str], ...] = (
     ("majority", 606, "drop"),
     ("l2", 707, "drop"),
 )
+# serve-parity cells: the ingestion trace of a seeded serve workload
+# (coalesced client updates + churn upcalls + per-window pumps through
+# `repro.launch.serve.ThresholdServer`) replayed through every engine —
+# state parity numpy-vs-jax, full trajectory parity (wheel occupancy,
+# transition stream) across the device family, `check_conservation`
+# after every flush
+SERVE_GRID: Tuple[Tuple[str, int], ...] = (
+    ("majority", 811),
+    ("mean", 822),
+    ("l2", 833),
+)
 
 
 def make_problem(name: str):
@@ -260,6 +271,102 @@ def replay(schedule: Dict, factory: Callable) -> Dict:
     }
 
 
+def make_serve_schedule(problem_name: str, seed: int) -> Dict:
+    """Deterministic serve workload for (problem, seed): an initial ring
+    + data plane plus a `repro.launch.serve.gen_workload` trace (per-
+    window coalesced submits, churn upcalls, subscriber flips). The SAME
+    trace drives every engine through the serve API — the serve-parity
+    contract (DESIGN.md §11)."""
+    from repro.core.dht import Ring
+    from repro.launch.serve import gen_workload
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(48, 97))
+    d = 32
+    if problem_name == "majority":
+        data = rng.integers(0, 2, size=n).astype(np.int64)
+    elif problem_name == "mean":
+        off = float(rng.choice([-0.6, 0.6]))
+        data = rng.normal(off, 0.8, size=n)
+    else:
+        c = rng.normal(size=2)
+        c *= float(rng.choice([0.2, 1.8])) / max(np.linalg.norm(c), 1e-9)
+        data = rng.normal(c, 0.25, size=(n, 2))
+    ring_seed = int(rng.integers(0, 2**31))
+    ring = Ring.random(n, d, seed=ring_seed)
+    workload = gen_workload(
+        ring, problem_name, windows=int(rng.integers(12, 19)),
+        seed=seed + 3, rate=float(rng.uniform(4.0, 9.0)), p_churn=0.35,
+        window_cycles=int(rng.integers(4, 9)), p_flip_sub=0.25)
+    return {
+        "problem": problem_name, "seed": seed, "n": n, "d": d,
+        "ring_seed": ring_seed, "eng_seed": seed + 7, "data": data,
+        "workload": workload,
+    }
+
+
+def replay_serve(schedule: Dict, factory: Callable) -> Dict:
+    """Drive one engine through a serve schedule VIA THE SERVE API
+    (ThresholdServer.pump — ingestion-ring coalescing, apply_coalesced
+    flushes, churn upcalls), snapshotting wheel occupancy and running
+    `check_conservation` after every flush, then quiesce. Returns the
+    comparable end state: `replay`'s keys plus the host-deterministic
+    serve counters and the published transition stream."""
+    from repro.core.dht import Ring
+    from repro.launch.serve import ThresholdServer, replay_workload
+
+    problem = make_problem(schedule["problem"])
+    ring = Ring.random(schedule["n"], schedule["d"],
+                       seed=schedule["ring_seed"])
+    eng = factory(ring, schedule["data"], problem, schedule["eng_seed"],
+                  faults=None)
+    server = ThresholdServer(
+        eng, window=schedule["workload"]["window_cycles"])
+    transitions: List[Tuple] = []
+    server.subscribe(lambda tr: transitions.append(
+        (tr.t, tuple(sorted(tr.peers)), tr.output)))
+    wheel_trace: List[Tuple] = []
+
+    def snap(_i) -> None:
+        if hasattr(eng, "in_flight") and hasattr(eng, "deferred"):
+            wheel_trace.append((eng.t, eng.in_flight, eng.messages_sent,
+                                eng.deferred))
+        if hasattr(eng, "check_conservation"):
+            eng.check_conservation()
+
+    replay_workload(server, schedule["workload"], after_pump=snap)
+
+    def truth() -> int:
+        return problem.global_output(eng.data())
+
+    res = eng.run_until_converged(truth(), max_cycles=MAX_CYCLES)
+    assert res["converged"] == 1.0, (schedule["problem"], schedule["seed"],
+                                     res)
+    # the server's incremental host-side truth must agree with the
+    # engine's actual data plane after the whole workload
+    assert server.truth == truth(), (schedule["problem"], schedule["seed"])
+    st = server.stats()
+    return {
+        "backend": getattr(eng, "backend", "?"),
+        "sharded": bool(getattr(eng, "sharded", False)),
+        "n": int(eng.n if hasattr(eng, "n") else eng.ring.n),
+        "outputs": np.asarray(eng.outputs(), np.int64),
+        "data": np.asarray(eng.data(), np.int64),
+        "dropped": int(np.asarray(eng.dropped)),
+        "cycles": int(eng.t),
+        "messages": int(eng.messages_sent),
+        "wheel": wheel_trace,
+        "truth": truth(),
+        "evict_addrs": [], "evictions": [], "lost": 0,
+        # host-deterministic serve counters — identical on EVERY backend
+        "serve": {k: st[k] for k in ("submitted", "coalesced", "applied",
+                                     "stale_dropped", "flushes")},
+        # decision-change stream — pinned within the device family only
+        # (numpy's delay RNG legitimately re-times the transitions)
+        "transitions": transitions,
+    }
+
+
 # -- engine factories --------------------------------------------------------
 
 def numpy_factory(ring, data, problem, seed, faults=None):
@@ -301,6 +408,11 @@ def assert_state_parity(a: Dict, b: Dict, ctx=""):
         a["evict_addrs"], b["evict_addrs"])
     np.testing.assert_array_equal(a["outputs"], b["outputs"], err_msg=ctx)
     np.testing.assert_array_equal(a["data"], b["data"], err_msg=ctx)
+    if "serve" in a or "serve" in b:
+        # the ingestion ring runs on the host: its coalescing decisions
+        # may not depend on which engine sits underneath
+        assert a.get("serve") == b.get("serve"), (
+            ctx, "serve counters diverge", a.get("serve"), b.get("serve"))
 
 
 def assert_trajectory_parity(a: Dict, b: Dict, ctx=""):
@@ -316,6 +428,13 @@ def assert_trajectory_parity(a: Dict, b: Dict, ctx=""):
     assert a["lost"] == b["lost"], (ctx, a["lost"], b["lost"])
     assert a["wheel"] == b["wheel"], (
         ctx, "wheel-occupancy traces diverge", a["wheel"], b["wheel"])
+    if "transitions" in a or "transitions" in b:
+        # same program, partitioned: the published decision-change
+        # stream (cycle stamps, flipped peer sets, new outputs) must be
+        # bit-identical across the device family
+        assert a.get("transitions") == b.get("transitions"), (
+            ctx, "transition streams diverge",
+            a.get("transitions"), b.get("transitions"))
 
 
 def digest(result: Dict) -> str:
@@ -330,31 +449,40 @@ def digest(result: Dict) -> str:
 
 
 def run_grid(grid, engines, mesh_sizes=(0,), churn=True,
-             log=print) -> None:
+             log=print, mode: str = "event") -> None:
     """Replay `grid` cells on every requested engine and assert parity.
     `engines` ⊆ {numpy, jax, sharded}; sharded runs once per mesh size
     (0 = all local devices) and is trajectory-checked against jax.
-    Cells are (problem, seed) or (problem, seed, fault_mode)."""
+    Cells are (problem, seed) or (problem, seed, fault_mode). With
+    `mode="serve"` the cells are serve schedules: the same ingestion
+    trace driven through every engine via the serve API
+    (`make_serve_schedule` / `replay_serve`)."""
     for cell in grid:
         problem_name, seed = cell[0], cell[1]
         fault_mode = cell[2] if len(cell) > 2 else ""
-        sched = make_schedule(problem_name, seed, churn=churn,
-                              faults=fault_mode)
+        if mode == "serve":
+            sched = make_serve_schedule(problem_name, seed)
+            replay_fn = replay_serve
+        else:
+            sched = make_schedule(problem_name, seed, churn=churn,
+                                  faults=fault_mode)
+            replay_fn = replay
         results = {}
         if "numpy" in engines:
-            results["numpy"] = replay(sched, numpy_factory)
+            results["numpy"] = replay_fn(sched, numpy_factory)
         if "jax" in engines:
-            results["jax"] = replay(sched, jax_factory)
+            results["jax"] = replay_fn(sched, jax_factory)
         if "sharded" in engines:
             for m in mesh_sizes:
                 # NB: mesh size 0 must stay truthy-sharded — make_engine
                 # only shards when mesh is not None, and mesh=0 resolves
                 # to "all local devices" (a `m or None` here would
                 # silently compare plain jax against itself)
-                results[f"sharded{m or ''}"] = replay(
+                results[f"sharded{m or ''}"] = replay_fn(
                     sched, sharded_factory(m))
-        ctx = f"{problem_name}/seed={seed}" + (
-            f"/{fault_mode}" if fault_mode else "")
+        ctx = (("serve:" if mode == "serve" else "")
+               + f"{problem_name}/seed={seed}"
+               + (f"/{fault_mode}" if fault_mode else ""))
         base_key = "jax" if "jax" in results else next(iter(results))
         base = results[base_key]
         for key, r in results.items():
@@ -381,7 +509,8 @@ def main():
                     choices=["numpy", "jax", "sharded"])
     ap.add_argument("--mesh-sizes", nargs="+", type=int, default=[0],
                     help="sharded mesh sizes (0 = all local devices)")
-    ap.add_argument("--grid", choices=["ci", "slow", "fault"], default="ci")
+    ap.add_argument("--grid", choices=["ci", "slow", "fault", "serve"],
+                    default="ci")
     ap.add_argument("--seeds", nargs="+", type=int, default=None,
                     help="override: fuzz these seeds on every problem")
     ap.add_argument("--problems", nargs="+", default=None,
@@ -390,19 +519,26 @@ def main():
     ap.add_argument("--no-churn", action="store_true")
     args = ap.parse_args()
 
+    mode = "event"
     if args.seeds:
         probs = args.problems or [p for p, _ in CI_GRID]
         grid = [(p, s) for p in probs for s in args.seeds]
+        mode = "serve" if args.grid == "serve" else "event"
     elif args.grid == "fault":
         grid = list(FAULT_GRID)
         if args.problems:
             grid = [c for c in grid if c[0] in args.problems]
+    elif args.grid == "serve":
+        grid = list(SERVE_GRID)
+        mode = "serve"
+        if args.problems:
+            grid = [(p, s) for p, s in grid if p in args.problems]
     else:
         grid = list(CI_GRID if args.grid == "ci" else CI_GRID + SLOW_GRID)
         if args.problems:
             grid = [(p, s) for p, s in grid if p in args.problems]
     run_grid(grid, args.engines, mesh_sizes=tuple(args.mesh_sizes),
-             churn=not args.no_churn)
+             churn=not args.no_churn, mode=mode)
     print("DIFF_HARNESS_OK")
 
 

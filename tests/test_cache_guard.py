@@ -1,0 +1,99 @@
+"""Regression tests for the persistent-XLA-cache validation guard
+(`benchmarks.run.validate_cache_dir`).
+
+The scar (PR 8): a results/.jax_cache serialized against an older
+jaxlib/engine deserialized into poisoned executables that hung
+armed-engine runs roughly 1-in-3. The guard keys the cache dir on
+(jaxlib version, ENGINE_SCHEMA, CPU runtime regime) via a CACHE_KEY
+marker file and clears anything that does not match — these tests pin
+every branch of that decision, including the original poisoned-dir
+shape (entries but no marker)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.run import (CACHE_KEY_FILE, cache_key, enable_compilation_cache,
+                            validate_cache_dir)
+
+
+def _fill(d, names=("entry_a.bin", "entry_b.bin")):
+    os.makedirs(d, exist_ok=True)
+    for name in names:
+        with open(os.path.join(d, name), "wb") as f:
+            f.write(b"\x00serialized-executable\x00")
+    return names
+
+
+def _marker(d):
+    return os.path.join(d, CACHE_KEY_FILE)
+
+
+def test_cache_key_tracks_jaxlib_and_schema():
+    import jaxlib
+
+    from repro.engine import ENGINE_SCHEMA
+
+    key = cache_key()
+    assert jaxlib.__version__ in key
+    assert f"engine_schema={ENGINE_SCHEMA}" in key
+
+
+def test_fresh_dir_is_marked(tmp_path):
+    d = str(tmp_path / "cache")
+    assert validate_cache_dir(d, key="k1") == "fresh"
+    with open(_marker(d)) as f:
+        assert f.read().strip() == "k1"
+    # empty-but-existing dir is fresh too
+    d2 = str(tmp_path / "cache2")
+    os.makedirs(d2)
+    assert validate_cache_dir(d2, key="k1") == "fresh"
+
+
+def test_matching_marker_preserves_entries(tmp_path):
+    d = str(tmp_path / "cache")
+    validate_cache_dir(d, key="k1")
+    names = _fill(d)
+    assert validate_cache_dir(d, key="k1") == "match"
+    for name in names:
+        assert os.path.exists(os.path.join(d, name))  # entries survive
+
+
+def test_stale_marker_clears_dir(tmp_path):
+    """The direct scar shape: entries written under an older key."""
+    d = str(tmp_path / "cache")
+    validate_cache_dir(d, key="jaxlib=0.4.0;engine_schema=9;cpu_thunk=off")
+    names = _fill(d)
+    assert validate_cache_dir(d, key=cache_key()) == "cleared"
+    for name in names:
+        assert not os.path.exists(os.path.join(d, name))  # poison gone
+    with open(_marker(d)) as f:
+        assert f.read().strip() == cache_key()  # re-marked for today
+    # and now it matches
+    assert validate_cache_dir(d, key=cache_key()) == "match"
+
+
+def test_unmarked_nonempty_dir_clears(tmp_path):
+    """Pre-guard cache dirs have entries but no marker — provenance
+    unknown, so they must be treated as poisoned, not grandfathered."""
+    d = str(tmp_path / "cache")
+    names = _fill(d)
+    assert validate_cache_dir(d, key="k1") == "cleared"
+    for name in names:
+        assert not os.path.exists(os.path.join(d, name))
+    assert os.path.exists(_marker(d))
+
+
+def test_enable_compilation_cache_validates(tmp_path, monkeypatch):
+    """End to end: enable_compilation_cache on a poisoned dir (stale
+    marker + entries) must clear it before handing it to jax."""
+    d = str(tmp_path / "cache")
+    validate_cache_dir(d, key="stale-key")
+    _fill(d)
+    monkeypatch.setenv("JAX_COMPILATION_CACHE_DIR", d)
+    enable_compilation_cache()
+    assert not os.path.exists(os.path.join(d, "entry_a.bin"))
+    with open(_marker(d)) as f:
+        assert f.read().strip() == cache_key()
+    import jax
+
+    assert jax.config.jax_compilation_cache_dir == os.path.abspath(d)

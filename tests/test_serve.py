@@ -1,0 +1,306 @@
+"""Serve-layer tests (DESIGN.md §11): the coalescing-equivalence
+property, the decision-change notifier under churn + update storms, the
+trace-fed decision-latency profile, and the `apply_coalesced` engine
+contract.
+
+The core property pins the ingestion ring's semantics: a superstep
+window that saw ANY interleaving of per-peer updates must leave the
+engine bit-identical — outputs, message count, cycle — to a window that
+applied only each peer's final value directly. That is what makes
+last-writer-wins coalescing a pure optimization rather than a semantics
+change: the engine provably never sees the overwritten intermediates.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.core.dht import Ring  # noqa: E402
+from repro.engine import make_engine  # noqa: E402
+from repro.launch.serve import (DecisionNotifier, IngestionRing,  # noqa: E402
+                                ThresholdServer, gen_workload,
+                                replay_workload)
+from repro.runtime.elastic import decision_latency_profile  # noqa: E402
+
+
+def _mk(backend, n=24, problem="majority", seed=3, d=32):
+    rng = np.random.default_rng(seed)
+    ring = Ring.random(n, d, seed=seed)
+    if problem == "majority":
+        votes = rng.integers(0, 2, n)
+    elif problem == "mean":
+        votes = rng.normal(0.5, 0.8, n)
+    else:
+        votes = rng.normal([1.4, 0.3], 0.25, (n, 2))
+    return ring, make_engine(backend, ring, votes, seed=seed + 1,
+                             problem=problem)
+
+
+def _value(problem, rng):
+    if problem == "majority":
+        return int(rng.integers(0, 2))
+    if problem == "mean":
+        return float(rng.normal(0.5, 0.8))
+    return [float(v) for v in rng.normal([1.4, 0.3], 0.25, 2)]
+
+
+def _interleaving(ring, problem, seed, updates=40):
+    """A storm of (addr, value) submits with repeated targets — the
+    coalescer's input."""
+    rng = np.random.default_rng(seed)
+    addrs = ring.addrs
+    return [(int(addrs[rng.integers(addrs.size)]), _value(problem, rng))
+            for _ in range(updates)]
+
+
+def _snap(eng):
+    return (int(eng.t), int(eng.messages_sent),
+            np.asarray(eng.outputs()).copy(),
+            np.asarray(eng.data()).copy())
+
+
+def _assert_equal_snaps(a, b, ctx=""):
+    assert a[0] == b[0], f"cycle mismatch {ctx}: {a[0]} vs {b[0]}"
+    assert a[1] == b[1], f"message mismatch {ctx}: {a[1]} vs {b[1]}"
+    np.testing.assert_array_equal(a[2], b[2], f"outputs mismatch {ctx}")
+    np.testing.assert_array_equal(a[3], b[3], f"data mismatch {ctx}")
+
+
+def _run_coalescing_equivalence(backend, problem, seed, windows=4,
+                                updates=40, n=24, window_cycles=5):
+    """Serve-interleaved vs direct-final-value application, window by
+    window, across `windows` supersteps on the SAME engine pair."""
+    ring, served_eng = _mk(backend, n=n, problem=problem, seed=seed)
+    _, direct_eng = _mk(backend, n=n, problem=problem, seed=seed)
+    server = ThresholdServer(served_eng, window=window_cycles)
+    for w in range(windows):
+        storm = _interleaving(ring, problem, seed * 101 + w, updates)
+        for addr, val in storm:
+            server.submit(addr, val)
+        server.pump()
+
+        final = dict(storm)  # dict insertion order: last writer wins
+        addrs = np.asarray(sorted(final), np.uint64)
+        idx = np.searchsorted(direct_eng.ring.addrs, addrs)
+        vals = [final[int(a)] for a in addrs]
+        varr = (np.asarray(vals) if np.asarray(vals[0]).ndim == 0
+                else np.stack([np.asarray(v) for v in vals]))
+        direct_eng.apply_coalesced(idx.astype(np.int64), varr)
+        direct_eng.step(window_cycles)
+
+        _assert_equal_snaps(_snap(served_eng), _snap(direct_eng),
+                            f"(window {w}, {backend}/{problem}/{seed})")
+
+
+# fixed seeded grid — the deterministic half of the property
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("problem,seed", [
+    ("majority", 11), ("majority", 12), ("mean", 21), ("l2", 31),
+])
+def test_coalescing_equivalence_grid(backend, problem, seed):
+    _run_coalescing_equivalence(backend, problem, seed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**20), st.integers(1, 60))
+def test_coalescing_equivalence_property(seed, updates):
+    """Hypothesis half: arbitrary interleaving sizes and seeds (numpy
+    backend — the reference semantics; the grid pins jax to it)."""
+    _run_coalescing_equivalence("numpy", "majority", seed % 997 + 1,
+                                windows=2, updates=updates)
+
+
+def test_coalescing_counters():
+    ring = IngestionRing()
+    ring.submit(5, 1)
+    ring.submit(9, 0)
+    ring.submit(5, 0)   # overwrites
+    ring.submit(5, 1)   # overwrites again
+    assert ring.submitted == 4 and ring.coalesced == 2
+    assert ring.pending == 2
+    batch = ring.drain()
+    assert batch == [(5, 1), (9, 0)]  # ascending addr, final values only
+    assert ring.pending == 0 and ring.flushed == 2
+    assert ring.drain() == []
+
+
+def test_stale_updates_dropped_not_applied():
+    ring, eng = _mk("numpy")
+    server = ThresholdServer(eng, window=4)
+    dead_addr = 123456789  # not on the ring
+    assert dead_addr not in set(int(a) for a in ring.addrs)
+    server.submit(dead_addr, 1)
+    server.submit(int(ring.addrs[0]), 1)
+    server.pump()
+    st_ = server.stats()
+    assert st_["stale_dropped"] == 1 and st_["applied"] == 1
+
+
+# -- apply_coalesced contract -------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_apply_coalesced_empty_is_noop(backend):
+    _, eng = _mk(backend)
+    before = _snap(eng)
+    applied = eng.apply_coalesced(np.asarray([], np.int64),
+                                  np.asarray([], np.int64))
+    assert applied == 0
+    _assert_equal_snaps(before, _snap(eng), "(empty flush)")
+
+
+def test_apply_coalesced_rejects_bad_batches():
+    _, eng = _mk("numpy")
+    with pytest.raises(ValueError):  # duplicate peer = ill-defined order
+        eng.apply_coalesced([3, 3], [1, 0])
+    with pytest.raises(ValueError):  # unsorted
+        eng.apply_coalesced([5, 2], [1, 0])
+    with pytest.raises(IndexError):  # out of range
+        eng.apply_coalesced([0, 999], [1, 0])
+    with pytest.raises(ValueError):  # row-count mismatch
+        eng.apply_coalesced([0, 1, 2], [1, 0])
+
+
+# -- notifier -----------------------------------------------------------------
+
+def test_notifier_no_missed_or_duplicate_transitions_under_storm():
+    """Shadow-replay invariant: applying every published transition to a
+    shadow map reproduces the live addr->output map exactly, after every
+    window of an update storm + churn workload — no missed flips; and no
+    transition may 're-announce' an output its peers already had — no
+    duplicates."""
+    ring, eng = _mk("numpy", n=32, problem="majority", seed=9)
+    server = ThresholdServer(eng, window=5)
+    shadow = {}
+
+    def apply_to_shadow(tr):
+        for a in tr.peers:
+            assert shadow.get(a) != tr.output, (
+                f"duplicate transition for addr {a} -> {tr.output}")
+            shadow[a] = tr.output
+
+    server.subscribe(apply_to_shadow)
+    wl = gen_workload(ring, "majority", windows=20, seed=4, rate=8.0,
+                      p_churn=0.5)
+
+    def check(_i):
+        actual = {int(a): int(o) for a, o in
+                  zip(eng.ring.addrs, eng.outputs())}
+        live_shadow = {a: shadow[a] for a in actual}
+        assert live_shadow == actual, "notifier missed a transition"
+
+    replay_workload(server, wl, after_pump=check)
+    assert server.notifier.published > 0
+
+
+def test_notifier_subscribe_unsubscribe():
+    n = DecisionNotifier()
+    got = []
+    sid = n.subscribe(got.append)
+    out = n.publish(3, np.asarray([10, 20]), np.asarray([1, 0]))
+    assert len(out) == 2  # two new addrs, two distinct outputs
+    assert {tr.output for tr in out} == {0, 1}
+    n.unsubscribe(sid)
+    n.publish(4, np.asarray([10, 20]), np.asarray([0, 0]))
+    assert len(got) == 2  # nothing delivered after unsubscribe
+    # departed addr pruned: re-appearing counts as a fresh transition
+    out = n.publish(5, np.asarray([10]), np.asarray([0]))
+    assert out == []  # 10 already at 0
+    n.publish(6, np.asarray([]), np.asarray([]))
+    out = n.publish(7, np.asarray([10]), np.asarray([0]))
+    assert len(out) == 1 and out[0].peers == frozenset({10})
+
+
+# -- settle epochs + trace-fed latency profile --------------------------------
+
+def test_settle_epoch_accounting():
+    """One disturbance -> one settle record, latency measured from the
+    flush boundary that broke convergence (not from when it re-checked),
+    and overlapping disturbances merge into one epoch."""
+    ring, eng = _mk("numpy", n=16, problem="majority", seed=5)
+    server = ThresholdServer(eng, window=4)
+    while not server.settled:
+        server.pump()
+    server.trace.clear()
+    t_flush = int(eng.t)
+    flip = 1 - int(np.asarray(eng.votes())[0])
+    server.submit(int(ring.addrs[0]), flip)  # disturb
+    server.pump()
+    server.submit(int(ring.addrs[1]),
+                  1 - int(np.asarray(eng.votes())[1]))  # overlap
+    while not server.settled:
+        server.pump()
+    settles = [r for r in server.trace if r["kind"] == "settle"]
+    assert len(settles) == 1, settles  # merged epoch
+    assert settles[0]["cycles"] == settles[0]["t"] - t_flush
+    assert settles[0]["wall_ms"] >= 0.0
+
+
+def test_latency_profile_from_trace_matches_hand_computed():
+    trace = [{"kind": "flush", "t": 0, "applied": 1, "submitted": 1,
+              "wall": 0.0}]
+    cyc = [10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    trace += [{"kind": "settle", "t": 0, "cycles": c, "wall_ms": c / 10}
+              for c in cyc]
+    trace.append({"kind": "transition", "t": 5, "peers": 3, "output": 1,
+                  "wall": 0.1})
+    prof = decision_latency_profile(trace=trace)
+    assert prof["source"] == "serve_trace"
+    assert prof["decisions"] == 10
+    assert prof["flushes"] == 1 and prof["transitions"] == 1
+    a = np.asarray(cyc, np.float64)
+    assert prof["cycles_p50"] == float(np.percentile(a, 50))
+    assert prof["cycles_p95"] == float(np.percentile(a, 95))
+    assert prof["cycles_p99"] == float(np.percentile(a, 99))
+    assert prof["cycles_max"] == 100.0
+    assert prof["ms_max"] == 10.0
+
+
+def test_latency_profile_degenerate_traces():
+    empty = decision_latency_profile(trace=[])
+    assert empty["decisions"] == 0 and empty["cycles_p99"] == 0.0
+    quiet = decision_latency_profile(trace=[
+        {"kind": "flush", "t": 0, "applied": 0, "submitted": 0, "wall": 0.0}
+        for _ in range(5)
+    ])  # all-converged run: flushes but never a disturbance
+    assert quiet["decisions"] == 0 and quiet["flushes"] == 5
+    assert quiet["ms_max"] == 0.0
+
+
+def test_server_rejects_engines_without_apply_coalesced():
+    class Stub:
+        pass
+
+    with pytest.raises(TypeError):
+        ThresholdServer(Stub())
+
+
+def test_serve_parity_numpy_vs_jax():
+    """One serve-parity diff-harness cell in-process (numpy vs jax via
+    the serve API); CI's sharded-engine job runs the full SERVE_GRID
+    across mesh sizes 1/2/8 as a script."""
+    from _diff_harness import SERVE_GRID, run_grid
+
+    run_grid(SERVE_GRID[:1], ["numpy", "jax"], mode="serve",
+             log=lambda *_: None)
+
+
+def test_truth_tracks_incremental_sum_through_churn_and_updates():
+    """The server's host-side ground truth (incremental payload sums)
+    must agree with the problem's global_output over the engine's actual
+    data plane after any mix of flushes and churn."""
+    ring, eng = _mk("numpy", n=20, problem="mean", seed=13)
+    server = ThresholdServer(eng, window=4)
+    wl = gen_workload(ring, "mean", windows=15, seed=6, rate=6.0,
+                      p_churn=0.5)
+
+    def check(_i):
+        truth = eng.problem.global_output(np.asarray(eng.data()))
+        assert server.truth == truth
+
+    replay_workload(server, wl, after_pump=check)
